@@ -1,0 +1,37 @@
+"""Shared helpers for the benchmark suite."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def save_json(name: str, obj) -> str:
+    os.makedirs(os.path.join(ART, "bench"), exist_ok=True)
+    path = os.path.join(ART, "bench", f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1)
+    return path
+
+
+def time_call(fn: Callable, *args, repeat: int = 5, warmup: int = 1) -> float:
+    """Median wall time in microseconds (jax results blocked)."""
+    import jax
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,54 @@
+"""Paper Fig. 2: test accuracy vs (virtual) training time, AsyncFedED vs
+FedAvg / FedProx / FedAsync+Constant / FedAsync+Hinge, on the three tasks."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro import configs
+from repro.core.simulator import run_comparison
+
+ALGORITHMS = ["asyncfeded", "fedavg", "fedprox", "fedasync+constant",
+              "fedasync+hinge"]
+
+
+def run(tasks=("synthetic-1-1",), max_time: float = 60.0,
+        seeds=(0,), eval_every: int = 10) -> dict:
+    import json as _json
+    import os as _os
+    out = {}
+    prev = _os.path.join(_os.path.dirname(__file__), "..", "artifacts",
+                         "bench", "convergence.json")
+    if _os.path.exists(prev):              # merge across invocations
+        with open(prev) as f:
+            out = _json.load(f)
+    for task_name in tasks:
+        task = configs.PAPER_TASKS[task_name]
+        t0 = time.time()
+        results = run_comparison(task, ALGORITHMS, max_time=max_time,
+                                 seeds=seeds, eval_every=eval_every)
+        summary = {}
+        for alg, runs in results.items():
+            finals = [r.points[-1].accuracy for r in runs]
+            maxes = [r.max_accuracy() for r in runs]
+            t90s = [r.time_to_accuracy(0.9 * r.max_accuracy()) for r in runs]
+            summary[alg] = {
+                "final_acc_mean": float(np.mean(finals)),
+                "max_acc_mean": float(np.mean(maxes)),
+                "t90_mean": float(np.mean(t90s)),
+                "updates": runs[0].total_updates,
+                "curve": [(p.time, p.accuracy) for p in runs[0].points],
+            }
+            emit(f"convergence/{task_name}/{alg}",
+                 summary[alg]["t90_mean"] * 1e6,
+                 f"max_acc={summary[alg]['max_acc_mean']:.4f}")
+        out[task_name] = summary
+        out[task_name]["_wall_s"] = time.time() - t0
+        save_json("convergence", out)      # incremental: persist per task
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode, so their
+wall-times are NOT TPU-representative. What we report instead:
+
+* wall time of the jnp REFERENCE paths (tree-based 4-pass aggregation vs
+  flat fused 2-pass) — the host-side win of the fedagg layout is real even
+  on CPU;
+* structural metrics from compiled HLO: bytes accessed per aggregation
+  variant (cost_analysis), which is the quantity the TPU kernel optimizes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, save_json, time_call
+from repro.core.aggregation import asyncfeded_aggregate
+from repro.utils import pytree as pt
+
+
+def _mock_params(n_leaves: int = 20, leaf: int = 50_000, seed: int = 0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_leaves)
+    return {f"w{i}": jax.random.normal(k, (leaf,)) for i, k in enumerate(keys)}
+
+
+def _flat_fused(xt, xs, d, lam, eps):
+    """Flat single-fusion jnp aggregation (what the TPU kernel computes)."""
+    diff = xt - xs
+    dist = jnp.sqrt(jnp.sum(diff * diff))
+    dn = jnp.sqrt(jnp.sum(d * d))
+    gamma = jnp.where(dist <= 1e-12, 0.0, dist / jnp.maximum(dn, 1e-12))
+    eta = lam / (gamma + eps)
+    return xt + eta * d, gamma, eta
+
+
+def run(n_leaves: int = 20, leaf: int = 50_000) -> dict:
+    tree = _mock_params(n_leaves, leaf)
+    stale = jax.tree.map(lambda x: x + 0.01, tree)
+    delta = jax.tree.map(lambda x: x * 0.001, tree)
+    n = pt.tree_size(tree)
+
+    tree_fn = jax.jit(lambda a, b, c: asyncfeded_aggregate(
+        a, b, c, lam=1.0, eps=1.0).params)
+    us_tree = time_call(tree_fn, tree, stale, delta)
+
+    xt = pt.tree_flatten_to_vector(tree)
+    xs = pt.tree_flatten_to_vector(stale)
+    d = pt.tree_flatten_to_vector(delta)
+    flat_fn = jax.jit(lambda a, b, c: _flat_fused(a, b, c, 1.0, 1.0)[0])
+    us_flat = time_call(flat_fn, xt, xs, d)
+
+    # structural: bytes accessed per variant
+    ca_tree = jax.jit(lambda a, b, c: asyncfeded_aggregate(
+        a, b, c, lam=1.0, eps=1.0).params).lower(
+        tree, stale, delta).compile().cost_analysis()
+    ca_flat = flat_fn.lower(xt, xs, d).compile().cost_analysis()
+    out = {
+        "n_params": n,
+        "tree_us": us_tree, "flat_us": us_flat,
+        "speedup": us_tree / max(us_flat, 1e-9),
+        "tree_bytes": float(ca_tree.get("bytes accessed", 0)),
+        "flat_bytes": float(ca_flat.get("bytes accessed", 0)),
+    }
+    emit("kernel/fedagg_tree", us_tree, f"bytes={out['tree_bytes']:.3e}")
+    emit("kernel/fedagg_flat_fused", us_flat,
+         f"bytes={out['flat_bytes']:.3e};speedup={out['speedup']:.2f}x")
+    save_json("kernel_bench", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,106 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh):
+  t_compute    = HLO_FLOPs_per_device / peak_FLOP/s          (197e12 bf16)
+  t_memory     = HLO_bytes_per_device / HBM_bw               (819e9 B/s)
+  t_collective = collective_bytes_per_device / link_bw       (50e9 B/s)
+plus MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (inference) and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import ART, emit, save_json
+
+DRYRUN_DIR = os.path.join(ART, "dryrun")
+
+
+def load_records(mesh: Optional[str] = None, tag: str = "") -> List[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("--")
+        rec_tag = parts[3] if len(parts) > 3 else ""
+        if rec_tag != tag:
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if "shape" not in r:        # aggregate-step artifacts live elsewhere
+            continue
+        recs.append(r)
+    return recs
+
+
+def _mem_gb(r: dict) -> float:
+    m = r.get("memory") or {}
+    return (m.get("argument_bytes", 0) + m.get("temp_bytes", 0)
+            + m.get("output_bytes", 0) - m.get("alias_bytes", 0)) / 1e9
+
+
+def fmt_row(r: dict) -> str:
+    if not r.get("ok"):
+        return (f"| {r['arch']} | {r['shape']} | FAIL: {r['error'][:60]} "
+                f"| | | | | | |")
+    return ("| {arch} | {shape} | {tc:.2e} | {tm:.2e} | {tl:.2e} | "
+            "{bot} | {ratio:.2f} | {mem:.2f} | {note} |").format(
+        arch=r["arch"], shape=r["shape"], tc=r["t_compute"],
+        tm=r["t_memory"], tl=r["t_collective"], bot=r["bottleneck"],
+        ratio=r["useful_flops_ratio"], mem=_mem_gb(r),
+        note=r.get("attn_variant", ""))
+
+
+def markdown_table(mesh: str = "16x16", tag: str = "") -> str:
+    recs = load_records(mesh, tag)
+    lines = [
+        f"### Roofline — mesh {mesh}" + (f" [{tag}]" if tag else ""),
+        "",
+        "| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) "
+        "| bottleneck | useful-FLOPs ratio | GB/dev | attn |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"])):
+        lines.append(fmt_row(r))
+    return "\n".join(lines)
+
+
+def summarize(tag: str = "") -> dict:
+    out: Dict[str, dict] = {}
+    for r in load_records(tag=tag):
+        key = f"{r['arch']}--{r['shape']}--{r['mesh']}"
+        if not r.get("ok"):
+            out[key] = {"ok": False}
+            continue
+        out[key] = {k: r[k] for k in
+                    ("t_compute", "t_memory", "t_collective", "bottleneck",
+                     "useful_flops_ratio", "compile_s")}
+        emit(f"roofline/{key}", r["t_compute"] * 1e6,
+             f"bottleneck={r['bottleneck']};ratio="
+             f"{r['useful_flops_ratio']:.3f}")
+    save_json("roofline_summary", out)
+    return out
+
+
+def pick_hillclimb_targets() -> List[dict]:
+    """The three §Perf targets: worst useful-FLOPs fraction, most
+    collective-bound, most representative of the paper's technique."""
+    recs = [r for r in load_records("16x16") if r.get("ok")]
+    worst_ratio = min(
+        (r for r in recs if r["kind"] == "train"),
+        key=lambda r: r["useful_flops_ratio"])
+    most_coll = max(
+        recs, key=lambda r: r["t_collective"] / max(
+            max(r["t_compute"], r["t_memory"]), 1e-30))
+    return [worst_ratio, most_coll]
+
+
+if __name__ == "__main__":
+    print(markdown_table("16x16"))
+    print()
+    print(markdown_table("2x16x16"))
+    summarize()

@@ -1,0 +1,30 @@
+"""Calibrated full paper-reproduction sweep (CPU-budget-aware).
+
+Same figures as `benchmarks.run --full` but with virtual-time budgets tuned
+so the 3-task x 5-algorithm sweep completes on one CPU core. Results are
+persisted incrementally per figure.
+"""
+import sys
+import time
+
+from benchmarks import adaptive_k, convergence, robustness, theory_check
+
+
+def main() -> None:
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    convergence.run(tasks=("synthetic-1-1",), max_time=45.0, eval_every=15)
+    robustness.run(task_name="synthetic-1-1",
+                   probs=(0.0, 0.3, 0.6, 0.9), max_time=35.0)
+    print(f"# robustness done {time.time()-t0:.0f}s", file=sys.stderr, flush=True)
+    adaptive_k.run(max_time=35.0, ks=(5, 10, 20))
+    theory_check.run()
+    print(f"# core suite done {time.time()-t0:.0f}s", file=sys.stderr, flush=True)
+    # the two heavier tasks last, shorter horizon, persisted incrementally
+    convergence.run(tasks=("femnist", "shakespeare"), max_time=20.0,
+                    eval_every=25)
+    print(f"# paper suite total {time.time()-t0:.0f}s", file=sys.stderr, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Batched serving example: prefill a batch of prompts, then decode tokens
+with the ring-buffer KV cache — the same `serve_step` program the multi-pod
+dry-run lowers for decode_32k / long_500k, at CPU scale.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py \
+          [--arch recurrentgemma-2b] [--batch 4]
+"""
+import argparse
+
+from repro.launch.serve import serve
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="recurrentgemma-2b",
+                help="any assigned arch id (see repro.configs)")
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--prompt-len", type=int, default=32)
+ap.add_argument("--gen-len", type=int, default=16)
+args = ap.parse_args()
+
+out = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
+            gen_len=args.gen_len)
+print(f"generated token matrix: {out.shape}")

@@ -1,0 +1,67 @@
+"""Minimal pytree checkpointing (npz + json treedef), no orbax.
+
+Leaves are saved flat with path-derived keys; restore validates against a
+template tree (shapes + dtypes) so silent drift is impossible.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+_STEP_RE = re.compile(r"step_(\d+)\.npz$")
+
+
+def _flat_with_names(tree: PyTree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((name, np.asarray(leaf)))
+    return out
+
+
+def save_pytree(tree: PyTree, directory: str, step: int) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"step_{step}.npz")
+    named = _flat_with_names(tree)
+    np.savez(path, **{n: a for n, a in named})
+    meta = {n: {"shape": list(a.shape), "dtype": str(a.dtype)} for n, a in named}
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def restore_pytree(template: PyTree, directory: str,
+                   step: Optional[int] = None) -> PyTree:
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step}.npz")
+    data = np.load(path)
+    named = _flat_with_names(template)
+    leaves = []
+    for name, tmpl in named:
+        arr = data[name]
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(
+                f"checkpoint leaf {name}: shape {arr.shape} != template "
+                f"{tmpl.shape}")
+        leaves.append(arr.astype(tmpl.dtype))
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := _STEP_RE.search(f))]
+    return max(steps) if steps else None

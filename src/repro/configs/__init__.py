@@ -1,0 +1,33 @@
+"""Config registry: the 10 assigned architectures, 4 shapes, paper tasks."""
+from repro.configs.base import (ARCHS, SHAPES, FedConfig, MeshConfig,
+                                ModelConfig, MoEConfig, ShapeConfig, SSMConfig,
+                                reduced)
+from repro.configs.shapes import (ALL_SHAPES, DECODE_32K, LONG_500K,
+                                  PREFILL_32K, TRAIN_4K)
+
+# importing each module registers its CONFIG into ARCHS
+from repro.configs import (granite_34b, h2o_danube_1_8b, mamba2_1_3b,  # noqa: F401
+                           moonshot_v1_16b_a3b, musicgen_large,
+                           phi3_medium_14b, qwen2_moe_a2_7b, qwen2_vl_72b,
+                           qwen3_moe_30b_a3b, recurrentgemma_2b)
+from repro.configs.paper_tasks import (FEMNIST, PAPER_TASKS, SHAKESPEARE,
+                                       SYNTHETIC_1_1, PaperTaskConfig)
+
+ALL_ARCH_IDS = tuple(ARCHS.names())
+
+
+def get_arch(arch_id: str) -> ModelConfig:
+    return ARCHS[arch_id]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+__all__ = [
+    "ARCHS", "SHAPES", "PAPER_TASKS", "ALL_ARCH_IDS", "ALL_SHAPES",
+    "ModelConfig", "MoEConfig", "SSMConfig", "ShapeConfig", "FedConfig",
+    "MeshConfig", "PaperTaskConfig", "reduced", "get_arch", "get_shape",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+    "SYNTHETIC_1_1", "FEMNIST", "SHAKESPEARE",
+]

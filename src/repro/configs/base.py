@@ -1,0 +1,266 @@
+"""Configuration dataclasses for models, input shapes, meshes and FL runs.
+
+Every assigned architecture is expressed as a :class:`ModelConfig`; the four
+assigned input shapes as :class:`ShapeConfig`. Configs are plain frozen
+dataclasses — hashable so they can be closed over by jitted functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.utils.registry import Registry
+
+ARCHS: Registry = Registry("architecture config")
+SHAPES: Registry = Registry("input shape")
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    num_experts_per_tok: int
+    expert_d_ff: int
+    num_shared_experts: int = 0
+    shared_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_aux_loss_coef: float = 0.001
+    # "dense"  : all-experts einsum + masked combine (tiny models / CPU smoke)
+    # "gshard" : capacity-based one-hot dispatch (GSPMD expert parallelism)
+    impl: str = "gshard"
+    # mesh axis to pin expert-parallel intermediates to ("" = let GSPMD
+    # propagate). Set by the dry-run's --expert-axis lever (§Perf).
+    expert_axis: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 SSD block hyperparameters (arXiv:2405.21060)."""
+    state_dim: int = 128          # N
+    head_dim: int = 64            # P
+    num_heads: int = 0            # computed: expand*d_model // head_dim if 0
+    expand: int = 2
+    conv_width: int = 4
+    chunk_size: int = 256
+    ngroups: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    source: str                   # citation from the assignment table
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 -> d_model // num_heads
+    # --- attention flavour ---
+    rope_theta: float = 10000.0
+    sliding_window: int = 0       # 0 = full attention
+    long_context_window: int = 4096   # SWA variant used only for long_500k
+    mrope: bool = False           # Qwen2-VL multimodal RoPE
+    attn_logit_softcap: float = 0.0
+    qkv_bias: bool = False
+    # --- ffn / norm ---
+    activation: str = "swiglu"    # swiglu | gelu | geglu
+    norm: str = "rmsnorm"         # rmsnorm | layernorm
+    tie_embeddings: bool = False
+    # --- hybrid (recurrentgemma): repeating block pattern ---
+    block_pattern: Tuple[str, ...] = ()   # e.g. ("rglru","rglru","attn")
+    rglru_width: int = 0          # lru dim (= d_model for RG)
+    conv1d_width: int = 4
+    # --- moe / ssm sub-configs ---
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # --- modality frontend stubs ---
+    num_codebooks: int = 1        # musicgen: EnCodec codebooks (summed embeds)
+    vision_embed_dim: int = 0     # qwen2-vl: stub patch-embedding input dim
+    max_patches: int = 0          # patches per sequence in vlm input spec
+    # --- numerics ---
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.num_heads, 1))
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer block kind, length num_layers."""
+        if self.family == "ssm":
+            return ("ssd",) * self.num_layers
+        if self.block_pattern:
+            pat = self.block_pattern
+            return tuple(pat[i % len(pat)] for i in range(self.num_layers))
+        return ("attn",) * self.num_layers
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND model-FLOPs and reporting)."""
+        d, L, V = self.d_model, self.num_layers, self.vocab_size
+        hd = self.head_dim
+        n = V * d  # embedding
+        if not self.tie_embeddings:
+            n += V * d
+        if self.family == "audio":
+            n += (self.num_codebooks - 1) * V * d      # extra codebook embeds
+            n += (self.num_codebooks - 1) * V * d      # extra output heads
+        if self.family == "vlm" and self.vision_embed_dim:
+            n += self.vision_embed_dim * d             # projector stub
+        for kind in self.layer_kinds:
+            n += 2 * d  # two norms per block
+            if kind == "attn":
+                n += d * (self.num_heads * hd)              # q
+                n += 2 * d * (self.num_kv_heads * hd)       # k, v
+                n += (self.num_heads * hd) * d              # o
+                n += self._ffn_params()
+            elif kind == "rglru":
+                w = self.rglru_width or d
+                # in_x/in_gate/out linears + conv1d(+bias) + gates a,x + Lambda
+                n += 3 * d * w + (self.conv1d_width + 1) * w
+                n += 2 * (w * w + w) + w
+                n += self._ffn_params()
+            elif kind == "ssd":
+                s = self.ssm
+                dinner = s.expand * d
+                nheads = s.num_heads or dinner // s.head_dim
+                zxbcdt = d * (2 * dinner + 2 * s.ngroups * s.state_dim + nheads)
+                n += zxbcdt
+                n += s.conv_width * (dinner + 2 * s.ngroups * s.state_dim)
+                n += 2 * nheads                      # A, D
+                n += nheads                          # dt_bias
+                n += dinner * d                      # out proj
+            else:
+                raise ValueError(kind)
+        n += d  # final norm
+        return n
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only routed top-k + shared)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        d = self.d_model
+        full_ffn = 3 * d * m.expert_d_ff * m.num_experts
+        act_ffn = 3 * d * m.expert_d_ff * m.num_experts_per_tok
+        per_layer_delta = full_ffn - act_ffn
+        return self.param_count() - per_layer_delta * self._num_moe_layers()
+
+    def _num_moe_layers(self) -> int:
+        return sum(1 for k in self.layer_kinds if k == "attn") if self.moe else 0
+
+    def _ffn_params(self) -> int:
+        d = self.d_model
+        if self.moe is not None:
+            m = self.moe
+            n = d * m.num_experts                                   # router
+            n += 3 * d * m.expert_d_ff * m.num_experts              # experts
+            if m.num_shared_experts:
+                n += 3 * d * (m.shared_d_ff or m.expert_d_ff * m.num_shared_experts)
+                n += d                                              # shared gate
+            return n
+        mult = 3 if self.activation in ("swiglu", "geglu") else 2
+        return mult * d * self.d_ff
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    """AsyncFedED + baseline hyperparameters (paper §4, Appendix B.4)."""
+    aggregator: str = "asyncfeded"
+    num_clients: int = 10
+    # Eq.(7): eta_g = lam / (gamma + eps)
+    lam: float = 1.0
+    eps: float = 1.0
+    # Eq.(8): K_{n+1} = K_n + floor((gamma_bar - gamma) * kappa)
+    gamma_bar: float = 3.0
+    kappa: float = 1.0
+    k_initial: int = 10
+    k_min: int = 1
+    k_max: int = 64
+    # Assumption 4 / GMIS depth: updates staler than this are clipped
+    gmis_depth: int = 64
+    staleness_cap: float = 0.0       # 0 = uncapped (Gamma in Assumption 4)
+    # baselines
+    fedasync_alpha: float = 0.5
+    hinge_a: float = 5.0
+    hinge_b: float = 5.0
+    fedprox_mu: float = 0.1
+    fedbuff_size: int = 4
+    # local training
+    local_lr: float = 0.01
+    local_momentum: float = 0.5
+    local_lr_decay: float = 0.995
+    local_batch_size: int = 32
+    # simulator (Appendix B.2)
+    suspension_prob: float = 0.1
+    transmission_mbps: float = 100.0
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def reduced(cfg: ModelConfig, num_layers: int = 2, d_model: int = 256,
+            max_experts: int = 4) -> ModelConfig:
+    """Smoke-test variant of the same family: <=2 layers, d_model<=512, <=4 experts."""
+    d_model = min(d_model, 512)
+    heads = max(2, min(cfg.num_heads, 4))
+    kv = max(1, min(cfg.num_kv_heads, heads))
+    head_dim = max(8, d_model // heads)
+    changes = dict(
+        num_layers=num_layers,
+        d_model=d_model,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=head_dim,
+        d_ff=d_model * 2,
+        vocab_size=min(cfg.vocab_size, 512),
+        rglru_width=min(cfg.rglru_width, d_model) if cfg.rglru_width else 0,
+        vision_embed_dim=64 if cfg.vision_embed_dim else 0,
+        max_patches=16 if cfg.max_patches else 0,
+        sliding_window=min(cfg.sliding_window, 64) if cfg.sliding_window else 0,
+        long_context_window=64,
+    )
+    if cfg.moe is not None:
+        e = min(cfg.moe.num_experts, max_experts)
+        changes["moe"] = dataclasses.replace(
+            cfg.moe,
+            num_experts=e,
+            num_experts_per_tok=min(cfg.moe.num_experts_per_tok, 2),
+            expert_d_ff=d_model,
+            num_shared_experts=min(cfg.moe.num_shared_experts, 1),
+            shared_d_ff=d_model if cfg.moe.num_shared_experts else 0,
+        )
+    if cfg.ssm is not None:
+        changes["ssm"] = dataclasses.replace(
+            cfg.ssm, state_dim=16, head_dim=16, num_heads=0, chunk_size=32)
+    if cfg.block_pattern:
+        changes["num_layers"] = max(num_layers, len(cfg.block_pattern))
+    return dataclasses.replace(cfg, **changes)

@@ -1,0 +1,22 @@
+"""AsyncFedED core: the paper's contribution as composable pieces."""
+from repro.core.adaptive_k import AdaptiveK, update_k
+from repro.core.aggregation import (AggregationResult, adaptive_lr,
+                                    asyncfeded_aggregate,
+                                    asyncfeded_aggregate_per_leaf,
+                                    asyncfeded_aggregate_with_dist, staleness)
+from repro.core.client import Client
+from repro.core.gmis import DisplacementGMIS, RingGMIS
+from repro.core.server import (AsyncFedEDServer, ClientUpdate, FedAsyncServer,
+                               FedBuffServer, ServerReply, SyncServer,
+                               make_server)
+from repro.core.simulator import (EvalPoint, FederatedSimulation, SimResult,
+                                  run_comparison)
+
+__all__ = [
+    "AdaptiveK", "update_k", "AggregationResult", "adaptive_lr", "staleness",
+    "asyncfeded_aggregate", "asyncfeded_aggregate_per_leaf",
+    "asyncfeded_aggregate_with_dist", "Client", "DisplacementGMIS",
+    "RingGMIS", "AsyncFedEDServer", "ClientUpdate", "FedAsyncServer",
+    "FedBuffServer", "ServerReply", "SyncServer", "make_server", "EvalPoint",
+    "FederatedSimulation", "SimResult", "run_comparison",
+]

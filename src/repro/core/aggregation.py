@@ -1,0 +1,112 @@
+"""AsyncFedED aggregation math — Eq.(5), (6), (7) of the paper.
+
+    gamma(i, tau) = ||x_t - x_{t-tau}|| / ||Delta_i||            (Eq. 6)
+    eta_{g,i}     = lambda / (gamma + eps)                       (Eq. 7)
+    x_{t+1}       = x_t + eta_{g,i} * Delta_i                    (Eq. 5)
+
+Two execution paths:
+* pure-jnp (this module) — the reference, works on any pytree;
+* fused Pallas kernel (``repro.kernels.fedagg``) — single HBM pass for the
+  norms and a single pass for the AXPY, used when the parameter count makes
+  the four-pass jnp version memory-bound (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import pytree as pt
+
+PyTree = Any
+_TINY = 1e-12
+
+
+class AggregationResult(NamedTuple):
+    params: PyTree
+    gamma: jax.Array         # staleness of this update (Eq. 6)
+    eta: jax.Array           # global lr applied (Eq. 7)
+    dist: jax.Array          # ||x_t - x_{t-tau}||
+    delta_norm: jax.Array    # ||Delta_i||
+
+
+def staleness(x_t: PyTree, x_stale: PyTree, delta: PyTree,
+              cap: float = 0.0) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Eq.(6). Returns (gamma, dist, delta_norm). A zero-norm update gets
+    gamma = dist/_TINY (i.e. effectively discarded by Eq. 7), except when the
+    server has not moved either (dist == 0) -> gamma = 0 (fresh update)."""
+    dist = pt.tree_dist(x_t, x_stale)
+    dnorm = pt.tree_norm(delta)
+    gamma = dist / jnp.maximum(dnorm, _TINY)
+    gamma = jnp.where(dist <= _TINY, 0.0, gamma)
+    if cap > 0.0:
+        gamma = jnp.minimum(gamma, cap)   # Assumption 4 bound Gamma
+    return gamma, dist, dnorm
+
+
+def adaptive_lr(gamma: jax.Array, lam: float, eps: float) -> jax.Array:
+    """Eq.(7). Maximum value lam/eps (at gamma = 0)."""
+    return lam / (gamma + eps)
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "eps", "cap"))
+def asyncfeded_aggregate(x_t: PyTree, x_stale: PyTree, delta: PyTree, *,
+                         lam: float, eps: float,
+                         cap: float = 0.0) -> AggregationResult:
+    """One fused server step: Eq.(6) -> Eq.(7) -> Eq.(5)."""
+    gamma, dist, dnorm = staleness(x_t, x_stale, delta, cap)
+    eta = adaptive_lr(gamma, lam, eps)
+    new = pt.tree_axpy(eta, delta, x_t)
+    return AggregationResult(new, gamma, eta, dist, dnorm)
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "eps", "cap"))
+def asyncfeded_aggregate_with_dist(x_t: PyTree, dist: jax.Array,
+                                   delta: PyTree, *, lam: float, eps: float,
+                                   cap: float = 0.0) -> AggregationResult:
+    """Variant used by the O(clients)-memory displacement accumulator
+    (DESIGN.md §3): ``dist`` = ||x_t - x_{t-tau}|| is already known, so the
+    stale model itself is not needed."""
+    dnorm = pt.tree_norm(delta)
+    gamma = dist / jnp.maximum(dnorm, _TINY)
+    gamma = jnp.where(dist <= _TINY, 0.0, gamma)
+    if cap > 0.0:
+        gamma = jnp.minimum(gamma, cap)
+    eta = adaptive_lr(gamma, lam, eps)
+    new = pt.tree_axpy(eta, delta, x_t)
+    return AggregationResult(new, gamma, eta, dist, dnorm)
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "eps", "cap"))
+def asyncfeded_aggregate_per_leaf(x_t: PyTree, x_stale: PyTree,
+                                  delta: PyTree, *, lam: float, eps: float,
+                                  cap: float = 0.0) -> AggregationResult:
+    """Beyond-paper extension: per-leaf staleness. Under non-IID data, drift
+    is highly non-uniform across parameter groups (e.g. MoE experts); scaling
+    each leaf by its own gamma preserves fresh leaves of an otherwise-stale
+    update. Global gamma/eta returned are parameter-count-weighted means."""
+
+    def leaf_agg(x, xs, d):
+        dist = jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32)
+                                           - xs.astype(jnp.float32))))
+        dn = jnp.sqrt(jnp.sum(jnp.square(d.astype(jnp.float32))))
+        g = jnp.where(dist <= _TINY, 0.0, dist / jnp.maximum(dn, _TINY))
+        if cap > 0.0:
+            g = jnp.minimum(g, cap)
+        eta = lam / (g + eps)
+        return (x.astype(jnp.float32) + eta * d.astype(jnp.float32)
+                ).astype(x.dtype), g, eta
+
+    out = jax.tree.map(leaf_agg, x_t, x_stale, delta)
+    new = jax.tree.map(lambda o: o[0], out, is_leaf=lambda o: isinstance(o, tuple))
+    leaves = jax.tree.leaves(out, is_leaf=lambda o: isinstance(o, tuple))
+    sizes = jnp.asarray([l[0].size for l in leaves], jnp.float32)
+    gammas = jnp.stack([l[1] for l in leaves])
+    etas = jnp.stack([l[2] for l in leaves])
+    wmean = lambda v: jnp.sum(v * sizes) / jnp.sum(sizes)
+    gamma, eta = wmean(gammas), wmean(etas)
+    dist = pt.tree_dist(x_t, x_stale)
+    dnorm = pt.tree_norm(delta)
+    return AggregationResult(new, gamma, eta, dist, dnorm)

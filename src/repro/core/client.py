@@ -1,0 +1,86 @@
+"""Client-side local training (Algorithm 2).
+
+A client downloads (x_t, K), performs K local SGD-with-momentum steps on
+mini-batches of its own dataset (Eq. 2), and uploads the pseudo-gradient
+Delta = x_K - x_0 (Eq. 4). Any optimizer is allowed (paper §4); we default
+to momentum(0.5) with per-round lr decay 0.995 (Appendix B.4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.configs.paper_tasks import PaperTaskConfig
+from repro.core.server import ClientUpdate
+from repro.data.pipeline import MiniBatcher
+from repro.models import small
+from repro.optim import momentum
+from repro.utils import pytree as pt
+
+PyTree = Any
+
+
+@functools.partial(jax.jit, static_argnames=("task", "beta", "prox_mu"))
+def _local_k_steps(task: PaperTaskConfig, params: PyTree, mu_state: PyTree,
+                   xs: jax.Array, ys: jax.Array, lr: jax.Array,
+                   beta: float = 0.5, prox_mu: float = 0.0):
+    """Scan K optimizer steps over stacked batches xs: (K, bs, ...).
+
+    Returns (delta, new_momentum, mean_loss). FedProx: prox_mu > 0 anchors
+    to the round's initial weights (Eq. 39)."""
+    anchor = params
+
+    def step(carry, batch):
+        p, m = carry
+        bx, by = batch
+        prox = (prox_mu, anchor) if prox_mu > 0 else None
+        loss, grads = jax.value_and_grad(
+            lambda q: small.task_loss(task, q, (bx, by), prox=prox))(p)
+        m = jax.tree.map(lambda mi, g: beta * mi + g, m, grads)
+        p = jax.tree.map(lambda pi, mi: pi - lr * mi, p, m)
+        return (p, m), loss
+
+    (new_params, new_mu), losses = jax.lax.scan(step, (params, mu_state),
+                                                (xs, ys))
+    delta = pt.tree_sub(new_params, params)
+    return delta, new_mu, jnp.mean(losses)
+
+
+class Client:
+    """One federated client: local data + persistent optimizer state."""
+
+    def __init__(self, client_id: int, task: PaperTaskConfig,
+                 dataset, fed: FedConfig, seed: int = 0):
+        self.client_id = client_id
+        self.task = task
+        self.fed = fed
+        self.batcher = MiniBatcher(dataset, fed.local_batch_size,
+                                   seed=seed * 10_007 + client_id)
+        self.num_samples = len(dataset[0])
+        self.round_idx = 0
+        self._mu: Optional[PyTree] = None
+
+    def _lr(self) -> float:
+        return self.fed.local_lr * (self.fed.local_lr_decay ** self.round_idx)
+
+    def run_local(self, params: PyTree, k: int, snapshot_iter: int,
+                  prox_mu: float = 0.0) -> Tuple[ClientUpdate, float]:
+        """K local steps -> (ClientUpdate, mean local loss)."""
+        if self._mu is None:
+            self._mu = pt.tree_zeros_like(params)
+        batches = [self.batcher.next() for _ in range(k)]
+        xs = np.stack([b[0] for b in batches])
+        ys = np.stack([b[1] for b in batches])
+        delta, self._mu, loss = _local_k_steps(
+            self.task, params, self._mu, jnp.asarray(xs), jnp.asarray(ys),
+            jnp.float32(self._lr()), beta=self.fed.local_momentum,
+            prox_mu=prox_mu)
+        self.round_idx += 1
+        upd = ClientUpdate(self.client_id, snapshot_iter, k, delta,
+                           self.num_samples)
+        return upd, float(loss)

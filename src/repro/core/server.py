@@ -1,0 +1,248 @@
+"""Server-side protocol implementations: AsyncFedED (Algorithm 1) and the
+four baselines' aggregation rules (Appendix B.4).
+
+Servers are pure protocol logic — no clocks, no sockets. The discrete-event
+simulator (repro.core.simulator) drives them; the multi-pod path drives the
+same classes with pod-sharded parameter pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.core.adaptive_k import AdaptiveK
+from repro.core.aggregation import (asyncfeded_aggregate,
+                                    asyncfeded_aggregate_per_leaf,
+                                    asyncfeded_aggregate_with_dist)
+from repro.core.gmis import DisplacementGMIS, RingGMIS
+from repro.utils import pytree as pt
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ClientUpdate:
+    client_id: int
+    snapshot_iter: int
+    k_used: int
+    delta: PyTree
+    num_samples: int = 1
+
+
+@dataclasses.dataclass
+class ServerReply:
+    params: PyTree
+    iteration: int
+    k_next: int
+
+
+@dataclasses.dataclass
+class UpdateRecord:
+    iteration: int
+    client_id: int
+    lag: int
+    gamma: float
+    eta: float
+    k_used: int
+    k_next: int
+    dist: float
+    delta_norm: float
+
+
+class AsyncServer:
+    """Base class for asynchronous servers (one aggregation per arrival)."""
+
+    is_async = True
+
+    def __init__(self, params: PyTree, fed: FedConfig):
+        self.params = params
+        self.fed = fed
+        self.t = 1                       # global iteration (paper: x_1 initial)
+        self.history: List[UpdateRecord] = []
+
+    def on_connect(self, client_id: int) -> ServerReply:
+        raise NotImplementedError
+
+    def on_update(self, upd: ClientUpdate) -> ServerReply:
+        raise NotImplementedError
+
+
+class AsyncFedEDServer(AsyncServer):
+    """Algorithm 1: Euclidean-distance staleness + adaptive eta_g and K."""
+
+    name = "asyncfeded"
+
+    def __init__(self, params: PyTree, fed: FedConfig,
+                 gmis_mode: str = "ring", per_leaf: bool = False):
+        super().__init__(params, fed)
+        self.per_leaf = per_leaf
+        self.gmis_mode = gmis_mode
+        if gmis_mode == "ring":
+            self.gmis = RingGMIS(depth=fed.gmis_depth)
+        elif gmis_mode == "displacement":
+            self.gmis = DisplacementGMIS()
+        else:
+            raise ValueError(gmis_mode)
+        self.gmis.append(self.t, params)
+        self.kctl = AdaptiveK(fed.k_initial, fed.gamma_bar, fed.kappa,
+                              fed.k_min, fed.k_max)
+
+    def _register(self, client_id: int) -> None:
+        if self.gmis_mode == "displacement":
+            self.gmis.register_snapshot(client_id, self.t, self.params)
+        else:
+            self.gmis.register_snapshot(client_id, self.t)
+
+    def on_connect(self, client_id: int) -> ServerReply:
+        self._register(client_id)
+        return ServerReply(self.params, self.t, self.kctl.get(client_id))
+
+    def on_update(self, upd: ClientUpdate) -> ServerReply:
+        fed = self.fed
+        if self.gmis_mode == "displacement":
+            dist = self.gmis.distance_from(upd.client_id, upd.snapshot_iter,
+                                           self.params)
+            res = asyncfeded_aggregate_with_dist(
+                self.params, dist, upd.delta, lam=fed.lam, eps=fed.eps,
+                cap=fed.staleness_cap)
+            self.gmis.release(upd.client_id)
+        else:
+            stale, actual = self.gmis.get(upd.snapshot_iter)
+            agg = (asyncfeded_aggregate_per_leaf if self.per_leaf
+                   else asyncfeded_aggregate)
+            res = agg(self.params, stale, upd.delta, lam=fed.lam,
+                      eps=fed.eps, cap=fed.staleness_cap)
+        self.params = res.params
+        self.t += 1
+        self.gmis.append(self.t, self.params)
+        self.gmis.on_aggregate(res.eta, upd.delta)
+        gamma = float(res.gamma)
+        k_next = self.kctl.observe(upd.client_id, gamma)
+        self.history.append(UpdateRecord(
+            self.t, upd.client_id, self.t - upd.snapshot_iter, gamma,
+            float(res.eta), upd.k_used, k_next, float(res.dist),
+            float(res.delta_norm)))
+        self._register(upd.client_id)
+        return ServerReply(self.params, self.t, k_next)
+
+
+class FedAsyncServer(AsyncServer):
+    """FedAsync (Xie et al. [43]): x <- (1-a) x + a x_local, with constant
+    alpha or hinge-adaptive alpha_t (Eq. 40/41)."""
+
+    def __init__(self, params: PyTree, fed: FedConfig, mode: str = "constant"):
+        super().__init__(params, fed)
+        assert mode in ("constant", "hinge")
+        self.mode = mode
+        self.name = f"fedasync+{mode}"
+        self.gmis = RingGMIS(depth=fed.gmis_depth)
+        self.gmis.append(self.t, params)
+
+    def on_connect(self, client_id: int) -> ServerReply:
+        return ServerReply(self.params, self.t, self.fed.k_initial)
+
+    def _alpha(self, lag: int) -> float:
+        a0 = self.fed.fedasync_alpha
+        if self.mode == "constant":
+            return a0
+        a, b = self.fed.hinge_a, self.fed.hinge_b
+        s = 1.0 if lag <= b else 1.0 / (a * (lag - b) + 1.0)
+        return a0 * s
+
+    def on_update(self, upd: ClientUpdate) -> ServerReply:
+        stale, _ = self.gmis.get(upd.snapshot_iter)
+        x_local = pt.tree_add(stale, upd.delta)
+        lag = self.t - upd.snapshot_iter
+        alpha = self._alpha(lag)
+        self.params = jax.tree.map(
+            lambda xg, xl: ((1.0 - alpha) * xg.astype(np.float32)
+                            + alpha * xl.astype(np.float32)).astype(xg.dtype),
+            self.params, x_local)
+        self.t += 1
+        self.gmis.append(self.t, self.params)
+        self.history.append(UpdateRecord(
+            self.t, upd.client_id, lag, float("nan"), alpha, upd.k_used,
+            self.fed.k_initial, float("nan"), float("nan")))
+        return ServerReply(self.params, self.t, self.fed.k_initial)
+
+
+class FedBuffServer(AsyncServer):
+    """FedBuff (Nguyen et al. [31]): buffered asynchronous aggregation."""
+
+    name = "fedbuff"
+
+    def __init__(self, params: PyTree, fed: FedConfig):
+        super().__init__(params, fed)
+        self.buffer: List[PyTree] = []
+
+    def on_connect(self, client_id: int) -> ServerReply:
+        return ServerReply(self.params, self.t, self.fed.k_initial)
+
+    def on_update(self, upd: ClientUpdate) -> ServerReply:
+        self.buffer.append(upd.delta)
+        if len(self.buffer) >= self.fed.fedbuff_size:
+            mean = self.buffer[0]
+            for d in self.buffer[1:]:
+                mean = pt.tree_add(mean, d)
+            scale = self.fed.lam / len(self.buffer)
+            self.params = pt.tree_axpy(scale, mean, self.params)
+            self.buffer = []
+            self.t += 1
+            self.history.append(UpdateRecord(
+                self.t, upd.client_id, 0, float("nan"), scale, upd.k_used,
+                self.fed.k_initial, float("nan"), float("nan")))
+        return ServerReply(self.params, self.t, self.fed.k_initial)
+
+
+class SyncServer:
+    """Synchronous rounds (FedAvg Eq. 38; FedProx shares the rule — its
+    difference is the client-side proximal term)."""
+
+    is_async = False
+
+    def __init__(self, params: PyTree, fed: FedConfig, name: str = "fedavg"):
+        self.params = params
+        self.fed = fed
+        self.name = name
+        self.t = 1
+        self.history: List[UpdateRecord] = []
+
+    def on_connect(self, client_id: int) -> ServerReply:
+        return ServerReply(self.params, self.t, self.fed.k_initial)
+
+    def round(self, updates: List[ClientUpdate]) -> ServerReply:
+        total = float(sum(u.num_samples for u in updates))
+        acc = None
+        for u in updates:
+            w = u.num_samples / total
+            scaled = pt.tree_scale(u.delta, w)
+            acc = scaled if acc is None else pt.tree_add(acc, scaled)
+        self.params = pt.tree_add(self.params, acc)
+        self.t += 1
+        self.history.append(UpdateRecord(
+            self.t, -1, 0, 0.0, 1.0, updates[0].k_used,
+            self.fed.k_initial, 0.0, 0.0))
+        return ServerReply(self.params, self.t, self.fed.k_initial)
+
+
+def make_server(name: str, params: PyTree, fed: FedConfig, **kw):
+    name = name.lower()
+    if name == "asyncfeded":
+        return AsyncFedEDServer(params, fed, **kw)
+    if name == "asyncfeded-perleaf":
+        return AsyncFedEDServer(params, fed, per_leaf=True, **kw)
+    if name == "asyncfeded-displacement":
+        return AsyncFedEDServer(params, fed, gmis_mode="displacement", **kw)
+    if name == "fedasync+constant":
+        return FedAsyncServer(params, fed, mode="constant")
+    if name == "fedasync+hinge":
+        return FedAsyncServer(params, fed, mode="hinge")
+    if name == "fedbuff":
+        return FedBuffServer(params, fed)
+    if name in ("fedavg", "fedprox"):
+        return SyncServer(params, fed, name=name)
+    raise ValueError(f"unknown aggregator {name!r}")

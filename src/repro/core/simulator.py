@@ -1,0 +1,184 @@
+"""Discrete-event simulator of the paper's training environment (§B.2).
+
+Reproduces, with a deterministic virtual clock:
+* device heterogeneity — per-client local-step durations (lognormal spread);
+* transmission time  = model_bytes / speed * coefficient, coefficient ~ N(1, 0.2)
+  truncated at 0.1 (paper's TCP/IP model);
+* client suspension — each round a client hangs with probability P for a
+  random time w.r.t. the maximum running time;
+* asynchronous arrivals (every aggregator sees the same event trace for a
+  given seed, so curves are comparable across algorithms).
+
+Synchronous baselines (FedAvg/FedProx) run the same clients but the round
+duration is the max over clients — the straggler effect the paper targets.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.configs.paper_tasks import PaperTaskConfig
+from repro.core.client import Client
+from repro.core.server import ClientUpdate, SyncServer, make_server
+from repro.data.pipeline import load_task_datasets
+from repro.models import small
+from repro.utils import pytree as pt
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class EvalPoint:
+    time: float
+    iteration: int
+    accuracy: float
+    loss: float
+
+
+@dataclasses.dataclass
+class SimResult:
+    algorithm: str
+    points: List[EvalPoint]
+    history: list
+    total_updates: int
+
+    def max_accuracy(self, within_time: Optional[float] = None) -> float:
+        pts = [p for p in self.points
+               if within_time is None or p.time <= within_time]
+        return max((p.accuracy for p in pts), default=0.0)
+
+    def time_to_accuracy(self, target: float) -> float:
+        for p in self.points:
+            if p.accuracy >= target:
+                return p.time
+        return float("inf")
+
+
+class FederatedSimulation:
+    BASE_STEP_TIME = 0.05          # seconds per local SGD step, nominal client
+    HANG_SCALE = 30.0              # max hang ~ U(0, HANG_SCALE * step_time * K)
+
+    def __init__(self, task: PaperTaskConfig, fed: FedConfig,
+                 algorithm: str = "asyncfeded", seed: int = 0,
+                 heterogeneity: float = 0.6, server_kwargs: dict = {}):
+        self.task = task
+        self.fed = fed
+        self.algorithm = algorithm
+        self.rng = np.random.default_rng(seed + 99_991)
+        train_sets, (tx, ty) = load_task_datasets(task, seed=seed)
+        self.test_x, self.test_y = jnp.asarray(tx), jnp.asarray(ty)
+        params = small.init_task_model(jax.random.PRNGKey(seed), task)
+        self.model_bytes = pt.tree_bytes(params)
+        self.server = make_server(algorithm, params, fed, **server_kwargs)
+        self.clients = [Client(i, task, train_sets[i], fed, seed=seed)
+                        for i in range(fed.num_clients)]
+        # heterogeneity: per-client step time, fixed for the run
+        self.step_time = (self.BASE_STEP_TIME
+                          * self.rng.lognormal(0.0, heterogeneity,
+                                               fed.num_clients))
+        self._eval = jax.jit(lambda p: (
+            small.task_accuracy(task, p, (self.test_x, self.test_y)),
+            small.task_loss(task, p, (self.test_x, self.test_y))))
+        self.prox_mu = fed.fedprox_mu if algorithm == "fedprox" else 0.0
+
+    # ------------------------------------------------------------- timing --
+    def _tx_time(self) -> float:
+        coef = max(0.1, self.rng.normal(1.0, 0.2))
+        return self.model_bytes / (self.fed.transmission_mbps * 1e6 / 8) * coef
+
+    def _hang_time(self, k: int) -> float:
+        if self.rng.random() < self.fed.suspension_prob:
+            return self.rng.uniform(
+                0.0, self.HANG_SCALE * self.BASE_STEP_TIME * k)
+        return 0.0
+
+    def _round_duration(self, cid: int, k: int) -> float:
+        return (self._hang_time(k) + k * self.step_time[cid]
+                + self._tx_time())
+
+    # --------------------------------------------------------------- eval --
+    def _eval_point(self, time: float) -> EvalPoint:
+        acc, loss = self._eval(self.server.params)
+        return EvalPoint(time, self.server.t, float(acc), float(loss))
+
+    # ---------------------------------------------------------------- run --
+    def run(self, max_time: float = 300.0, eval_every: int = 5) -> SimResult:
+        if self.server.is_async:
+            return self._run_async(max_time, eval_every)
+        return self._run_sync(max_time, eval_every)
+
+    def _run_async(self, max_time: float, eval_every: int) -> SimResult:
+        points = [self._eval_point(0.0)]
+        heap: List[Tuple[float, int, int, ClientUpdate]] = []
+        seq = 0
+        for c in self.clients:
+            reply = self.server.on_connect(c.client_id)
+            upd, _ = c.run_local(reply.params, reply.k_next, reply.iteration,
+                                 self.prox_mu)
+            dur = self._tx_time() + self._round_duration(c.client_id,
+                                                         reply.k_next)
+            heapq.heappush(heap, (dur, seq, c.client_id, upd))
+            seq += 1
+        updates = 0
+        while heap:
+            now, _, cid, upd = heapq.heappop(heap)
+            if now > max_time:
+                break
+            reply = self.server.on_update(upd)
+            updates += 1
+            if updates % eval_every == 0:
+                points.append(self._eval_point(now))
+            c = self.clients[cid]
+            nxt, _ = c.run_local(reply.params, reply.k_next, reply.iteration,
+                                 self.prox_mu)
+            dur = self._tx_time() + self._round_duration(cid, reply.k_next)
+            heapq.heappush(heap, (now + dur, seq, cid, nxt))
+            seq += 1
+        points.append(self._eval_point(min(now, max_time)))
+        return SimResult(self.algorithm, points, self.server.history, updates)
+
+    def _run_sync(self, max_time: float, eval_every: int) -> SimResult:
+        points = [self._eval_point(0.0)]
+        now = 0.0
+        rounds = 0
+        while now < max_time:
+            reply0 = self.server.on_connect(0)
+            updates, durations = [], []
+            for c in self.clients:
+                upd, _ = c.run_local(reply0.params, reply0.k_next,
+                                     reply0.iteration, self.prox_mu)
+                updates.append(upd)
+                durations.append(self._tx_time()
+                                 + self._round_duration(c.client_id,
+                                                        reply0.k_next))
+            now += max(durations)          # straggler-bound round time
+            self.server.round(updates)
+            rounds += 1
+            if rounds % max(1, eval_every // 2) == 0 or now >= max_time:
+                points.append(self._eval_point(min(now, max_time)))
+        return SimResult(self.algorithm, points, self.server.history, rounds)
+
+
+def run_comparison(task: PaperTaskConfig, algorithms: List[str],
+                   fed: Optional[FedConfig] = None, max_time: float = 300.0,
+                   seeds: Tuple[int, ...] = (0,), eval_every: int = 5,
+                   suspension_prob: Optional[float] = None
+                   ) -> Dict[str, List[SimResult]]:
+    """Fig. 2/3 driver: same task + clients + clock across algorithms."""
+    fed = fed or task.fed
+    if suspension_prob is not None:
+        fed = dataclasses.replace(fed, suspension_prob=suspension_prob)
+    out: Dict[str, List[SimResult]] = {}
+    for alg in algorithms:
+        runs = []
+        for seed in seeds:
+            sim = FederatedSimulation(task, fed, algorithm=alg, seed=seed)
+            runs.append(sim.run(max_time=max_time, eval_every=eval_every))
+        out[alg] = runs
+    return out

@@ -1,0 +1,9 @@
+from repro.data.femnist import generate_femnist
+from repro.data.pipeline import (MiniBatcher, dirichlet_partition,
+                                 load_task_datasets, synthetic_token_stream)
+from repro.data.shakespeare import generate_shakespeare
+from repro.data.synthetic import generate_synthetic, train_test_split
+
+__all__ = ["MiniBatcher", "dirichlet_partition", "load_task_datasets",
+           "synthetic_token_stream", "generate_femnist",
+           "generate_shakespeare", "generate_synthetic", "train_test_split"]

@@ -1,0 +1,98 @@
+"""Batching / sampling utilities and the large-arch token pipeline."""
+from __future__ import annotations
+
+from typing import Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.paper_tasks import PaperTaskConfig
+from repro.data.femnist import generate_femnist
+from repro.data.shakespeare import generate_shakespeare
+from repro.data.synthetic import generate_synthetic, train_test_split
+
+Dataset = Tuple[np.ndarray, np.ndarray]
+
+
+def load_task_datasets(task: PaperTaskConfig, seed: int = 0):
+    """Returns (per-client train datasets, global test set)."""
+    if task.name == "synthetic-1-1":
+        ds = generate_synthetic(1.0, 1.0, task.num_clients,
+                                task.input_shape[0], task.num_classes,
+                                task.samples_per_client, seed)
+    elif task.name == "femnist":
+        ds = generate_femnist(task.num_clients, task.num_classes,
+                              task.samples_per_client, seed=seed)
+    elif task.name == "shakespeare":
+        ds = generate_shakespeare(task.num_clients, task.samples_per_client,
+                                  seed=seed)
+    else:
+        raise ValueError(task.name)
+    return train_test_split(ds, test_frac=0.1, seed=seed)
+
+
+class MiniBatcher:
+    """Deterministic with-replacement mini-batch sampler per client."""
+
+    def __init__(self, dataset: Dataset, batch_size: int, seed: int):
+        self.x, self.y = dataset
+        self.batch_size = min(batch_size, len(self.x))
+        self.rng = np.random.default_rng(seed)
+
+    def next(self) -> Dataset:
+        idx = self.rng.integers(0, len(self.x), size=self.batch_size)
+        return self.x[idx], self.y[idx]
+
+
+def dirichlet_partition(x: np.ndarray, y: np.ndarray, num_clients: int,
+                        alpha: float = 0.5, seed: int = 0) -> List[Dataset]:
+    """Label-skew non-IID partition of a centralized dataset."""
+    rng = np.random.default_rng(seed)
+    classes = np.unique(y)
+    client_idx: List[List[int]] = [[] for _ in range(num_clients)]
+    for c in classes:
+        idx = np.flatnonzero(y == c)
+        rng.shuffle(idx)
+        props = rng.dirichlet(np.full(num_clients, alpha))
+        cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+        for ci, part in enumerate(np.split(idx, cuts)):
+            client_idx[ci].extend(part.tolist())
+    out = []
+    for ci in range(num_clients):
+        sel = np.asarray(client_idx[ci], int)
+        rng.shuffle(sel)
+        out.append((x[sel], y[sel]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Token pipeline for the assigned large architectures
+# ---------------------------------------------------------------------------
+
+
+def synthetic_token_stream(cfg: ModelConfig, shape: ShapeConfig, *,
+                           num_batches: int = 1, seed: int = 0
+                           ) -> Iterator[dict]:
+    """Zipf-distributed synthetic token batches matching input_specs()."""
+    rng = np.random.default_rng(seed)
+    v = cfg.vocab_size
+    # Zipf over the vocab — realistic skew for embedding-gather patterns
+    ranks = np.arange(1, v + 1, dtype=np.float64)
+    probs = ranks ** -1.1
+    probs /= probs.sum()
+    for _ in range(num_batches):
+        if cfg.family == "audio":
+            toks = rng.choice(v, p=probs,
+                              size=(shape.global_batch, cfg.num_codebooks,
+                                    shape.seq_len))
+        else:
+            toks = rng.choice(v, p=probs, size=(shape.global_batch, shape.seq_len))
+        batch = {"tokens": toks.astype(np.int32)}
+        if shape.kind == "train":
+            batch["labels"] = np.roll(batch["tokens"], -1, axis=-1)
+        if cfg.family == "vlm" and cfg.max_patches:
+            npatch = min(cfg.max_patches, shape.seq_len)
+            batch["patch_embeds"] = rng.normal(
+                0, 1, (shape.global_batch, npatch, cfg.vision_embed_dim)
+            ).astype(np.float32)
+        yield batch

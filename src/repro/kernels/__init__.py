@@ -1,0 +1,8 @@
+"""Pallas TPU kernels. Each subpackage: <name>.py (pl.pallas_call +
+BlockSpec), ops.py (jit'd wrapper), ref.py (pure-jnp oracle).
+
+* fedagg   -- fused AsyncFedED aggregation (norms + AXPY), the paper hot spot
+* ssd      -- Mamba-2 chunked SSD scan (MXU intra-chunk + VMEM state carry)
+* rglru    -- RG-LRU linear recurrence (VPU streaming, VMEM state carry)
+* swa_attn -- sliding-window/ring-buffer flash decode attention
+"""

@@ -1,0 +1,134 @@
+"""Fused AsyncFedED aggregation kernels (the paper's server hot spot).
+
+For a 70B-parameter model the jnp reference makes four HBM passes
+(read x_t & x_stale for the distance, read delta for the norm, read x_t &
+delta again for the AXPY). These kernels do it in two single-pass phases:
+
+  phase 1  fedagg_norms : one pass reading (x_t, x_stale, delta) tiles into
+           VMEM, emitting per-block partial sums of ||x_t - x_stale||^2 and
+           ||delta||^2  -> host combines to gamma, eta (Eq. 6/7, scalars).
+  phase 2  fedagg_axpy  : one pass computing x_t + eta * delta (Eq. 5).
+
+Tiling: the flattened parameter vector is reshaped to (n_blocks, 8, 128) —
+the TPU float32 VMEM tile — with zero padding to a multiple of BLOCK.
+Padding contributes 0 to both sums and is sliced off after the AXPY.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# one grid step processes BLOCK_ROWS x 128 elements resident in VMEM
+LANES = 128
+BLOCK_ROWS = 512                       # 512*128*4B = 256 KiB per operand tile
+
+
+def _norms_kernel(xt_ref, xs_ref, d_ref, out_ref):
+    xt = xt_ref[...].astype(jnp.float32)
+    xs = xs_ref[...].astype(jnp.float32)
+    d = d_ref[...].astype(jnp.float32)
+    diff = xt - xs
+    out_ref[0, 0] = jnp.sum(diff * diff)
+    out_ref[0, 1] = jnp.sum(d * d)
+
+
+def fedagg_norms(x_t: jax.Array, x_stale: jax.Array, delta: jax.Array,
+                 *, interpret: bool = True) -> jax.Array:
+    """Inputs: flat (n,) arrays (zero-padded to BLOCK multiple by ops.py).
+    Returns (2,) f32: [||x_t - x_stale||^2, ||delta||^2]."""
+    n = x_t.shape[0]
+    block = BLOCK_ROWS * LANES
+    assert n % block == 0, (n, block)
+    g = n // block
+    shaped = lambda a: a.reshape(g * BLOCK_ROWS, LANES)
+    partial = pl.pallas_call(
+        _norms_kernel,
+        grid=(g,),
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))] * 3,
+        out_specs=pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, 2), jnp.float32),
+        interpret=interpret,
+    )(shaped(x_t), shaped(x_stale), shaped(delta))
+    return jnp.sum(partial, axis=0)
+
+
+def _axpy_kernel(eta_ref, xt_ref, d_ref, out_ref):
+    eta = eta_ref[0, 0]
+    out_ref[...] = (xt_ref[...].astype(jnp.float32)
+                    + eta * d_ref[...].astype(jnp.float32)
+                    ).astype(out_ref.dtype)
+
+
+def fedagg_axpy(x_t: jax.Array, delta: jax.Array, eta: jax.Array,
+                *, interpret: bool = True) -> jax.Array:
+    """x_t + eta * delta, flat (n,) blocked through VMEM. eta: scalar."""
+    n = x_t.shape[0]
+    block = BLOCK_ROWS * LANES
+    assert n % block == 0, (n, block)
+    g = n // block
+    shaped = lambda a: a.reshape(g * BLOCK_ROWS, LANES)
+    out = pl.pallas_call(
+        _axpy_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),          # eta broadcast
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g * BLOCK_ROWS, LANES), x_t.dtype),
+        interpret=interpret,
+    )(eta.reshape(1, 1).astype(jnp.float32), shaped(x_t), shaped(delta))
+    return out.reshape(n)
+
+
+def _fused_kernel(scal_ref, xt_ref, xs_ref, d_ref, out_ref, norm_ref):
+    """Beyond-paper single-phase variant for the displacement-GMIS server:
+    dist is known a-priori (see DESIGN.md §3), so gamma/eta are computed on
+    the host and the whole aggregation is ONE pass: read (x_t, delta),
+    write x_{t+1}, and opportunistically emit the partial norms needed for
+    the *next* gamma bookkeeping."""
+    eta = scal_ref[0, 0]
+    xt = xt_ref[...].astype(jnp.float32)
+    xs = xs_ref[...].astype(jnp.float32)
+    d = d_ref[...].astype(jnp.float32)
+    out_ref[...] = (xt + eta * d).astype(out_ref.dtype)
+    diff = xt - xs
+    norm_ref[0, 0] = jnp.sum(diff * diff)
+    norm_ref[0, 1] = jnp.sum(d * d)
+
+
+def fedagg_fused(x_t: jax.Array, x_stale: jax.Array, delta: jax.Array,
+                 eta: jax.Array, *, interpret: bool = True):
+    """One-pass: returns (x_t + eta*delta, (dist^2, ||delta||^2) partials
+    summed). Used when eta is precomputed (displacement mode) but the norms
+    are still wanted for telemetry/controller."""
+    n = x_t.shape[0]
+    block = BLOCK_ROWS * LANES
+    assert n % block == 0, (n, block)
+    g = n // block
+    shaped = lambda a: a.reshape(g * BLOCK_ROWS, LANES)
+    out, partial = pl.pallas_call(
+        _fused_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g * BLOCK_ROWS, LANES), x_t.dtype),
+            jax.ShapeDtypeStruct((g, 2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(eta.reshape(1, 1).astype(jnp.float32), shaped(x_t), shaped(x_stale),
+      shaped(delta))
+    return out.reshape(n), jnp.sum(partial, axis=0)

@@ -1,0 +1,44 @@
+"""Jit'd public wrapper: AsyncFedED aggregation over parameter pytrees via
+the fused Pallas kernels. Drop-in replacement for
+``repro.core.aggregation.asyncfeded_aggregate``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import AggregationResult
+from repro.kernels.fedagg import fedagg
+from repro.kernels.fedagg.fedagg import BLOCK_ROWS, LANES
+from repro.utils import pytree as pt
+
+PyTree = Any
+_BLOCK = BLOCK_ROWS * LANES
+
+
+def _pad_flat(tree: PyTree) -> jax.Array:
+    vec = pt.tree_flatten_to_vector(tree)
+    pad = (-vec.shape[0]) % _BLOCK
+    return jnp.pad(vec, (0, pad))
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "eps", "cap", "interpret"))
+def asyncfeded_aggregate_pallas(x_t: PyTree, x_stale: PyTree, delta: PyTree,
+                                *, lam: float, eps: float, cap: float = 0.0,
+                                interpret: bool = True) -> AggregationResult:
+    xt = _pad_flat(x_t)
+    xs = _pad_flat(x_stale)
+    d = _pad_flat(delta)
+    sq = fedagg.fedagg_norms(xt, xs, d, interpret=interpret)
+    dist, dnorm = jnp.sqrt(sq[0]), jnp.sqrt(sq[1])
+    gamma = jnp.where(dist <= 1e-12, 0.0, dist / jnp.maximum(dnorm, 1e-12))
+    if cap > 0.0:
+        gamma = jnp.minimum(gamma, cap)
+    eta = lam / (gamma + eps)
+    new_flat = fedagg.fedagg_axpy(xt, d, eta, interpret=interpret)
+    n = pt.tree_size(x_t)
+    new = pt.tree_unflatten_from_vector(new_flat[:n], x_t)
+    return AggregationResult(new, gamma, eta, dist, dnorm)

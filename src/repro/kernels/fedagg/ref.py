@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the fedagg kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def norms_ref(x_t: jax.Array, x_stale: jax.Array, delta: jax.Array) -> jax.Array:
+    diff = x_t.astype(jnp.float32) - x_stale.astype(jnp.float32)
+    d = delta.astype(jnp.float32)
+    return jnp.stack([jnp.sum(diff * diff), jnp.sum(d * d)])
+
+
+def axpy_ref(x_t: jax.Array, delta: jax.Array, eta: jax.Array) -> jax.Array:
+    return (x_t.astype(jnp.float32)
+            + eta.astype(jnp.float32) * delta.astype(jnp.float32)
+            ).astype(x_t.dtype)
+
+
+def aggregate_ref(x_t: jax.Array, x_stale: jax.Array, delta: jax.Array,
+                  lam: float, eps: float):
+    """Full Eq.(5-7) on flat vectors; returns (new, gamma, eta)."""
+    n = norms_ref(x_t, x_stale, delta)
+    dist = jnp.sqrt(n[0])
+    dnorm = jnp.sqrt(n[1])
+    gamma = jnp.where(dist <= 1e-12, 0.0, dist / jnp.maximum(dnorm, 1e-12))
+    eta = lam / (gamma + eps)
+    return axpy_ref(x_t, delta, eta), gamma, eta

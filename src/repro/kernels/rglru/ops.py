@@ -1,0 +1,24 @@
+"""Jit'd wrapper: RG-LRU recurrence through the Pallas kernel, taking the
+model-side gate parameterization (r, i, Lambda) like
+repro.models.rglru.rglru_scan."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru.rglru import rglru_scan
+from repro.models.rglru import RGLRU_C
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "tile_w", "interpret"))
+def rglru_pallas(x: jax.Array, r: jax.Array, i: jax.Array, lam: jax.Array,
+                 chunk: int = 256, tile_w: int = 512, interpret: bool = True):
+    """x, r, i: (B, S, W); lam: (W,). Returns (h (B,S,W), final (B,W))."""
+    log_a_base = jax.nn.log_sigmoid(lam.astype(jnp.float32))
+    log_at = RGLRU_C * r.astype(jnp.float32) * log_a_base
+    xi = i.astype(jnp.float32) * x.astype(jnp.float32)
+    h = rglru_scan(log_at, xi.astype(x.dtype), chunk=chunk, tile_w=tile_w,
+                   interpret=interpret)
+    return h, h[:, -1].astype(jnp.float32)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the RG-LRU kernel (associative-scan formulation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(log_at: jax.Array, xi: jax.Array) -> jax.Array:
+    """h_t = a_t h_{t-1} + sqrt(1 - a_t^2) xi_t with a_t = exp(log_at)."""
+    at = jnp.exp(log_at.astype(jnp.float32))
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_at.astype(jnp.float32)),
+                                1e-12))
+    bt = beta * xi.astype(jnp.float32)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (at, bt), axis=1)
+    return h.astype(xi.dtype)

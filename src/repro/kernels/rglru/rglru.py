@@ -1,0 +1,70 @@
+"""Pallas TPU kernel for the RG-LRU linear recurrence (Griffin).
+
+TPU adaptation (DESIGN.md §4): the recurrence is elementwise per channel —
+no MXU work — so the kernel is a VPU streaming pass: channel tiles of width
+TILE_W ride the grid's middle axis, sequence chunks ride the innermost
+(sequential) axis, and the per-channel hidden state h lives in VMEM scratch
+across chunks. Within a chunk the recurrence runs as a lax.scan over rows
+already resident in VMEM (no HBM traffic inside the chunk).
+
+The gate matmuls (W_a, W_x) stay outside — they are plain XLA matmuls; the
+kernel consumes log_a_t = c * r_t * log(sigmoid(Lambda)) and the gated input
+x_t * i_t, and computes  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t x_t).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 256
+DEFAULT_TILE_W = 512
+
+
+def _rglru_kernel(log_at_ref, xi_ref, h_ref, state_ref):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    log_at = log_at_ref[0].astype(jnp.float32)      # (L, Wt)
+    xi = xi_ref[0].astype(jnp.float32)              # (L, Wt)
+    at = jnp.exp(log_at)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_at), 1e-12))
+    bt = beta * xi
+
+    def step(h, ab):
+        a, b = ab
+        h = a * h + b
+        return h, h
+
+    h0 = state_ref[0]                               # (Wt,)
+    hN, hs = jax.lax.scan(step, h0, (at, bt))
+    h_ref[0] = hs.astype(h_ref.dtype)
+    state_ref[0] = hN
+
+
+def rglru_scan(log_at: jax.Array, xi: jax.Array, *,
+               chunk: int = DEFAULT_CHUNK, tile_w: int = DEFAULT_TILE_W,
+               interpret: bool = True):
+    """log_at, xi: (B, S, W). Returns h: (B, S, W) (f32-accurate recurrence,
+    cast to xi.dtype)."""
+    b, s, w = xi.shape
+    chunk = min(chunk, s)
+    tile_w = min(tile_w, w)
+    assert s % chunk == 0 and w % tile_w == 0, (s, chunk, w, tile_w)
+    nc, nw = s // chunk, w // tile_w
+    return pl.pallas_call(
+        _rglru_kernel,
+        grid=(b, nw, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, tile_w), lambda i, k, j: (i, j, k)),
+            pl.BlockSpec((1, chunk, tile_w), lambda i, k, j: (i, j, k)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, tile_w), lambda i, k, j: (i, j, k)),
+        out_shape=jax.ShapeDtypeStruct((b, s, w), xi.dtype),
+        scratch_shapes=[pltpu.VMEM((1, tile_w), jnp.float32)],
+        interpret=interpret,
+    )(log_at, xi)

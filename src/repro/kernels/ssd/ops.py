@@ -1,0 +1,35 @@
+"""Jit'd wrapper: model-layout Mamba-2 SSD via the Pallas kernel.
+
+Takes the model's (B, S, H, P) layout + grouped B/C (B, S, G, N), repeats
+groups to heads, flattens (B, H) -> rows, runs the kernel, restores layout.
+Drop-in for repro.models.ssm.ssd_chunked (initial_state=None path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.ssd import ssd_scan
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked_pallas(x: jax.Array, dt: jax.Array, a: jax.Array,
+                       b: jax.Array, c: jax.Array, chunk: int = 128,
+                       interpret: bool = True):
+    bs, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    bh = jnp.repeat(b, rep, axis=2)
+    ch = jnp.repeat(c, rep, axis=2)
+    rows = bs * h
+    xr = x.transpose(0, 2, 1, 3).reshape(rows, s, p)
+    dtr = dt.transpose(0, 2, 1).reshape(rows, s)
+    br = bh.transpose(0, 2, 1, 3).reshape(rows, s, n)
+    cr = ch.transpose(0, 2, 1, 3).reshape(rows, s, n)
+    ar = jnp.broadcast_to(a[None, :], (bs, h)).reshape(rows)
+    y, st = ssd_scan(xr, dtr, ar, br, cr, chunk=chunk, interpret=interpret)
+    y = y.reshape(bs, h, s, p).transpose(0, 2, 1, 3)
+    st = st.reshape(bs, h, p, n)
+    return y, st

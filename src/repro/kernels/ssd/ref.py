@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the SSD kernel — delegates to the model-side chunked
+implementation (repro.models.ssm.ssd_chunked), reshaped to the kernel's
+per-(batch*head) layout."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                 c: jax.Array, *, chunk: int = 128):
+    """Same signature as kernels.ssd.ssd_scan: x (BH,S,P), dt (BH,S),
+    a (BH,), b/c (BH,S,N) -> (y (BH,S,P), state (BH,P,N)).
+
+    Maps to ssd_chunked's (B, S, H, P) layout with H=1 per row; the per-head
+    decay a becomes a length-1 'head' axis per row. Computed row-by-row via
+    vmap to keep a single source of truth.
+    """
+
+    def one(xr, dtr, ar, br, cr):
+        y, st = ssd_chunked(xr[None, :, None, :], dtr[None, :, None],
+                            ar[None], br[None, :, None, :],
+                            cr[None, :, None, :], chunk)
+        return y[0, :, 0], st[0, 0]
+
+    return jax.vmap(one)(x, dt, a, b, c)

@@ -1,0 +1,24 @@
+"""Jit'd wrapper for ring-buffer decode attention via the Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.swa_attn.swa_attn import swa_decode_attention
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "softcap", "interpret"))
+def decode_attention_pallas(q: jax.Array, k_cache: jax.Array,
+                            v_cache: jax.Array, valid_len: jax.Array,
+                            block_kv: int = 128, softcap: float = 0.0,
+                            interpret: bool = True) -> jax.Array:
+    """Model layout: q (B, 1, H, D); caches (B, S, KV, D) un-repeated;
+    valid_len scalar or (B,). Returns (B, 1, H, D)."""
+    b = q.shape[0]
+    vl = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32).reshape(-1), (b,))
+    out = swa_decode_attention(q[:, 0], k_cache, v_cache, vl,
+                               block_kv=block_kv, softcap=softcap,
+                               interpret=interpret)
+    return out[:, None]

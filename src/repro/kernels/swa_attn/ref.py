@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the decode-attention kernel — delegates to the
+model-side implementation (repro.models.layers.decode_attention)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _repeat_kv, decode_attention
+
+
+def swa_decode_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                   valid_len: jax.Array, softcap: float = 0.0) -> jax.Array:
+    """q: (B, H, D); caches (B, S, KV, D); valid_len (B,) -> (B, H, D)."""
+    h = q.shape[1]
+    out = decode_attention(q[:, None, :, :],          # (B, 1, H, D)
+                           _repeat_kv(k_cache, h), _repeat_kv(v_cache, h),
+                           valid_len, softcap=softcap)
+    return out[:, 0]

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: sliding-window / ring-buffer decode attention.
+
+The long-context decode hot spot (decode_32k, long_500k shapes): ONE query
+token per sequence attends over a KV cache of up to window length. Flash
+style: KV blocks stream through VMEM with an online-softmax accumulator in
+scratch; invalid ring-buffer slots (beyond ``valid_len``) are masked. GQA is
+handled in the BlockSpec index map (query head -> kv head), so kv heads are
+never materialized repeated in HBM.
+
+grid = (B, H, kv_blocks) — kv_blocks innermost/sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_KV = 128
+
+
+def _swa_decode_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_ref, l_ref, acc_ref, *, block_kv: int,
+                       num_blocks: int, softcap: float):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (D,)
+    k = k_ref[0, :, 0].astype(jnp.float32)            # (Lk, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)            # (Lk, D)
+    scale = q.shape[0] ** -0.5
+    s = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale   # (Lk,)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    pos = j * block_kv + jax.lax.iota(jnp.int32, block_kv)
+    valid = pos < valid_ref[0, 0]
+    s = jnp.where(valid, s, -1e30)
+
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.exp(s - m_new)                            # (Lk,)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[0, 0] = l_ref[0, 0] * corr + jnp.sum(p)
+    acc_ref[0] = acc_ref[0] * corr + jnp.dot(p, v,
+                                             preferred_element_type=jnp.float32)
+    m_ref[0, 0] = m_new
+
+    @pl.when(j == num_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[0]
+                       / jnp.maximum(l_ref[0, 0], 1e-30)).astype(o_ref.dtype)
+
+
+def swa_decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         valid_len: jax.Array, *,
+                         block_kv: int = DEFAULT_BLOCK_KV,
+                         softcap: float = 0.0,
+                         interpret: bool = True) -> jax.Array:
+    """q: (B, H, D); k/v_cache: (B, S, KV, D); valid_len: (B,) int32.
+    Returns (B, H, D)."""
+    b, h, d = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    rep = h // kv
+    block_kv = min(block_kv, s)
+    assert s % block_kv == 0, (s, block_kv)
+    nb = s // block_kv
+    kernel = functools.partial(_swa_decode_kernel, block_kv=block_kv,
+                               num_blocks=nb, softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, hh, j: (i, 0)),
+            pl.BlockSpec((1, 1, d), lambda i, hh, j: (i, hh, 0)),
+            pl.BlockSpec((1, block_kv, 1, d),
+                         lambda i, hh, j: (i, j, hh // rep, 0)),
+            pl.BlockSpec((1, block_kv, 1, d),
+                         lambda i, hh, j: (i, j, hh // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda i, hh, j: (i, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(valid_len.reshape(b, 1).astype(jnp.int32), q, k_cache, v_cache)

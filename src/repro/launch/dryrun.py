@@ -1,0 +1,477 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape x mesh) combination this lowers and
+compiles the appropriate step function against ShapeDtypeStruct inputs (no
+allocation), records memory/cost analysis + the collective schedule parsed
+from the optimized HLO, and writes one JSON artifact per combo under
+``artifacts/dryrun/``. benchmarks/roofline.py turns those artifacts into the
+EXPERIMENTS.md tables.
+
+Usage:
+  python -m repro.launch.dryrun --arch mamba2-1.3b --shape train_4k
+  python -m repro.launch.dryrun --all                 # 10x4, single-pod
+  python -m repro.launch.dryrun --all --multi-pod     # 10x4, 2x16x16
+  python -m repro.launch.dryrun --all --both
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps as steps_lib
+from repro.launch.analytic import analytic_cost
+from repro.sharding import specs as sh
+
+COLLECTIVE_OP_RE = re.compile(
+    r"=\s+(.*?)\s(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3": 1,
+               "f8e5m2": 1, "s16": 2, "u16": 2}
+
+
+def _collective_on_line(line: str):
+    """Returns (kind, result_bytes) or None. Handles tuple-shaped results
+    (GSPMD lowers FSDP all-gathers as DUS + tuple all-reduce, and fuses many
+    gradient reductions into one tuple all-reduce)."""
+    m = COLLECTIVE_OP_RE.search(line)
+    if m is None:
+        return None
+    result_types, kind = m.group(1), m.group(2)
+    total = 0
+    for dt, dims in SHAPE_RE.findall(result_types):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return (kind, total) if total else None
+
+_COMP_HEAD_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_CALL_RE = re.compile(r"(?:calls|body|condition)=\{?%?([\w.\-]+)")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, list]:
+    comps: Dict[str, list] = {}
+    cur = None
+    entry = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HEAD_RE.match(line.strip()) if "{" in line else None
+        if m and not line.startswith(" "):
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+        elif cur is not None:
+            comps[cur].append(line)
+    comps["__entry__"] = entry
+    return comps
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Sum result-buffer bytes of every collective in the (SPMD-partitioned,
+    per-device) optimized HLO — LOOP-AWARE: collectives inside while-loop
+    bodies are multiplied by the loop trip count (XLA's own cost analysis
+    counts loop bodies once; scan-over-layers would otherwise undercount by
+    ~num_layers). Trip counts are read from the largest s32 constant in the
+    loop-condition computation (the scan bound)."""
+    comps = _split_computations(hlo_text)
+    entry = comps.pop("__entry__")
+
+    info: Dict[str, dict] = {}
+    for name, lines in comps.items():
+        colls, calls, whiles = [], [], []
+        for line in lines:
+            cb = _collective_on_line(line)
+            if cb is not None:
+                colls.append(cb)
+            wm = _WHILE_RE.search(line)
+            if wm:
+                whiles.append((wm.group(1), wm.group(2)))
+            else:
+                for c in _CALL_RE.findall(line):
+                    calls.append(c)
+        info[name] = {"colls": colls, "calls": calls, "whiles": whiles}
+
+    def trip_count(cond_name: str) -> int:
+        consts = []
+        for line in comps.get(cond_name, []):
+            consts += [int(x) for x in _CONST_RE.findall(line)]
+        big = [c for c in consts if c > 1]
+        return max(big) if big else 1
+
+    per_kind: Dict[str, float] = {}
+    count: Dict[str, int] = {}
+    seen: set = set()
+
+    def visit(name: str, mult: float, depth: int = 0):
+        if name not in info or depth > 50:
+            return
+        key = (name, mult)
+        if key in seen:
+            return
+        seen.add(key)
+        for kind, b in info[name]["colls"]:
+            per_kind[kind] = per_kind.get(kind, 0) + b * mult
+            count[kind] = count.get(kind, 0) + 1
+        for cond, body in info[name]["whiles"]:
+            visit(body, mult * trip_count(cond), depth + 1)
+        for callee in info[name]["calls"]:
+            visit(callee, mult, depth + 1)
+
+    if entry:
+        visit(entry, 1.0)
+    return {"bytes_per_kind": per_kind,
+            "count_per_kind": count,
+            "total_bytes": sum(per_kind.values())}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6*N_active*D (train) / 2*N_active*D (prefill/decode)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: one token per seq
+
+
+def build_lowering(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                   *, attn_mode: str = "auto", rules=None,
+                   ce_impl: str = "gather", preset: str = "tp",
+                   constrain_batch: bool = False,
+                   cache_shard: str = "largest"):
+    """Returns (lowered, meta) for the right step kind."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    ns = lambda spec: NamedSharding(mesh, spec)
+    if rules is None and preset != "tp":
+        rules = sh.preset_rules(preset, mesh)
+    pspecs = sh.param_spec_tree(cfg, mesh, rules)
+    pshard = jax.tree.map(ns, pspecs,
+                          is_leaf=lambda x: isinstance(x, PartitionSpec))
+    params_abs = steps_lib.abstract_model_params(cfg)
+    bspec = sh.batch_spec(mesh, shape.global_batch,
+                          include_model=(preset == "dp"))
+    batch_axes = (bspec[0] if (constrain_batch and len(bspec)) else None)
+
+    def tok_shard(spec_struct):
+        dims = [None] * len(spec_struct.shape)
+        dims[0] = bspec[0] if len(bspec) else None
+        return ns(PartitionSpec(*dims))
+
+    if shape.kind == "train":
+        opt = steps_lib.default_optimizer()
+        step = steps_lib.make_train_step(cfg, opt, attn_mode=attn_mode,
+                                         ce_impl=ce_impl,
+                                         batch_axes=batch_axes)
+        opt_abs = steps_lib.abstract_opt_state(cfg, opt)
+        opt_shard = {"step": ns(PartitionSpec()), "m": pshard, "v": pshard}
+        batch_abs = steps_lib.input_specs(cfg, shape)
+        batch_shard = {k: tok_shard(v) for k, v in batch_abs.items()}
+        lowered = jax.jit(
+            step,
+            in_shardings=(pshard, opt_shard, batch_shard),
+            out_shardings=(pshard, opt_shard, None),
+        ).lower(params_abs, opt_abs, batch_abs)
+        return lowered
+
+    if shape.kind == "prefill":
+        step = steps_lib.make_prefill_step(cfg, shape, attn_mode=attn_mode,
+                                           batch_axes=batch_axes)
+        batch_abs = steps_lib.input_specs(cfg, shape)
+        batch_shard = {k: tok_shard(v) for k, v in batch_abs.items()}
+        lowered = jax.jit(
+            step, in_shardings=(pshard, batch_shard),
+        ).lower(params_abs, batch_abs)
+        return lowered
+
+    # decode
+    step = steps_lib.make_serve_step(cfg, shape)
+    ispec = steps_lib.input_specs(cfg, shape)
+    window = steps_lib.decode_window(cfg, shape)
+    cache_specs_tree = sh.cache_spec_tree(cfg, mesh, shape.global_batch,
+                                          shape.seq_len, window,
+                                          prefer=cache_shard)
+    cache_shard = jax.tree.map(ns, cache_specs_tree,
+                               is_leaf=lambda x: isinstance(x, PartitionSpec))
+    lowered = jax.jit(
+        step,
+        in_shardings=(pshard, cache_shard, tok_shard(ispec["tokens"]),
+                      ns(PartitionSpec())),
+        out_shardings=(None, cache_shard),
+    ).lower(params_abs, ispec["cache"], ispec["tokens"],
+            ispec["cache_index"])
+    return lowered
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            out_dir: str = "artifacts/dryrun", attn_mode: str = "auto",
+            tag: str = "", rules=None, verbose: bool = True,
+            ce_impl: str = "gather", param_dtype: str = "",
+            preset: str = "tp", constrain_batch: bool = False,
+            expert_axis: str = "", cache_shard: str = "largest",
+            cfg_override=None) -> Dict[str, Any]:
+    import dataclasses as _dc
+    cfg = cfg_override or configs.get_arch(arch)
+    if param_dtype:
+        cfg = _dc.replace(cfg, param_dtype=param_dtype)
+    if expert_axis and cfg.moe is not None:
+        cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe,
+                                               expert_axis=expert_axis))
+    shape = configs.get_shape(shape_name)
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(map(str, mesh.devices.shape))
+    chips = mesh.devices.size
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": chips, "kind": shape.kind, "attn_mode": attn_mode,
+        "ce_impl": ce_impl, "param_dtype": cfg.param_dtype,
+        "preset": preset, "constrain_batch": constrain_batch,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+        "attn_variant": ("swa-%d (long-context variant)" % cfg.long_context_window
+                         if shape.name == "long_500k" and not cfg.sliding_window
+                         else ("swa-%d" % cfg.sliding_window
+                               if cfg.sliding_window else "full")),
+    }
+    t0 = time.time()
+    try:
+        with mesh:
+            lowered = build_lowering(cfg, shape, mesh, attn_mode=attn_mode,
+                                     rules=rules, ce_impl=ce_impl,
+                                     preset=preset,
+                                     constrain_batch=constrain_batch,
+                                     cache_shard=cache_shard)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            ma = compiled.memory_analysis()
+            ca = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        coll = parse_collectives(hlo)
+        flops_dev_xla = float(ca.get("flops", 0.0))
+        bytes_dev_xla = float(ca.get("bytes accessed", 0.0))
+        mf = model_flops(cfg, shape)
+        an = analytic_cost(cfg, shape, chips, attn_mode=attn_mode)
+        flops_dev = an["flops_per_device"]
+        bytes_dev = an["bytes_per_device"]
+        rec.update({
+            "ok": True,
+            "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+            # XLA numbers are lower bounds: while/scan bodies counted ONCE
+            "xla_flops_per_device_body_once": flops_dev_xla,
+            "xla_bytes_per_device_body_once": bytes_dev_xla,
+            # analytic napkin-math totals (repro.launch.analytic)
+            "hlo_flops_per_device": flops_dev,
+            "hlo_bytes_per_device": bytes_dev,
+            "attn_context_tokens": an["attn_context_tokens"],
+            "collectives": coll,
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+            } if ma is not None else None,
+            "model_flops_global": mf,
+            "model_flops_per_device": mf / chips,
+            # roofline terms (seconds) — TPU v5e constants
+            "t_compute": flops_dev / mesh_lib.PEAK_FLOPS_BF16,
+            "t_memory": bytes_dev / mesh_lib.HBM_BW,
+            "t_collective": coll["total_bytes"] / mesh_lib.ICI_BW,
+            "useful_flops_ratio": mf / chips / max(flops_dev, 1.0),
+        })
+        terms = {"compute": rec["t_compute"], "memory": rec["t_memory"],
+                 "collective": rec["t_collective"]}
+        rec["bottleneck"] = max(terms, key=terms.get)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep matrix going
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+    rec["wall_s"] = round(time.time() - t0, 2)
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"--{tag}" if tag else ""
+    path = os.path.join(out_dir, f"{arch}--{shape_name}--{mesh_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if verbose:
+        if rec["ok"]:
+            print(f"[dryrun] {arch:24s} {shape_name:12s} {mesh_name:8s} OK "
+                  f"compile={rec['compile_s']:7.1f}s "
+                  f"flops/dev={rec['hlo_flops_per_device']:.3e} "
+                  f"coll={rec['collectives']['total_bytes']:.3e}B "
+                  f"bottleneck={rec['bottleneck']}", flush=True)
+        else:
+            print(f"[dryrun] {arch:24s} {shape_name:12s} {mesh_name:8s} "
+                  f"FAIL {rec['error']}", flush=True)
+    return rec
+
+
+def run_aggregate(arch: str, multi_pod: bool,
+                  out_dir: str = "artifacts/dryrun",
+                  gmis_mode: str = "ring") -> Dict[str, Any]:
+    """Lower + compile the AsyncFedED AGGREGATION step itself (Eq. 5-7) with
+    the global model sharded over the production mesh — the paper's server
+    op at 72B-parameter scale (DESIGN.md: the server is sharded; no
+    single-host bottleneck)."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.core.aggregation import (asyncfeded_aggregate,
+                                        asyncfeded_aggregate_with_dist)
+    cfg = configs.get_arch(arch)
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(map(str, mesh.devices.shape))
+    chips = mesh.devices.size
+    ns = lambda spec: NamedSharding(mesh, spec)
+    pspecs = sh.param_spec_tree(cfg, mesh)
+    pshard = jax.tree.map(ns, pspecs,
+                          is_leaf=lambda x: isinstance(x, PartitionSpec))
+    params_abs = steps_lib.abstract_model_params(cfg)
+    rec: Dict[str, Any] = {"arch": arch, "mesh": mesh_name, "chips": chips,
+                           "kind": "aggregate", "gmis_mode": gmis_mode,
+                           "params": cfg.param_count()}
+    t0 = time.time()
+    try:
+        with mesh:
+            if gmis_mode == "displacement":
+                fn = lambda x, dist, d: asyncfeded_aggregate_with_dist(
+                    x, dist, d, lam=1.0, eps=1.0)
+                lowered = jax.jit(
+                    fn, in_shardings=(pshard, ns(PartitionSpec()), pshard),
+                ).lower(params_abs,
+                        jax.ShapeDtypeStruct((), jnp_f32()), params_abs)
+            else:
+                fn = lambda x, xs, d: asyncfeded_aggregate(
+                    x, xs, d, lam=1.0, eps=1.0)
+                lowered = jax.jit(
+                    fn, in_shardings=(pshard, pshard, pshard),
+                ).lower(params_abs, params_abs, params_abs)
+            compiled = lowered.compile()
+            ca = compiled.cost_analysis()
+            ma = compiled.memory_analysis()
+            coll = parse_collectives(compiled.as_text())
+        nbytes = cfg.param_count() * 4
+        rec.update({
+            "ok": True,
+            "compile_s": round(time.time() - t0, 2),
+            "xla_flops_per_device": float(ca.get("flops", 0.0)),
+            "xla_bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+            "collectives": coll,
+            "memory": {"argument_bytes": ma.argument_size_in_bytes,
+                       "temp_bytes": ma.temp_size_in_bytes}
+            if ma else None,
+            # the op is pure streaming: per-device HBM traffic =
+            # read (x_t, x_stale|-, delta) + write x_{t+1}
+            "analytic_bytes_per_device":
+                nbytes / chips * (4 if gmis_mode == "ring" else 3),
+            "t_memory": nbytes / chips * (4 if gmis_mode == "ring" else 3)
+                        / mesh_lib.HBM_BW,
+            "t_collective": coll["total_bytes"] / mesh_lib.ICI_BW,
+        })
+    except Exception as e:  # noqa: BLE001
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}"})
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir,
+                        f"{arch}--aggregate-{gmis_mode}--{mesh_name}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = "OK" if rec["ok"] else f"FAIL {rec.get('error')}"
+    print(f"[dryrun] {arch:24s} aggregate/{gmis_mode:12s} {mesh_name:8s} "
+          f"{status}", flush=True)
+    return rec
+
+
+def jnp_f32():
+    import jax.numpy as jnp
+    return jnp.float32
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both", action="store_true",
+                    help="run single-pod AND multi-pod meshes")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape)")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--attn-mode", default="auto")
+    ap.add_argument("--ce-impl", default="gather")
+    ap.add_argument("--param-dtype", default="")
+    ap.add_argument("--preset", default="tp", choices=["tp", "dp", "ep"])
+    ap.add_argument("--constrain-batch", action="store_true")
+    ap.add_argument("--expert-axis", default="")
+    ap.add_argument("--cache-shard", default="largest",
+                    choices=["largest", "last"])
+    ap.add_argument("--aggregate", action="store_true",
+                    help="lower the AsyncFedED aggregation step instead of "
+                         "a model step")
+    ap.add_argument("--gmis-mode", default="ring",
+                    choices=["ring", "displacement"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.aggregate:
+        n_fail = 0
+        archs = (configs.ALL_ARCH_IDS if (args.all or not args.arch)
+                 else [args.arch])
+        meshes = [False, True] if args.both else [args.multi_pod]
+        for mp in meshes:
+            for arch in archs:
+                rec = run_aggregate(arch, mp, out_dir=args.out,
+                                    gmis_mode=args.gmis_mode)
+                n_fail += 0 if rec["ok"] else 1
+        raise SystemExit(1 if n_fail else 0)
+
+    archs = configs.ALL_ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = ([s.name for s in configs.ALL_SHAPES]
+              if (args.all or not args.shape) else [args.shape])
+    meshes = [False, True] if args.both else [args.multi_pod]
+
+    n_fail = 0
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                suffix = f"--{args.tag}" if args.tag else ""
+                path = os.path.join(
+                    args.out, f"{arch}--{shape}--{mesh_name}{suffix}.json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("ok"):
+                            print(f"[dryrun] skip existing {path}", flush=True)
+                            continue
+                rec = run_one(arch, shape, mp, out_dir=args.out,
+                              attn_mode=args.attn_mode, tag=args.tag,
+                              ce_impl=args.ce_impl,
+                              param_dtype=args.param_dtype,
+                              preset=args.preset,
+                              constrain_batch=args.constrain_batch,
+                              expert_axis=args.expert_axis,
+                              cache_shard=args.cache_shard)
+                n_fail += 0 if rec["ok"] else 1
+    print(f"[dryrun] done, failures: {n_fail}", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

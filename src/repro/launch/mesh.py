@@ -1,0 +1,35 @@
+"""Production meshes.
+
+Single pod: 16 x 16 = 256 chips (TPU v5e pod), axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model) — the ``pod``
+axis is the federated-client axis (DESIGN.md §3).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; the dry-run sets XLA_FLAGS before the first jax call.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(shape: Optional[Tuple[int, ...]] = None,
+                   axes: Tuple[str, ...] = ("data", "model")):
+    """Small mesh over whatever devices exist (CPU tests: (1, 1))."""
+    n = len(jax.devices())
+    if shape is None:
+        shape = (n,) + (1,) * (len(axes) - 1)
+    return jax.make_mesh(shape, axes)
+
+
+# Hardware constants for the roofline model (TPU v5e)
+PEAK_FLOPS_BF16 = 197e12          # per chip, bf16
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link

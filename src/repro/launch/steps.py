@@ -1,0 +1,141 @@
+"""Step functions (train / prefill / serve) + abstract input specs.
+
+These are the programs the dry-run lowers for every (arch x shape x mesh)
+combination, and that the examples run for real at reduced scale.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.models.layers import cross_entropy
+from repro.models.params import abstract_params
+from repro.optim import adamw
+from repro.optim.optimizers import Optimizer, apply_updates
+
+PyTree = Any
+
+
+def decode_window(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """KV window for decode shapes. Natively-windowed archs use their own
+    window; full-attention archs switch to the sliding-window variant ONLY
+    for long_500k (DESIGN.md §5); decode_32k keeps the full cache."""
+    if cfg.sliding_window:
+        return cfg.sliding_window
+    if shape.name == "long_500k":
+        return cfg.long_context_window
+    return 0
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            toks = jax.ShapeDtypeStruct((b, cfg.num_codebooks, s), i32)
+        else:
+            toks = jax.ShapeDtypeStruct((b, s), i32)
+        specs: Dict[str, Any] = {"tokens": toks}
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct(toks.shape, i32)
+        if cfg.family == "vlm" and cfg.max_patches:
+            npatch = min(cfg.max_patches, s)
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, npatch, cfg.vision_embed_dim), jnp.bfloat16)
+        return specs
+    # decode: ONE new token against a cache of seq_len
+    if cfg.family == "audio":
+        toks = jax.ShapeDtypeStruct((b, cfg.num_codebooks, 1), i32)
+    else:
+        toks = jax.ShapeDtypeStruct((b, 1), i32)
+    return {
+        "tokens": toks,
+        "cache": M.cache_specs(cfg, b, s, decode_window(cfg, shape)),
+        "cache_index": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def abstract_model_params(cfg: ModelConfig) -> PyTree:
+    return abstract_params(M.model_defs(cfg), cfg.param_dtype)
+
+
+def abstract_opt_state(cfg: ModelConfig, optimizer: Optimizer) -> PyTree:
+    """eval_shape the optimizer init against abstract params."""
+    params = abstract_model_params(cfg)
+    return jax.eval_shape(optimizer.init, params)
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, *,
+                    q_chunk: int = 1024, kv_chunk: int = 1024,
+                    attn_mode: str = "auto", remat: bool = True,
+                    skip_masked_blocks: bool = True,
+                    ce_impl: str = "gather", batch_axes=None) -> Callable:
+    def train_step(params: PyTree, opt_state: PyTree, batch: Dict[str, Any]):
+        def loss_fn(p):
+            logits, aux, _ = M.forward(
+                p, batch["tokens"], cfg,
+                patch_embeds=batch.get("patch_embeds"),
+                remat=remat, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                attn_mode=attn_mode, skip_masked_blocks=skip_masked_blocks,
+                batch_axes=batch_axes)
+            labels = batch["labels"]
+            if cfg.family == "audio":
+                labels = labels.transpose(0, 2, 1)      # (B,Q,S)->(B,S,Q)
+            ce = cross_entropy(logits, labels, impl=ce_impl)
+            return ce + aux, ce
+
+        (loss, ce), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        updates, new_opt = optimizer.update(grads, opt_state, params)
+        new_params = apply_updates(params, updates)
+        return new_params, new_opt, {"loss": loss, "ce": ce}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig, *,
+                      q_chunk: int = 1024, kv_chunk: int = 1024,
+                      attn_mode: str = "auto",
+                      skip_masked_blocks: bool = True,
+                      batch_axes=None) -> Callable:
+    window = cfg.sliding_window
+
+    def prefill_step(params: PyTree, batch: Dict[str, Any]):
+        logits, _, caches = M.forward(
+            params, batch["tokens"], cfg,
+            patch_embeds=batch.get("patch_embeds"),
+            window=window, collect_cache=True, remat=False,
+            q_chunk=q_chunk, kv_chunk=kv_chunk, attn_mode=attn_mode,
+            skip_masked_blocks=skip_masked_blocks, logits_slice=1,
+            batch_axes=batch_axes)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, shape: ShapeConfig) -> Callable:
+    window = decode_window(cfg, shape)
+
+    def serve_step(params: PyTree, cache: PyTree, tokens: jax.Array,
+                   cache_index: jax.Array):
+        logits, new_cache = M.decode_step(params, cache, tokens, cache_index,
+                                          cfg, window=window)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    return serve_step
+
+
+def default_optimizer() -> Optimizer:
+    return adamw(3e-4, weight_decay=0.1)

@@ -1,0 +1,3 @@
+from repro.models import layers, model, moe, params, rglru, small, ssm
+
+__all__ = ["layers", "model", "moe", "params", "rglru", "small", "ssm"]

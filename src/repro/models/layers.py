@@ -1,0 +1,452 @@
+"""Core neural-net primitives: norms, RoPE/M-RoPE, attention, MLPs.
+
+All functions are pure: ``fwd(params, x, ...) -> y``. Parameter trees are
+declared next to each forward via ``*_defs`` so shapes/sharding stay in sync.
+
+Attention uses a chunked (flash-style) streaming softmax for train/prefill so
+that the S x S score matrix is never materialized — mandatory at 32k context.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamDef
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_defs(cfg: ModelConfig, width: Optional[int] = None) -> Dict[str, ParamDef]:
+    w = width or cfg.d_model
+    d = {"scale": ParamDef((w,), ("embed",), init="ones")}
+    if cfg.norm == "layernorm":
+        d["bias"] = ParamDef((w,), ("embed",), init="zeros")
+    return d
+
+
+def norm_fwd(p, x: jax.Array, kind: str) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = ((xf - mu) * jax.lax.rsqrt(var + 1e-5)
+             * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE and Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def mrope_sections(head_dim: int) -> Tuple[int, int, int]:
+    """(temporal, height, width) frequency sections; Qwen2-VL uses 16/24/24
+    of the 64 half-dims at head_dim=128 — we keep those proportions."""
+    half = head_dim // 2
+    t = max(1, round(half * 0.25))
+    h = max(1, round(half * 0.375))
+    return (t, h, half - t - h)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               mrope: bool = False) -> jax.Array:
+    """x: (B, S, H, D). positions: (B, S) or (3, B, S) for M-RoPE."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)          # (half,)
+    if mrope:
+        if positions.ndim == 2:                   # text-only: t=h=w=pos
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        t, h, w = mrope_sections(head_dim)
+        sec = jnp.concatenate([
+            jnp.zeros((t,), jnp.int32),
+            jnp.ones((h,), jnp.int32),
+            jnp.full((w,), 2, jnp.int32),
+        ])                                        # (half,) -> which component
+        # angle[b, s, k] = positions[sec[k], b, s] * freqs[k]
+        pos_sel = jnp.take_along_axis(
+            positions.transpose(1, 2, 0),         # (B, S, 3)
+            jnp.broadcast_to(sec[None, None, :],
+                             positions.shape[1:] + sec.shape), axis=-1)
+        angles = pos_sel.astype(jnp.float32) * freqs  # (B, S, half)
+    else:
+        angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]          # (B, S, 1, half)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, hd = cfg.d_model, cfg.head_dim
+    defs = {
+        "wq": ParamDef((d, cfg.num_heads, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, cfg.num_kv_heads, hd),
+                       ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d, cfg.num_kv_heads, hd),
+                       ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((cfg.num_heads, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((cfg.num_heads, hd), ("heads", None), init="zeros")
+        defs["bk"] = ParamDef((cfg.num_kv_heads, hd), ("kv_heads", None), init="zeros")
+        defs["bv"] = ParamDef((cfg.num_kv_heads, hd), ("kv_heads", None), init="zeros")
+    return defs
+
+
+def _repeat_kv(k: jax.Array, num_heads: int) -> jax.Array:
+    """(B, S, KV, D) -> (B, S, H, D) by repeating each kv head."""
+    b, s, kv, d = k.shape
+    rep = num_heads // kv
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      *, causal: bool, window: int = 0,
+                      q_offset: int = 0,
+                      q_chunk: int = 1024, kv_chunk: int = 1024,
+                      skip_masked_blocks: bool = True,
+                      softcap: float = 0.0, mode: str = "auto") -> jax.Array:
+    """Flash-style streaming-softmax attention, pure jnp.
+
+    q: (B, Sq, H, D); k/v: (B, Skv, H, D) (kv heads already repeated).
+
+    Two lowerings:
+    * ``unrolled`` — python loops over (q, kv) chunk pairs; pairs that are
+      entirely masked by causality/window are STATICALLY SKIPPED — half the
+      attention FLOPs for causal prefill (`skip_masked_blocks`).
+    * ``scan``     — lax.scan over kv chunks vmapped over q chunks: compact
+      HLO (O(1) in chunk count) but computes every masked block.
+    ``auto`` picks unrolled for small grids and scan for long sequences.
+    """
+    if mode == "auto":
+        nq_ = max(1, q.shape[1] // min(q_chunk, q.shape[1]))
+        nkv_ = max(1, k.shape[1] // min(kv_chunk, k.shape[1]))
+        mode = "unrolled" if nq_ * nkv_ <= 64 else "scan"
+    if mode == "scan":
+        return _scan_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, q_chunk=q_chunk,
+                               kv_chunk=kv_chunk, softcap=softcap)
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    scale = d ** -0.5
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq, nkv = sq // q_chunk, skv // kv_chunk
+    assert sq % q_chunk == 0 and skv % kv_chunk == 0, (sq, q_chunk, skv, kv_chunk)
+
+    kc = k.reshape(b, nkv, kv_chunk, h, d)
+    vc = v.reshape(b, nkv, kv_chunk, h, d)
+
+    def block_visible(qi: int, ki: int) -> bool:
+        """Can any (query, key) pair in this block attend?"""
+        q_lo = q_offset + qi * q_chunk
+        q_hi = q_lo + q_chunk - 1
+        k_lo, k_hi = ki * kv_chunk, ki * kv_chunk + kv_chunk - 1
+        if causal and k_lo > q_hi:
+            return False                                    # all in the future
+        if window and k_hi < (q_lo - window + 1):
+            return False                                    # all out of window
+        return True
+
+    def attend_block(qblk, qi: int, ki: int):
+        kb, vb = kc[:, ki], vc[:, ki]                        # (B, Ck, H, D)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kb,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+        mask = jnp.ones((q_chunk, kv_chunk), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > (qpos[:, None] - window)
+        s = jnp.where(mask[None, None], s, -1e30)
+        return s, vb
+
+    out = jnp.zeros((b, sq, h, d), jnp.float32)
+    outs = []
+    for qi in range(nq):
+        qblk = q[:, qi * q_chunk:(qi + 1) * q_chunk]
+        m = jnp.full((b, h, q_chunk), -1e30, jnp.float32)
+        l = jnp.zeros((b, h, q_chunk), jnp.float32)
+        acc = jnp.zeros((b, h, q_chunk, d), jnp.float32)
+        for ki in range(nkv):
+            if skip_masked_blocks and not block_visible(qi, ki):
+                continue
+            s, vb = attend_block(qblk, qi, ki)               # (B,H,Cq,Ck)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
+            m = m_new
+        blk = acc / jnp.maximum(l[..., None], 1e-30)
+        outs.append(blk.transpose(0, 2, 1, 3))               # (B,Cq,H,D)
+    out = jnp.concatenate(outs, axis=1)
+    return out.astype(q.dtype)
+
+
+def _scan_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool, window: int, q_offset: int,
+                    q_chunk: int, kv_chunk: int, softcap: float) -> jax.Array:
+    """Compact-HLO flash attention: vmap over q chunks, lax.scan over kv."""
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq, nkv = sq // q_chunk, skv // kv_chunk
+    assert sq % q_chunk == 0 and skv % kv_chunk == 0
+    scale = d ** -0.5
+    qc = q.reshape(b, nq, q_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(b, nkv, kv_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nkv, kv_chunk, h, d).transpose(1, 0, 2, 3, 4)
+
+    def per_q_chunk(qi, qblk):                       # qblk: (B, Cq, H, D)
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, kb, vb = inp
+            s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kb,
+                           preferred_element_type=jnp.float32) * scale
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window:
+                mask &= kpos[None, :] > (qpos[:, None] - window)
+            s = jnp.where(mask[None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        init = (jnp.full((b, h, q_chunk), -1e30, jnp.float32),
+                jnp.zeros((b, h, q_chunk), jnp.float32),
+                jnp.zeros((b, h, q_chunk, d), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, (jnp.arange(nkv), kc, vc))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 2, 1, 3)             # (B, Cq, H, D)
+
+    out = jax.vmap(per_q_chunk)(jnp.arange(nq), qc)  # (nq, B, Cq, H, D)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     valid_len, *, softcap: float = 0.0) -> jax.Array:
+    """One-token decode. q: (B, 1, H, D); caches: (B, S, H, D) (kv repeated).
+
+    ``valid_len`` may be a scalar or (B,) lengths; positions >= valid_len are
+    masked (for ring-buffer windows the whole buffer is valid and valid_len
+    equals the buffer size).
+    """
+    b, s, h, d = k_cache.shape
+    scale = d ** -0.5
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q, k_cache,
+                    preferred_element_type=jnp.float32) * scale
+    if softcap:
+        sc = jnp.tanh(sc / softcap) * softcap
+    pos = jnp.arange(s)
+    valid = pos[None, :] < jnp.asarray(valid_len).reshape(-1, 1)
+    sc = jnp.where(valid[:, None, None, :], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_fwd(p, x: jax.Array, positions: jax.Array, cfg: ModelConfig,
+                  *, window: int, kv_cache=None, cache_index=None,
+                  q_chunk: int = 1024, kv_chunk: int = 1024,
+                  skip_masked_blocks: bool = True, attn_mode: str = "auto"):
+    """Full attention block. Returns (y, new_kv) where new_kv is
+    (k, v) of this call (for prefill cache building) or the updated cache.
+
+    Train/prefill: kv_cache is None -> chunked causal attention over x itself.
+    Decode: kv_cache = (k, v) ring/linear buffers, cache_index = write slot.
+    """
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = apply_rope(q, positions, cfg.rope_theta, mrope=cfg.mrope)
+    k = apply_rope(k, positions, cfg.rope_theta, mrope=cfg.mrope)
+
+    if kv_cache is None:
+        kr = _repeat_kv(k, cfg.num_heads)
+        vr = _repeat_kv(v, cfg.num_heads)
+        o = chunked_attention(q, kr, vr, causal=True, window=window,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk,
+                              skip_masked_blocks=skip_masked_blocks,
+                              softcap=cfg.attn_logit_softcap, mode=attn_mode)
+        new_cache = (k, v)
+    else:
+        k_cache, v_cache = kv_cache
+        slot = cache_index % k_cache.shape[1]                 # ring buffer
+        # masked write instead of dynamic_update_slice: a DUS at a traced
+        # slot into a sharded cache breaks GSPMD propagation (the partitioner
+        # replicates + re-gathers the WHOLE cache every step — observed
+        # 51 GB/step); the iota select is elementwise and stays shard-local.
+        sel = (jnp.arange(k_cache.shape[1]) == slot)[None, :, None, None]
+        k_cache = jnp.where(sel, k.astype(k_cache.dtype), k_cache)
+        v_cache = jnp.where(sel, v.astype(v_cache.dtype), v_cache)
+        valid = jnp.minimum(cache_index + 1, k_cache.shape[1])
+        o = decode_attention(q, _repeat_kv(k_cache, cfg.num_heads),
+                             _repeat_kv(v_cache, cfg.num_heads), valid,
+                             softcap=cfg.attn_logit_softcap)
+        new_cache = (k_cache, v_cache)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_defs(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.activation in ("swiglu", "geglu"):
+        return {
+            "wi_gate": ParamDef((d, f), ("embed", "mlp")),
+            "wi_up": ParamDef((d, f), ("embed", "mlp")),
+            "wo": ParamDef((f, d), ("mlp", "embed")),
+        }
+    return {
+        "wi": ParamDef((d, f), ("embed", "mlp")),
+        "wo": ParamDef((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp_fwd(p, x: jax.Array, activation: str) -> jax.Array:
+    dt = x.dtype
+    if activation in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, p["wi_gate"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", x, p["wi_up"].astype(dt))
+        act = jax.nn.silu(g) if activation == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dt))
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head / loss
+# ---------------------------------------------------------------------------
+
+
+def embed_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    defs = {"tok": ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                            scale=1.0)}
+    if cfg.family == "audio" and cfg.num_codebooks > 1:
+        defs["tok_extra"] = ParamDef(
+            (cfg.num_codebooks - 1, cfg.vocab_size, cfg.d_model),
+            (None, "vocab", "embed"), scale=1.0)
+    if cfg.family == "vlm" and cfg.vision_embed_dim:
+        defs["vision_proj"] = ParamDef(
+            (cfg.vision_embed_dim, cfg.d_model), (None, "embed"))
+    return defs
+
+
+def head_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    defs = {}
+    if not cfg.tie_embeddings:
+        defs["out"] = ParamDef((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    if cfg.family == "audio" and cfg.num_codebooks > 1:
+        defs["out_extra"] = ParamDef(
+            (cfg.num_codebooks - 1, cfg.d_model, cfg.vocab_size),
+            (None, "embed", "vocab"))
+    return defs
+
+
+def embed_fwd(p, tokens: jax.Array, cfg: ModelConfig,
+              patch_embeds: Optional[jax.Array] = None) -> jax.Array:
+    """tokens: (B, S) int32, or (B, Q, S) for multi-codebook audio."""
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "audio" and cfg.num_codebooks > 1:
+        x = jnp.take(p["tok"], tokens[:, 0], axis=0)
+        for q in range(cfg.num_codebooks - 1):
+            x = x + jnp.take(p["tok_extra"][q], tokens[:, q + 1], axis=0)
+    else:
+        x = jnp.take(p["tok"], tokens, axis=0)
+    x = x.astype(dt)
+    if patch_embeds is not None and "vision_proj" in p:
+        proj = jnp.einsum("bpe,ed->bpd", patch_embeds.astype(dt),
+                          p["vision_proj"].astype(dt))
+        npatch = proj.shape[1]
+        x = jax.lax.dynamic_update_slice_in_dim(x, proj, 0, axis=1)
+        del npatch
+    return x
+
+
+def head_fwd(p_head, p_embed, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = x.dtype
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, p_embed["tok"].astype(dt))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, p_head["out"].astype(dt))
+    if cfg.family == "audio" and cfg.num_codebooks > 1:
+        extra = jnp.einsum("bsd,qdv->bsqv", x, p_head["out_extra"].astype(dt))
+        logits = jnp.concatenate([logits[:, :, None, :], extra], axis=2)
+    return logits
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None,
+                  impl: str = "gather") -> jax.Array:
+    """Mean next-token CE. logits: (..., V) bf16 ok, computed in f32.
+
+    impl="onehot": select the gold logit with an iota comparison + reduction
+    instead of take_along_axis. Under GSPMD with vocab-sharded logits the
+    gather forces cross-shard data movement of the whole (B, S, V) tensor;
+    the iota select stays shard-local and reduces with a tiny psum
+    (§Perf lever, see EXPERIMENTS.md).
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    if impl == "onehot":
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                        logits.ndim - 1)
+        gold = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0),
+                       axis=-1)
+    else:
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

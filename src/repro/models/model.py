@@ -1,0 +1,292 @@
+"""Model assembly: residual blocks -> scanned layer groups -> logits.
+
+Layers are stacked with ``jax.lax.scan`` over *pattern groups* so the HLO
+contains one group body regardless of depth (essential for compile times on
+88-layer models). Hybrid architectures (recurrentgemma) scan over repetitions
+of their block pattern; any remainder layers are materialized as a tail.
+
+Public entry points:
+  model_defs(cfg)                  -> ParamDef tree
+  init_model(key, cfg)             -> materialized params (small/smoke only)
+  forward(params, batch, cfg, ...) -> logits, aux  (train/prefill)
+  init_cache_defs(cfg, batch, len) -> decode-cache ParamDef-like specs
+  decode_step(params, cache, tokens, index, cfg) -> logits, new cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import ssm as SSM
+from repro.models.params import ParamDef, init_params, stack_defs
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def block_defs(cfg: ModelConfig, kind: str) -> Dict[str, PyTree]:
+    if kind == "attn":
+        ffn = MOE.moe_defs(cfg) if cfg.moe is not None else L.mlp_defs(cfg)
+        return {"norm1": L.norm_defs(cfg), "attn": L.attention_defs(cfg),
+                "norm2": L.norm_defs(cfg), "ffn": ffn}
+    if kind == "rglru":
+        return {"norm1": L.norm_defs(cfg), "rglru": RG.rglru_defs(cfg),
+                "norm2": L.norm_defs(cfg), "ffn": L.mlp_defs(cfg)}
+    if kind == "ssd":
+        return {"norm1": L.norm_defs(cfg), "ssd": SSM.ssd_defs(cfg)}
+    raise ValueError(kind)
+
+
+def block_fwd(p, x: jax.Array, positions, cfg: ModelConfig, kind: str, *,
+              window: int, cache=None, cache_index=None,
+              q_chunk: int = 1024, kv_chunk: int = 1024,
+              skip_masked_blocks: bool = True, attn_mode: str = "auto"):
+    """One residual block. Returns (y, new_cache, aux_loss)."""
+    aux = jnp.float32(0.0)
+    if kind == "attn":
+        h = L.norm_fwd(p["norm1"], x, cfg.norm)
+        h, new_cache = L.attention_fwd(
+            p["attn"], h, positions, cfg, window=window,
+            kv_cache=cache, cache_index=cache_index,
+            q_chunk=q_chunk, kv_chunk=kv_chunk,
+            skip_masked_blocks=skip_masked_blocks, attn_mode=attn_mode)
+        x = x + h
+        h = L.norm_fwd(p["norm2"], x, cfg.norm)
+        if cfg.moe is not None:
+            h, aux = MOE.moe_fwd(p["ffn"], h, cfg)
+        else:
+            h = L.mlp_fwd(p["ffn"], h, cfg.activation)
+        return x + h, new_cache, aux
+    if kind == "rglru":
+        h = L.norm_fwd(p["norm1"], x, cfg.norm)
+        rec, conv = cache if cache is not None else (None, None)
+        h, new_cache = RG.rglru_block_fwd(p["rglru"], h, cfg,
+                                          rec_state=rec, conv_state=conv)
+        x = x + h
+        h = L.norm_fwd(p["norm2"], x, cfg.norm)
+        h = L.mlp_fwd(p["ffn"], h, cfg.activation)
+        return x + h, new_cache, aux
+    if kind == "ssd":
+        h = L.norm_fwd(p["norm1"], x, cfg.norm)
+        ssm_state, conv = cache if cache is not None else (None, None)
+        h, new_cache = SSM.ssd_block_fwd(p["ssd"], h, cfg,
+                                         ssm_state=ssm_state, conv_state=conv)
+        return x + h, new_cache, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Layer grouping for scan
+# ---------------------------------------------------------------------------
+
+
+def _grouping(cfg: ModelConfig) -> Tuple[Tuple[str, ...], int, Tuple[str, ...]]:
+    """(pattern, n_scanned_groups, tail_kinds)."""
+    kinds = cfg.layer_kinds
+    pat = cfg.block_pattern or (kinds[0],)
+    plen = len(pat)
+    n_groups = len(kinds) // plen
+    tail = kinds[n_groups * plen:]
+    return tuple(pat), n_groups, tuple(tail)
+
+
+def model_defs(cfg: ModelConfig) -> Dict[str, PyTree]:
+    pat, n_groups, tail = _grouping(cfg)
+    group = {f"b{i}_{k}": block_defs(cfg, k) for i, k in enumerate(pat)}
+    defs: Dict[str, PyTree] = {
+        "embed": L.embed_defs(cfg),
+        "layers": stack_defs(group, n_groups) if n_groups else {},
+        "final_norm": L.norm_defs(cfg),
+        "head": L.head_defs(cfg),
+    }
+    for j, k in enumerate(tail):
+        defs[f"tail{j}_{k}"] = block_defs(cfg, k)
+    return defs
+
+
+def init_model(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    return init_params(key, model_defs(cfg), cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def _block_cache_spec(cfg: ModelConfig, kind: str, batch: int,
+                      cache_len: int) -> PyTree:
+    """ShapeDtypeStructs for one block's decode cache."""
+    dt = jnp.dtype(cfg.dtype)
+    if kind == "attn":
+        shape = (batch, cache_len, cfg.num_kv_heads, cfg.head_dim)
+        return (jax.ShapeDtypeStruct(shape, dt), jax.ShapeDtypeStruct(shape, dt))
+    if kind == "rglru":
+        w = cfg.rglru_width or cfg.d_model
+        return (jax.ShapeDtypeStruct((batch, w), jnp.float32),
+                jax.ShapeDtypeStruct((batch, cfg.conv1d_width - 1, w), dt))
+    if kind == "ssd":
+        dinner, nheads, hd, n = SSM.ssd_dims(cfg)
+        conv_dim = dinner + 2 * cfg.ssm.ngroups * n
+        return (jax.ShapeDtypeStruct((batch, nheads, hd, n), jnp.float32),
+                jax.ShapeDtypeStruct((batch, cfg.ssm.conv_width - 1, conv_dim), dt))
+    raise ValueError(kind)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int,
+                window: int) -> PyTree:
+    """Cache spec tree matching the params layout (scanned groups + tail).
+
+    ``cache_len`` applies to attention KV buffers; when ``window`` is set the
+    buffer is a ring of min(window, cache_len) slots.
+    """
+    pat, n_groups, tail = _grouping(cfg)
+    attn_len = min(window, cache_len) if window else cache_len
+
+    def spec(kind):
+        return _block_cache_spec(cfg, kind, batch,
+                                 attn_len if kind == "attn" else cache_len)
+
+    def add_group_dim(tree):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_groups,) + s.shape, s.dtype), tree)
+
+    out: Dict[str, PyTree] = {}
+    if n_groups:
+        group = {f"b{i}_{k}": spec(k) for i, k in enumerate(pat)}
+        out["layers"] = add_group_dim(group)
+    for j, k in enumerate(tail):
+        out[f"tail{j}_{k}"] = spec(k)
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               window: int) -> PyTree:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, cache_len, window))
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(params: PyTree, tokens: jax.Array, cfg: ModelConfig, *,
+            patch_embeds: Optional[jax.Array] = None,
+            window: int = 0, collect_cache: bool = False,
+            remat: bool = True, q_chunk: int = 1024, kv_chunk: int = 1024,
+            skip_masked_blocks: bool = True, attn_mode: str = "auto",
+            logits_slice: Optional[int] = None, batch_axes=None):
+    """Full-sequence forward. Returns (logits, aux_loss, caches|None).
+
+    window: 0 -> cfg.sliding_window (natively windowed archs) else full attn.
+    collect_cache: also return per-layer (k, v) / states for decode handoff.
+    logits_slice: if set, only the last `logits_slice` positions get logits
+    (prefill only needs the final position — saves the giant (B,S,V) tensor).
+    """
+    pat, n_groups, tail = _grouping(cfg)
+    window = window or cfg.sliding_window
+    x = L.embed_fwd(params["embed"], tokens, cfg, patch_embeds=patch_embeds)
+    if batch_axes is not None:
+        # Pin activations to batch sharding. Without this, GSPMD propagates
+        # the embedding table's weight sharding through the gather and the
+        # whole network runs with REPLICATED batch + feature-sharded
+        # activations (observed: 16x activation memory and ~0.5 TB/step of
+        # full-batch all-reduces on the 16x16 mesh). See EXPERIMENTS.md §Perf.
+        from jax.sharding import PartitionSpec as _P
+        x = jax.lax.with_sharding_constraint(
+            x, _P(batch_axes, *([None] * (x.ndim - 1))))
+    bsz, seq = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(seq)[None], (bsz, seq))
+
+    def group_body(x, group_params):
+        aux = jnp.float32(0.0)
+        caches = {}
+        for i, k in enumerate(pat):
+            name = f"b{i}_{k}"
+            x, c, a = block_fwd(group_params[name], x, positions, cfg, k,
+                                window=window, q_chunk=q_chunk,
+                                kv_chunk=kv_chunk,
+                                skip_masked_blocks=skip_masked_blocks,
+                                attn_mode=attn_mode)
+            aux = aux + a
+            caches[name] = c
+        return x, (aux, caches if collect_cache else None)
+
+    body = group_body
+    if remat:
+        body = jax.checkpoint(group_body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    aux_total = jnp.float32(0.0)
+    caches: Dict[str, PyTree] = {}
+    if n_groups:
+        x, (auxs, gcaches) = jax.lax.scan(body, x, params["layers"])
+        aux_total = aux_total + jnp.sum(auxs)
+        if collect_cache:
+            caches["layers"] = gcaches
+    for j, k in enumerate(tail):
+        name = f"tail{j}_{k}"
+        x, c, a = block_fwd(params[name], x, positions, cfg, k, window=window,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk,
+                            skip_masked_blocks=skip_masked_blocks,
+                            attn_mode=attn_mode)
+        aux_total = aux_total + a
+        if collect_cache:
+            caches[name] = c
+    x = L.norm_fwd(params["final_norm"], x, cfg.norm)
+    if logits_slice is not None:
+        x = x[:, -logits_slice:]
+    logits = L.head_fwd(params["head"], params["embed"], x, cfg)
+    return logits, aux_total, (caches if collect_cache else None)
+
+
+# ---------------------------------------------------------------------------
+# Decode step (one token against a cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params: PyTree, cache: PyTree, tokens: jax.Array,
+                cache_index: jax.Array, cfg: ModelConfig, *,
+                window: int = 0):
+    """tokens: (B, 1) (or (B, Q, 1) audio). Returns (logits, new_cache)."""
+    pat, n_groups, tail = _grouping(cfg)
+    window = window or cfg.sliding_window
+    x = L.embed_fwd(params["embed"], tokens, cfg)
+    bsz = x.shape[0]
+    positions = jnp.broadcast_to(
+        jnp.asarray(cache_index, jnp.int32).reshape(1, 1), (bsz, 1))
+
+    def group_body(x, scanned):
+        group_params, group_cache = scanned
+        new_caches = {}
+        for i, k in enumerate(pat):
+            name = f"b{i}_{k}"
+            x, c, _ = block_fwd(group_params[name], x, positions, cfg, k,
+                                window=window, cache=group_cache[name],
+                                cache_index=cache_index)
+            new_caches[name] = c
+        return x, new_caches
+
+    new_cache: Dict[str, PyTree] = {}
+    if n_groups:
+        x, gc = jax.lax.scan(group_body, x, (params["layers"], cache["layers"]))
+        new_cache["layers"] = gc
+    for j, k in enumerate(tail):
+        name = f"tail{j}_{k}"
+        x, c, _ = block_fwd(params[name], x, positions, cfg, k, window=window,
+                            cache=cache[name], cache_index=cache_index)
+        new_cache[name] = c
+    x = L.norm_fwd(params["final_norm"], x, cfg.norm)
+    logits = L.head_fwd(params["head"], params["embed"], x, cfg)
+    return logits, new_cache

@@ -1,0 +1,154 @@
+"""Mixture-of-Experts FFN: shared + routed experts, top-k routing.
+
+Two implementations selected by ``MoEConfig.impl``:
+
+* ``dense``  — every expert computes every token; combine weights mask the
+  non-selected ones. Exact, simple, used for CPU smoke tests (<=4 experts).
+* ``gshard`` — capacity-based one-hot dispatch/combine einsums. Tokens are
+  grouped along the (sharded) batch dim, experts shard over the ``expert``
+  logical axis, and GSPMD inserts the all-to-alls. This is the production
+  path exercised by the multi-pod dry-run; compute = top_k * capacity_factor
+  of the active-FLOPs ideal (the overhead shows up honestly in §Roofline).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamDef
+
+
+def moe_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.expert_d_ff, m.num_experts
+    defs = {
+        "router": ParamDef((d, e), ("embed", None)),
+        "wi_gate": ParamDef((e, d, f), ("expert", "embed", "mlp")),
+        "wi_up": ParamDef((e, d, f), ("expert", "embed", "mlp")),
+        "wo": ParamDef((e, f, d), ("expert", "mlp", "embed")),
+    }
+    if m.num_shared_experts:
+        sf = m.shared_d_ff or m.expert_d_ff * m.num_shared_experts
+        defs["shared_wi_gate"] = ParamDef((d, sf), ("embed", "mlp"))
+        defs["shared_wi_up"] = ParamDef((d, sf), ("embed", "mlp"))
+        defs["shared_wo"] = ParamDef((sf, d), ("mlp", "embed"))
+        defs["shared_gate"] = ParamDef((d,), ("embed",), init="zeros")
+    return defs
+
+
+def _router(p, x: jax.Array, m) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (weights (T,k) f32, indices (T,k) i32, aux_loss scalar)."""
+    logits = jnp.einsum("td,de->te", x, p["router"].astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, m.num_experts_per_tok)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    e = m.num_experts
+    me = jnp.mean(probs, axis=0)                                   # mean prob
+    onehot = jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32)       # top-1 frac
+    ce = jnp.mean(onehot, axis=0)
+    aux = e * jnp.sum(me * ce) * m.router_aux_loss_coef
+    return weights, idx, aux
+
+
+def _expert_ffn(p, x: jax.Array, prefix: str = "") -> jax.Array:
+    """x: (E, C, d) -> (E, C, d) — all experts batched on the leading dim."""
+    dt = x.dtype
+    g = jnp.einsum("ecd,edf->ecf", x, p[prefix + "wi_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", x, p[prefix + "wi_up"].astype(dt))
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                      p[prefix + "wo"].astype(dt))
+
+
+def _shared_ffn(p, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    g = jnp.einsum("td,df->tf", x, p["shared_wi_gate"].astype(dt))
+    u = jnp.einsum("td,df->tf", x, p["shared_wi_up"].astype(dt))
+    y = jnp.einsum("tf,fd->td", jax.nn.silu(g) * u, p["shared_wo"].astype(dt))
+    gate = jax.nn.sigmoid(
+        jnp.einsum("td,d->t", x, p["shared_gate"].astype(dt)))[..., None]
+    return y * gate.astype(dt)
+
+
+def moe_fwd_dense(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Exact dense path: (B, S, d) -> (B, S, d), plus aux loss."""
+    m = cfg.moe
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    weights, idx, aux = _router(p, xt, m)
+    combine = jnp.zeros((b * s, m.num_experts), jnp.float32)
+    combine = jax.vmap(lambda c, i, w: c.at[i].add(w))(combine, idx, weights)
+    all_out = _expert_ffn(p, jnp.broadcast_to(xt, (m.num_experts, b * s, d)))
+    y = jnp.einsum("etd,te->td", all_out.astype(jnp.float32), combine)
+    y = y.astype(x.dtype)
+    if m.num_shared_experts:
+        y = y + _shared_ffn(p, xt)
+    return y.reshape(b, s, d), aux
+
+
+def moe_fwd_gshard(p, x: jax.Array, cfg: ModelConfig,
+                   group_size: int = 4096) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-based dispatch. Tokens are split into groups (which ride the
+    sharded batch axis); per group each expert takes at most
+    ``capacity = k * group_size * cf / E`` tokens; overflow is dropped
+    (standard GShard semantics).
+
+    Groups are folded into the dispatch einsums (no vmap) so the expert
+    tensors carry an explicit leading E dim that GSPMD can keep sharded on
+    the expert axis — the dispatch/combine einsums then lower to all-to-alls
+    of TOKENS rather than all-gathers of expert WEIGHTS (§Perf lever: set
+    ``MoEConfig.expert_axis`` to pin it).
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    g = max(1, min(t // group_size, t))
+    while t % g:
+        g -= 1
+    gs = t // g
+    cap = max(1, int(m.num_experts_per_tok * gs * m.capacity_factor
+                     / m.num_experts))
+    cap = min(cap, gs)
+    xt = x.reshape(g, gs, d)
+
+    weights, idx, aux = _router(p, xt.reshape(t, d), m)          # (t, k)
+    weights = weights.reshape(g, gs, m.num_experts_per_tok)
+    idx = idx.reshape(g, gs, m.num_experts_per_tok)
+    onehot = jax.nn.one_hot(idx, m.num_experts, dtype=jnp.int32)  # (g,gs,k,E)
+    # position of each (token, choice) in its expert's per-group queue
+    flat = onehot.reshape(g, gs * m.num_experts_per_tok, m.num_experts)
+    pos_flat = jnp.cumsum(flat, axis=1) - flat
+    pos = jnp.sum(pos_flat.reshape(onehot.shape) * onehot, axis=-1)  # (g,gs,k)
+    keep = pos < cap
+    w = weights * keep.astype(weights.dtype)
+    slot = jax.nn.one_hot(pos, cap, dtype=jnp.float32)           # (g,gs,k,cap)
+    sel = onehot.astype(jnp.float32)[..., None] * slot[..., None, :]
+    disp = jnp.sum(sel * keep[..., None, None], axis=2)          # (g,gs,E,cap)
+    comb = jnp.sum(sel * w[..., None, None], axis=2)             # (g,gs,E,cap)
+
+    ex_in = jnp.einsum("gsec,gsd->egcd", disp.astype(x.dtype), xt)
+    ex_in = ex_in.reshape(m.num_experts, g * cap, d)
+    if m.expert_axis:
+        from jax.sharding import PartitionSpec as _P
+        ex_in = jax.lax.with_sharding_constraint(
+            ex_in, _P(m.expert_axis, None, None))
+    ex_out = _expert_ffn(p, ex_in)                               # (E, g*cap, d)
+    if m.expert_axis:
+        ex_out = jax.lax.with_sharding_constraint(
+            ex_out, _P(m.expert_axis, None, None))
+    ex_out = ex_out.reshape(m.num_experts, g, cap, d)
+    y = jnp.einsum("gsec,egcd->gsd", comb.astype(x.dtype), ex_out)
+    y = y.reshape(t, d)
+    if m.num_shared_experts:
+        y = y + _shared_ffn(p, x.reshape(t, d))
+    return y.reshape(b, s, d), aux
+
+
+def moe_fwd(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    if cfg.moe.impl == "dense":
+        return moe_fwd_dense(p, x, cfg)
+    return moe_fwd_gshard(p, x, cfg)

@@ -1,0 +1,110 @@
+"""Parameter definition trees.
+
+Each model block declares its parameters as a dict of :class:`ParamDef`
+(shape + logical sharding axes + initializer). From one def-tree we derive:
+
+* ``init_params``        — materialized arrays (smoke tests / paper tasks)
+* ``abstract_params``    — ShapeDtypeStructs (dry-run: no allocation)
+* ``partition_spec_tree``— jax.sharding.PartitionSpec per leaf via axis rules
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]    # logical axis name per dim (None = replicated)
+    init: str = "normal"               # normal | zeros | ones | lru_lambda
+    scale: float = 0.02
+    dtype: Optional[str] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def stack_defs(defs: PyTree, n: int) -> PyTree:
+    """Add a leading scan dimension of size n to every ParamDef."""
+    return jax.tree.map(
+        lambda d: dataclasses.replace(
+            d, shape=(n,) + d.shape, axes=(None,) + d.axes),
+        defs, is_leaf=is_def)
+
+
+def _init_leaf(key, d: ParamDef, default_dtype: str) -> jax.Array:
+    dtype = d.dtype or default_dtype
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "lru_lambda":
+        # RG-LRU Lambda parameterization: a = sigmoid(Lambda) uniformly in
+        # [0.9, 0.999] following Griffin appendix.
+        u = jax.random.uniform(key, d.shape, jnp.float32,
+                               minval=0.9, maxval=0.999)
+        return jnp.log(u / (1.0 - u)).astype(dtype)
+    if d.init == "normal":
+        return (jax.random.normal(key, d.shape, jnp.float32) * d.scale).astype(dtype)
+    raise ValueError(d.init)
+
+
+def init_params(key: jax.Array, defs: PyTree, param_dtype: str = "float32") -> PyTree:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_init_leaf(k, d, param_dtype) for k, d in zip(keys, leaves)])
+
+
+def abstract_params(defs: PyTree, param_dtype: str = "float32") -> PyTree:
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype or param_dtype)),
+        defs, is_leaf=is_def)
+
+
+def partition_spec_tree(defs: PyTree, rules: Dict[str, Optional[str]],
+                        mesh_axis_sizes: Dict[str, int]) -> PyTree:
+    """Logical axes -> PartitionSpec, skipping non-divisible placements.
+
+    A logical axis maps to a mesh axis only if the dim size is divisible by
+    the mesh axis size (GSPMD handles padding, but divisible placements give
+    clean collectives and make the roofline terms meaningful).
+    """
+
+    def spec(d: ParamDef) -> PartitionSpec:
+        used = set()
+        out = []
+        for dim, ax in zip(d.shape, d.axes):
+            mesh_ax = rules.get(ax) if ax else None
+            if mesh_ax is None:
+                out.append(None)
+                continue
+            axes = mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)
+            size = 1
+            for a in axes:
+                size *= mesh_axis_sizes.get(a, 1)
+            if any(a in used for a in axes) or dim % size != 0:
+                out.append(None)
+            else:
+                out.append(mesh_ax)
+                used.update(axes)
+        return PartitionSpec(*out)
+
+    return jax.tree.map(spec, defs, is_leaf=is_def)
+
+
+def count_params(defs: PyTree) -> int:
+    return int(sum(np.prod(d.shape)
+                   for d in jax.tree.leaves(defs, is_leaf=is_def)))

@@ -1,0 +1,95 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          input gate
+    a_t = a ** (c * r_t),  a = sigmoid(Lambda),  c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Prefill/train uses an O(S log S) associative scan; decode is O(1). The block
+wraps the recurrence Griffin-style: two branches (conv1d->RG-LRU and GeLU),
+multiplied, then an output projection.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamDef
+from repro.models.ssm import _causal_conv
+
+RGLRU_C = 8.0
+
+
+def rglru_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    return {
+        "in_x": ParamDef((d, w), ("embed", "mlp")),        # recurrent branch
+        "in_gate": ParamDef((d, w), ("embed", "mlp")),     # gelu branch
+        "conv_w": ParamDef((cfg.conv1d_width, w), (None, "mlp")),
+        "conv_b": ParamDef((w,), ("mlp",), init="zeros"),
+        "w_a": ParamDef((w, w), ("mlp", None)),
+        "b_a": ParamDef((w,), ("mlp",), init="zeros"),
+        "w_i": ParamDef((w, w), ("mlp", None)),
+        "b_i": ParamDef((w,), ("mlp",), init="zeros"),
+        "lam": ParamDef((w,), ("mlp",), init="lru_lambda"),
+        "out": ParamDef((w, d), ("mlp", "embed")),
+    }
+
+
+def rglru_scan(x: jax.Array, r: jax.Array, i: jax.Array, lam: jax.Array,
+               h0: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """x, r, i: (B, S, W); lam: (W,). Returns (h (B,S,W), final_state (B,W))."""
+    log_a_base = jax.nn.log_sigmoid(lam.astype(jnp.float32))      # log a
+    log_at = RGLRU_C * r.astype(jnp.float32) * log_a_base          # (B,S,W)
+    at = jnp.exp(log_at)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_at), 1e-12))
+    bt = beta * (i.astype(jnp.float32) * x.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    if h0 is not None:
+        bt = bt.at[:, 0].add(at[:, 0] * h0.astype(jnp.float32))
+    a_sc, h = jax.lax.associative_scan(combine, (at, bt), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_decode_step(state: jax.Array, x: jax.Array, r: jax.Array,
+                      i: jax.Array, lam: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One step. state, x, r, i: (B, W)."""
+    log_a_base = jax.nn.log_sigmoid(lam.astype(jnp.float32))
+    log_at = RGLRU_C * r.astype(jnp.float32) * log_a_base
+    at = jnp.exp(log_at)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_at), 1e-12))
+    h = at * state.astype(jnp.float32) + beta * (i.astype(jnp.float32)
+                                                 * x.astype(jnp.float32))
+    return h.astype(x.dtype), h
+
+
+def rglru_block_fwd(p, x: jax.Array, cfg: ModelConfig, *,
+                    rec_state=None, conv_state=None):
+    """Griffin recurrent block. Returns (y, (rec_state, conv_state))."""
+    dt = x.dtype
+    xr = jnp.einsum("bsd,dw->bsw", x, p["in_x"].astype(dt))
+    xg = jnp.einsum("bsd,dw->bsw", x, p["in_gate"].astype(dt))
+    xr, new_conv = _causal_conv(xr, p["conv_w"], p["conv_b"], conv_state)
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xr, p["w_a"].astype(dt))
+                       + p["b_a"].astype(dt))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xr, p["w_i"].astype(dt))
+                       + p["b_i"].astype(dt))
+    if x.shape[1] == 1 and rec_state is not None:
+        h, new_state = rglru_decode_step(rec_state, xr[:, 0], r[:, 0],
+                                         i[:, 0], p["lam"])
+        h = h[:, None]
+    else:
+        h, new_state = rglru_scan(xr, r, i, p["lam"], h0=rec_state)
+    y = h * jax.nn.gelu(xg)
+    out = jnp.einsum("bsw,wd->bsd", y, p["out"].astype(dt))
+    return out, (new_state, new_conv)

@@ -1,0 +1,169 @@
+"""The paper's task models (Appendix B.1): MLP, CNN, LSTM.
+
+These are the models AsyncFedED was evaluated with; they run fast on CPU and
+drive the faithful reproduction (benchmarks/convergence.py etc.). Implemented
+from scratch in jnp — no flax.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_tasks import PaperTaskConfig
+
+PyTree = Any
+
+
+def _dense_init(key, fan_in: int, fan_out: int):
+    k1, _ = jax.random.split(key)
+    scale = (2.0 / (fan_in + fan_out)) ** 0.5
+    return {"w": jax.random.normal(k1, (fan_in, fan_out), jnp.float32) * scale,
+            "b": jnp.zeros((fan_out,), jnp.float32)}
+
+
+def _dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+# -------------------------- MLP (Synthetic-1-1) ----------------------------
+
+
+def init_mlp(key, task: PaperTaskConfig) -> PyTree:
+    dims = (task.input_shape[0],) + task.hidden + (task.num_classes,)
+    keys = jax.random.split(key, len(dims) - 1)
+    return {f"fc{i}": _dense_init(k, dims[i], dims[i + 1])
+            for i, k in enumerate(keys)}
+
+
+def mlp_fwd(params, x):
+    n = len(params)
+    for i in range(n):
+        x = _dense(params[f"fc{i}"], x)
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ----------------------------- CNN (FEMNIST) --------------------------------
+
+
+def init_cnn(key, task: PaperTaskConfig) -> PyTree:
+    c1, c2 = task.hidden
+    k1, k2, k3 = jax.random.split(key, 3)
+    h, w, cin = task.input_shape
+    # two 3x3 convs, one 2x2 maxpool after each, then fc
+    feat = (h // 4) * (w // 4) * c2
+    return {
+        "conv1": {"w": jax.random.normal(k1, (3, 3, cin, c1)) * 0.1,
+                  "b": jnp.zeros((c1,))},
+        "conv2": {"w": jax.random.normal(k2, (3, 3, c1, c2)) * 0.1,
+                  "b": jnp.zeros((c2,))},
+        "fc": _dense_init(k3, feat, task.num_classes),
+    }
+
+
+def _conv(p, x):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_fwd(params, x):
+    x = jax.nn.relu(_conv(params["conv1"], x))
+    x = _maxpool2(x)
+    x = jax.nn.relu(_conv(params["conv2"], x))
+    x = _maxpool2(x)
+    x = x.reshape(x.shape[0], -1)
+    return _dense(params["fc"], x)
+
+
+# --------------------------- LSTM (Shakespeare) ------------------------------
+
+
+def init_lstm(key, task: PaperTaskConfig) -> PyTree:
+    embed_dim, hidden = task.hidden
+    v = task.num_classes
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    def lstm_layer(k, in_dim, h_dim):
+        ka, kb = jax.random.split(k)
+        s = (1.0 / max(in_dim, 1)) ** 0.5
+        return {"wx": jax.random.normal(ka, (in_dim, 4 * h_dim)) * s,
+                "wh": jax.random.normal(kb, (h_dim, 4 * h_dim)) * s,
+                "b": jnp.zeros((4 * h_dim,))}
+
+    return {
+        "embed": jax.random.normal(k1, (v, embed_dim)) * 0.1,
+        "lstm1": lstm_layer(k2, embed_dim, hidden),
+        "lstm2": lstm_layer(k3, hidden, hidden),
+        "fc": _dense_init(k4, hidden, v),
+    }
+
+
+def _lstm_scan(p, x):
+    """x: (B, S, D) -> (B, S, H)."""
+    b, s, _ = x.shape
+    h_dim = p["wh"].shape[0]
+
+    def step(carry, xt):
+        h, c = carry
+        gates = xt @ p["wx"] + h @ p["wh"] + p["b"]
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    init = (jnp.zeros((b, h_dim)), jnp.zeros((b, h_dim)))
+    _, hs = jax.lax.scan(step, init, x.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2)
+
+
+def lstm_fwd(params, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = _lstm_scan(params["lstm1"], x)
+    x = _lstm_scan(params["lstm2"], x)
+    return _dense(params["fc"], x[:, -1])       # predict next char from last state
+
+
+# ------------------------------- dispatch -----------------------------------
+
+INITS = {"mlp": init_mlp, "cnn": init_cnn, "lstm": init_lstm}
+FWDS = {"mlp": mlp_fwd, "cnn": cnn_fwd, "lstm": lstm_fwd}
+
+
+def init_task_model(key, task: PaperTaskConfig) -> PyTree:
+    return INITS[task.model](key, task)
+
+
+def task_fwd(task: PaperTaskConfig, params, x):
+    return FWDS[task.model](params, x)
+
+
+def task_loss(task: PaperTaskConfig, params, batch,
+              prox: Tuple[float, PyTree] | None = None):
+    """Mean CE classification loss; optional FedProx proximal term (Eq. 39)."""
+    x, y = batch
+    logits = task_fwd(task, params, x)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    if prox is not None:
+        mu, anchor = prox
+        sq = sum(jnp.sum(jnp.square(a - b)) for a, b in zip(
+            jax.tree.leaves(params), jax.tree.leaves(anchor)))
+        loss = loss + 0.5 * mu * sq
+    return loss
+
+
+def task_accuracy(task: PaperTaskConfig, params, batch) -> jax.Array:
+    x, y = batch
+    logits = task_fwd(task, params, x)
+    return jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))

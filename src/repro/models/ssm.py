@@ -1,0 +1,201 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Prefill/train uses the chunked block decomposition: intra-chunk attention-like
+dense matmuls (MXU-friendly) + inter-chunk associative state recurrence.
+Decode is the O(1) recurrent update. The Pallas kernel in
+``repro.kernels.ssd`` implements the same chunked math with explicit VMEM
+tiling; this module is the pure-jnp path (also its oracle).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamDef
+
+
+def ssd_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    dinner = s.expand * cfg.d_model
+    nheads = s.num_heads or dinner // s.head_dim
+    return dinner, nheads, s.head_dim, s.state_dim
+
+
+def ssd_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    s = cfg.ssm
+    d = cfg.d_model
+    dinner, nheads, _, n = ssd_dims(cfg)
+    conv_dim = dinner + 2 * s.ngroups * n
+    return {
+        "in_proj": ParamDef(
+            (d, 2 * dinner + 2 * s.ngroups * n + nheads), ("embed", "mlp")),
+        "conv_w": ParamDef((s.conv_width, conv_dim), (None, "mlp")),
+        "conv_b": ParamDef((conv_dim,), ("mlp",), init="zeros"),
+        "a_log": ParamDef((nheads,), ("heads",), init="ones"),
+        "d_skip": ParamDef((nheads,), ("heads",), init="ones"),
+        "dt_bias": ParamDef((nheads,), ("heads",), init="zeros"),
+        "norm_scale": ParamDef((dinner,), ("mlp",), init="ones"),
+        "out_proj": ParamDef((dinner, d), ("mlp", "embed")),
+    }
+
+
+def segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} x[..., k].
+    Lower-triangular; -inf above the diagonal."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                c: jax.Array, chunk: int,
+                initial_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: (B, S, H, P)   dt: (B, S, H) (already softplus'ed, >0)
+    a: (H,) (negative) b, c: (B, S, G, N)
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bs, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    nc = s // chunk
+    assert s % chunk == 0, (s, chunk)
+    rep = h // g
+
+    xc = x.reshape(bs, nc, chunk, h, p)
+    dtc = dt.reshape(bs, nc, chunk, h)
+    bc = b.reshape(bs, nc, chunk, g, n)
+    cc = c.reshape(bs, nc, chunk, g, n)
+    bh = jnp.repeat(bc, rep, axis=3)                       # (B,C,L,H,N)
+    ch = jnp.repeat(cc, rep, axis=3)
+
+    da = dtc * a[None, None, None, :]                      # (B,C,L,H) negative
+    da_cum = jnp.cumsum(da, axis=2)                        # within-chunk
+
+    # 1. intra-chunk (diagonal blocks): attention-like dense matmuls
+    lmat = jnp.exp(segsum(da.transpose(0, 1, 3, 2)))       # (B,C,H,L,L)
+    scores = jnp.einsum("bclhn,bcshn->bchls", ch, bh,
+                        preferred_element_type=jnp.float32)
+    y_diag = jnp.einsum("bchls,bcshn->bclhn",
+                        scores * lmat, (xc * dtc[..., None]).astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+    # note: output index n here is the head_dim p (reusing letter), shapes ok
+    y_diag = y_diag.astype(x.dtype)
+
+    # 2. chunk states: what each chunk contributes to the carried state
+    decay_states = jnp.exp(da_cum[:, :, -1:, :] - da_cum)  # (B,C,L,H)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn", bh, decay_states.astype(jnp.float32),
+                        (xc * dtc[..., None]).astype(jnp.float32),
+                        preferred_element_type=jnp.float32)  # (B,C,H,P,N)
+
+    # 3. inter-chunk recurrence (scan over chunks, O(nc))
+    chunk_decay = jnp.exp(da_cum[:, :, -1, :])             # (B,C,H)
+    if initial_state is None:
+        init = jnp.zeros((bs, h, p, n), jnp.float32)
+    else:
+        init = initial_state.astype(jnp.float32)
+
+    def step(carry, inp):
+        st, dec = inp                                       # (B,H,P,N), (B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                   # emit state *before* chunk
+
+    final, prev_states = jax.lax.scan(
+        step, init, (states.transpose(1, 0, 2, 3, 4),
+                     chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)      # (B,C,H,P,N)
+
+    # 4. state -> output within each chunk
+    state_decay = jnp.exp(da_cum)                           # (B,C,L,H)
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", ch.astype(jnp.float32),
+                       prev_states, state_decay.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(bs, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array,
+                    a: jax.Array, b: jax.Array, c: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """One-token recurrence. state: (B,H,P,N); x: (B,H,P); dt: (B,H);
+    b,c: (B,G,N). Returns (y (B,H,P), new_state)."""
+    h = x.shape[1]
+    g = b.shape[1]
+    bh = jnp.repeat(b, h // g, axis=1)                      # (B,H,N)
+    ch = jnp.repeat(c, h // g, axis=1)
+    da = jnp.exp(dt * a[None, :])                           # (B,H)
+    new = (state * da[..., None, None]
+           + jnp.einsum("bhp,bhn->bhpn", (x * dt[..., None]).astype(jnp.float32),
+                        bh.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bhn->bhp", new, ch.astype(jnp.float32))
+    return y.astype(x.dtype), new
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 conv_state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d. x: (B,S,C); w: (W,C). Returns (y, new_state)
+    where state is the last (W-1) inputs (for decode)."""
+    width = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                  # (B, S+W-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+            for i in range(width))
+    y = y + b[None, None, :].astype(x.dtype)
+    new_state = xp[:, -(width - 1):, :]
+    return y, new_state
+
+
+def ssd_block_fwd(p, x: jax.Array, cfg: ModelConfig, *,
+                  ssm_state=None, conv_state=None):
+    """Full Mamba-2 block: in_proj -> conv -> SSD -> gated norm -> out_proj.
+
+    Train/prefill: states None -> chunked scan, returns (y, (ssm, conv) states).
+    Decode: pass both states (x has S=1).
+    """
+    s = cfg.ssm
+    dinner, nheads, hd, n = ssd_dims(cfg)
+    gn = s.ngroups * n
+    dt_f = x.dtype
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt_f))
+    z, xin, bc, dt = jnp.split(
+        zxbcdt, [dinner, 2 * dinner, 2 * dinner + 2 * gn], axis=-1)
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                      conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xin, b, c = jnp.split(conv_out, [dinner, dinner + gn], axis=-1)
+    bsz, sl = x.shape[0], x.shape[1]
+    xh = xin.reshape(bsz, sl, nheads, hd)
+    bg = b.reshape(bsz, sl, s.ngroups, n)
+    cg = c.reshape(bsz, sl, s.ngroups, n)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+
+    if sl == 1 and ssm_state is not None:
+        y, new_state = ssd_decode_step(
+            ssm_state, xh[:, 0], dt[:, 0], a, bg[:, 0], cg[:, 0])
+        y = y[:, None]
+    else:
+        chunk = min(s.chunk_size, sl)
+        y, new_state = ssd_chunked(xh, dt, a, bg, cg, chunk,
+                                   initial_state=ssm_state)
+    y = y + xh * p["d_skip"].astype(dt_f)[None, None, :, None]
+    y = y.reshape(bsz, sl, dinner)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + 1e-6)
+         * p["norm_scale"].astype(jnp.float32)).astype(dt_f)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt_f))
+    return out, (new_state, new_conv)

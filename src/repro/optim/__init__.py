@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (Optimizer, adam, adamw, momentum, sgd,
+                                    clip_by_global_norm)
+from repro.optim.schedule import constant, cosine, exponential_decay, warmup_cosine
+
+__all__ = ["Optimizer", "sgd", "momentum", "adam", "adamw",
+           "clip_by_global_norm", "constant", "cosine", "exponential_decay",
+           "warmup_cosine"]

@@ -1,0 +1,117 @@
+"""Optimizers from scratch (no optax): SGD, momentum, Adam, AdamW.
+
+Pattern mirrors optax: an Optimizer is (init, update) where
+``update(grads, state, params) -> (updates, new_state)`` and updates are
+*added* to params. Learning-rate schedules are callables step -> lr.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+ScalarOrSchedule = Union[float, Schedule]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, Optional[PyTree]], tuple]
+
+
+def _lr(lr: ScalarOrSchedule, step) -> jax.Array:
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def sgd(lr: ScalarOrSchedule) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["step"]
+        rate = _lr(lr, step)
+        ups = jax.tree.map(lambda g: (-rate * g.astype(jnp.float32)).astype(g.dtype),
+                           grads)
+        return ups, {"step": step + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: ScalarOrSchedule, beta: float = 0.9,
+             nesterov: bool = False) -> Optimizer:
+    """Heavy-ball momentum — the paper's local optimizer (B.4: beta=0.5)."""
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params=None):
+        step = state["step"]
+        rate = _lr(lr, step)
+        mu = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        if nesterov:
+            ups = jax.tree.map(
+                lambda m, g: (-rate * (beta * m + g.astype(jnp.float32))).astype(g.dtype),
+                mu, grads)
+        else:
+            ups = jax.tree.map(lambda m, g: (-rate * m).astype(g.dtype), mu, grads)
+        return ups, {"step": step + 1, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: ScalarOrSchedule, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        rate = _lr(lr, step)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m_, v_, p, g):
+            u = -rate * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay and p is not None:
+                u = u - rate * weight_decay * p.astype(jnp.float32)
+            return u.astype(g.dtype)
+
+        if params is None:
+            ups = jax.tree.map(lambda m_, v_, g: upd(m_, v_, None, g), m, v, grads)
+        else:
+            ups = jax.tree.map(upd, m, v, params, grads)
+        return ups, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: ScalarOrSchedule, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    return adam(lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32)
+                                      + u.astype(jnp.float32)).astype(p.dtype),
+                        params, updates)

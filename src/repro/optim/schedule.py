@@ -1,0 +1,32 @@
+"""Learning-rate schedules (callables: step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def exponential_decay(lr: float, decay: float):
+    """Paper B.4: local lr decays by 0.995 per round."""
+    return lambda step: jnp.asarray(lr, jnp.float32) * decay ** step.astype(jnp.float32)
+
+
+def cosine(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        c = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * c)
+    return fn
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        wu = jnp.clip(s / max(warmup, 1), 0.0, 1.0)
+        t = jnp.clip((s - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        c = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * wu * (final_frac + (1 - final_frac) * c)
+    return fn

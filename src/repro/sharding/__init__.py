@@ -1,0 +1,5 @@
+from repro.sharding.specs import (DEFAULT_RULES, activation_spec, batch_spec,
+                                  cache_spec_tree, param_spec_tree)
+
+__all__ = ["DEFAULT_RULES", "param_spec_tree", "batch_spec",
+           "activation_spec", "cache_spec_tree"]

@@ -1,0 +1,164 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Strategy (MaxText-style 2D sharding, extended with a federated `pod` axis):
+
+* ``model`` mesh axis: tensor parallelism — heads / mlp / experts / vocab.
+* ``data`` mesh axis: batch parallelism for activations AND FSDP-style
+  weight sharding along the ``embed`` logical axis.
+* ``pod`` mesh axis (multi-pod mesh only): the *federated client* axis. For
+  the synchronous fallback it extends batch parallelism; for AsyncFedED each
+  pod trains independently and only the aggregation step crosses it.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.base import ModelConfig
+from repro.models.model import cache_specs, model_defs
+from repro.models.params import partition_spec_tree
+
+PyTree = Any
+
+DEFAULT_RULES: Dict[str, Optional[str]] = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "expert": "model",
+    "embed": "data",      # FSDP: weights sharded over the data axis
+}
+
+
+def preset_rules(preset: str, mesh: Mesh) -> Dict[str, Optional[object]]:
+    """Named sharding strategies (the §Perf levers).
+
+    * ``tp``  — DEFAULT_RULES: tensor parallel on `model` + ZeRO on `data`.
+    * ``dp``  — pure ZeRO-3 data parallelism: batch AND weights shard over
+      every mesh axis; no tensor parallelism, so no per-layer activation
+      all-reduces. The right point for small-activation models where TP
+      collectives dominate (see EXPERIMENTS.md §Perf).
+    """
+    if preset == "tp":
+        return dict(DEFAULT_RULES)
+    if preset == "dp":
+        # ZeRO weight sharding over `data` only; the `model` axis carries
+        # batch (pure DP) — no tensor-parallel activation all-reduces at all.
+        # Weights shard along OUTPUT-feature dims (vocab/heads/mlp), never
+        # along d_model: sharding the embedding's d dim breaks GSPMD's
+        # gather propagation and replicates every downstream activation
+        # (observed: 4.6 TB/step of involuntary all-reduces).
+        return {"vocab": "data", "heads": "data", "kv_heads": "data",
+                "mlp": "data", "expert": "data", "embed": None}
+    if preset == "ep":
+        # Expert-parallel SERVING: experts over `model`, expert ffn width
+        # over `data` — weights are never d-gathered (contractions stay
+        # local; outputs reduce with small psums). No ZeRO d_model sharding:
+        # decode re-gathers it every step otherwise. Attention shards the
+        # HEAD_DIM (not heads): with the KV cache also head_dim-sharded the
+        # score contraction becomes a small (B,H,1,S) psum instead of a
+        # 51 GB/step cache all-gather (§Perf T2).
+        return {"vocab": "model", "heads": None, "kv_heads": None,
+                "head_dim": "model", "mlp": "data", "expert": "model",
+                "embed": None}
+    raise ValueError(preset)
+
+
+def _axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def param_spec_tree(cfg: ModelConfig, mesh: Mesh,
+                    rules: Optional[Dict[str, Optional[str]]] = None) -> PyTree:
+    """PartitionSpec tree matching model_defs(cfg)."""
+    rules = dict(rules or DEFAULT_RULES)
+
+    # drop rules that reference axes this mesh doesn't have (tuple rules keep
+    # only their present axes)
+    def _clean(v):
+        if isinstance(v, tuple):
+            kept = tuple(a for a in v if a in mesh.axis_names)
+            return kept if kept else None
+        return v if v in mesh.axis_names else None
+
+    rules = {k: _clean(v) for k, v in rules.items()}
+    return partition_spec_tree(model_defs(cfg), rules, _axis_sizes(mesh))
+
+
+def batch_spec(mesh: Mesh, batch_size: int,
+               include_model: bool = False) -> PartitionSpec:
+    """Shard the batch over every data-like axis present (pod first).
+    ``include_model``: pure-DP presets also spread batch over `model`."""
+    names = ("pod", "data", "model") if include_model else ("pod", "data")
+    axes = [a for a in names if a in mesh.axis_names]
+    sizes = _axis_sizes(mesh)
+    total = 1
+    used = []
+    for a in axes:
+        if batch_size % (total * sizes[a]) == 0:
+            used.append(a)
+            total *= sizes[a]
+    return PartitionSpec(tuple(used) if used else None)
+
+
+def activation_spec(mesh: Mesh, batch_size: int) -> PartitionSpec:
+    """(batch, seq, embed) activations: batch over data axes."""
+    bs = batch_spec(mesh, batch_size)
+    return PartitionSpec(bs[0] if len(bs) else None, None, None)
+
+
+def cache_spec_tree(cfg: ModelConfig, mesh: Mesh, batch: int, cache_len: int,
+                    window: int, prefer: str = "largest") -> PyTree:
+    """PartitionSpecs for the decode cache: batch over data axes, plus one
+    channel dim over `model`.
+
+    prefer="largest": the largest trailing dim (seq for KV caches) — maximum
+    memory relief but the ring-buffer DUS at a traced slot breaks GSPMD
+    propagation and the whole cache is re-gathered every step (observed:
+    51 GB/step on qwen3-moe decode_32k).
+    prefer="last": the last dim (head_dim / state N / width) — DUS stays
+    shard-local; attention contracts the sharded dim with a small psum
+    (§Perf T2 lever).
+    """
+    sizes = _axis_sizes(mesh)
+    b_axes = batch_spec(mesh, batch)[0]
+    model_ax = "model" if "model" in mesh.axis_names else None
+
+    def spec(s: jax.ShapeDtypeStruct) -> PartitionSpec:
+        dims = [None] * len(s.shape)
+        dims[0] = b_axes
+        if model_ax is not None and len(s.shape) >= 2:
+            if prefer == "last":
+                cands = [len(s.shape) - 1] + list(range(1, len(s.shape) - 1))
+            else:
+                cands = sorted(range(1, len(s.shape)),
+                               key=lambda i: -s.shape[i])
+            for cand in cands:
+                if s.shape[cand] % sizes[model_ax] == 0:
+                    dims[cand] = model_ax
+                    break
+        return PartitionSpec(*dims)
+
+    tree = cache_specs(cfg, batch, cache_len, window)
+
+    def with_group_dim(path_specs):
+        return path_specs
+
+    out = jax.tree.map(spec, tree)
+
+    # scanned group caches carry a leading group dim -> shift specs right
+    if "layers" in tree:
+        def shift(s: jax.ShapeDtypeStruct) -> PartitionSpec:
+            inner = spec(jax.ShapeDtypeStruct(s.shape[1:], s.dtype))
+            return PartitionSpec(None, *inner)
+        out["layers"] = jax.tree.map(shift, tree["layers"])
+    return out
+
+
+def shardings_from_specs(mesh: Mesh, specs: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs, is_leaf=lambda x: isinstance(x, PartitionSpec))

@@ -1,0 +1,4 @@
+from repro.utils import pytree
+from repro.utils.registry import Registry
+
+__all__ = ["pytree", "Registry"]

@@ -1,0 +1,120 @@
+"""Pytree utilities used across the framework.
+
+The AsyncFedED protocol operates on whole parameter pytrees: pseudo-gradients,
+Euclidean distances between model versions, and scaled AXPY updates. These
+helpers are the pure-jnp reference layer; the fused Pallas path lives in
+``repro.kernels.fedagg``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    """a - b, leafwise."""
+    return jax.tree.map(lambda x, y: x - y, a, b)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+def tree_scale(a: PyTree, s) -> PyTree:
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x: PyTree, y: PyTree) -> PyTree:
+    """alpha * x + y, leafwise (the Eq.(5) server update)."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_dot(a: PyTree, b: PyTree) -> jax.Array:
+    """Sum of elementwise products over all leaves, accumulated in f32."""
+    leaves = jax.tree.map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b
+    )
+    return functools.reduce(jnp.add, jax.tree.leaves(leaves), jnp.float32(0.0))
+
+
+def tree_sq_norm(a: PyTree) -> jax.Array:
+    """Squared l2 norm over every leaf, accumulated in f32."""
+    leaves = jax.tree.map(lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), a)
+    return functools.reduce(jnp.add, jax.tree.leaves(leaves), jnp.float32(0.0))
+
+
+def tree_norm(a: PyTree) -> jax.Array:
+    return jnp.sqrt(tree_sq_norm(a))
+
+
+def tree_sq_dist(a: PyTree, b: PyTree) -> jax.Array:
+    """||a - b||^2 without materializing the difference tree leaf-by-leaf twice."""
+    leaves = jax.tree.map(
+        lambda x, y: jnp.sum(
+            jnp.square(x.astype(jnp.float32) - y.astype(jnp.float32))
+        ),
+        a,
+        b,
+    )
+    return functools.reduce(jnp.add, jax.tree.leaves(leaves), jnp.float32(0.0))
+
+
+def tree_dist(a: PyTree, b: PyTree) -> jax.Array:
+    return jnp.sqrt(tree_sq_dist(a, b))
+
+
+def tree_zeros_like(a: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_size(a: PyTree) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(a)))
+
+
+def tree_bytes(a: PyTree) -> int:
+    return int(sum(np.prod(l.shape) * l.dtype.itemsize for l in jax.tree.leaves(a)))
+
+
+def tree_cast(a: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_flatten_to_vector(a: PyTree) -> jax.Array:
+    """Concatenate all leaves into one flat f32 vector (kernel staging layout)."""
+    return jnp.concatenate(
+        [jnp.ravel(l).astype(jnp.float32) for l in jax.tree.leaves(a)]
+    )
+
+
+def tree_unflatten_from_vector(vec: jax.Array, like: PyTree) -> PyTree:
+    """Inverse of :func:`tree_flatten_to_vector` against a template tree."""
+    leaves, treedef = jax.tree.flatten(like)
+    out, off = [], 0
+    for l in leaves:
+        n = int(np.prod(l.shape))
+        out.append(jnp.reshape(vec[off : off + n], l.shape).astype(l.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_map_with_path_names(fn: Callable[[str, jax.Array], Any], tree: PyTree) -> PyTree:
+    """Map ``fn(name, leaf)`` where name is a '/'-joined key path string."""
+
+    def _name(path) -> str:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+
+    return jax.tree_util.tree_map_with_path(lambda p, l: fn(_name(p), l), tree)

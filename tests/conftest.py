@@ -1,0 +1,22 @@
+import dataclasses
+
+import jax
+import pytest
+
+# NOTE: do NOT set XLA_FLAGS device-count here — smoke tests and benches must
+# see the single real CPU device; only launch/dryrun.py forces 512.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def reduced_f32(arch_id: str, **kw):
+    """Reduced smoke config in f32 with the CPU-friendly MoE path."""
+    from repro import configs
+    cfg = configs.reduced(configs.get_arch(arch_id), **kw)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, impl="dense"))
+    return dataclasses.replace(cfg, dtype="float32")

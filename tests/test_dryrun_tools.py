@@ -1,0 +1,112 @@
+"""Unit tests for the dry-run analysis tooling: the loop-aware collective
+parser (on crafted HLO) and the analytic cost model."""
+import textwrap
+
+import pytest
+
+from repro import configs
+from repro.launch.analytic import analytic_cost
+from repro.launch.dryrun import (_collective_on_line, model_flops,
+                                 parse_collectives)
+
+FAKE_HLO = textwrap.dedent("""\
+    HloModule jit_step
+
+    %cond.1 (arg: (s32[], f32[8])) -> pred[] {
+      %c = s32[] constant(24)
+      ROOT %lt = pred[] compare(%iter, %c), direction=LT
+    }
+
+    %body.1 (arg: (s32[], f32[8])) -> (s32[], f32[8]) {
+      %ar = f32[8]{0} all-reduce(%x), channel_id=1, to_apply=%sum
+      ROOT %t = (s32[], f32[8]) tuple(%i, %ar)
+    }
+
+    ENTRY %main (p0: f32[8]) -> f32[8] {
+      %w = (s32[], f32[8]) while(%init), condition=%cond.1, body=%body.1
+      %ag = f32[16]{0} all-gather(%p0), channel_id=2, dimensions={0}
+      %tup = (f32[4]{0}, f32[2]{0}) all-reduce(%a, %b), channel_id=3
+      ROOT %out = f32[8] get-tuple-element(%w), index=1
+    }
+""")
+
+
+class TestCollectiveParser:
+    def test_line_single(self):
+        kind, b = _collective_on_line(
+            "  %ar = f32[128,4]{1,0} all-reduce(%x), channel_id=1")
+        assert kind == "all-reduce" and b == 128 * 4 * 4
+
+    def test_line_tuple(self):
+        kind, b = _collective_on_line(
+            "  %ar = (f32[4]{0}, bf16[8]{0}) all-reduce(%a, %b)")
+        assert kind == "all-reduce" and b == 16 + 16
+
+    def test_line_start_variant(self):
+        out = _collective_on_line(
+            "  %ags = (f32[4]{0}, f32[8]{0}) all-gather-start(%x)")
+        assert out is not None and out[0] == "all-gather"
+
+    def test_done_not_double_counted(self):
+        assert _collective_on_line(
+            "  %agd = f32[8]{0} all-gather-done(%ags)") is None
+
+    def test_gte_operand_not_matched(self):
+        assert _collective_on_line(
+            "  %g = f32[8]{0} get-tuple-element(%all-reduce.3), index=0"
+        ) is None
+
+    def test_loop_scaling(self):
+        out = parse_collectives(FAKE_HLO)
+        # body all-reduce: 32 B x trip 24 = 768; entry tuple-AR: 24 B
+        assert out["bytes_per_kind"]["all-reduce"] == 32 * 24 + 24
+        assert out["bytes_per_kind"]["all-gather"] == 64
+        assert out["total_bytes"] == 768 + 24 + 64
+
+
+class TestAnalyticCost:
+    @pytest.mark.parametrize("arch", ["h2o-danube-1.8b", "phi3-medium-14b",
+                                      "granite-34b"])
+    def test_dense_train_close_to_6nd(self, arch):
+        """Dense train analytic flops must be ~4/3 of 6ND (remat adds one
+        fwd) within attention overhead."""
+        cfg = configs.get_arch(arch)
+        shape = configs.TRAIN_4K
+        an = analytic_cost(cfg, shape, chips=256)
+        mf = model_flops(cfg, shape)
+        ratio = an["flops_global"] / mf
+        assert 1.2 < ratio < 2.2, ratio
+
+    def test_moe_cheaper_than_dense_equivalent(self):
+        cfg = configs.get_arch("qwen3-moe-30b-a3b")
+        an = analytic_cost(cfg, configs.TRAIN_4K, chips=256)
+        mf_total_params = 6 * cfg.param_count() * (256 * 4096)
+        assert an["flops_global"] < mf_total_params  # sparse wins
+
+    def test_decode_tiny_vs_train(self):
+        cfg = configs.get_arch("mamba2-1.3b")
+        tr = analytic_cost(cfg, configs.TRAIN_4K, chips=256)
+        de = analytic_cost(cfg, configs.DECODE_32K, chips=256)
+        assert de["flops_global"] < tr["flops_global"] / 1e3
+
+    def test_window_caps_decode_bytes(self):
+        cfg = configs.get_arch("granite-34b")   # full attention
+        d32 = analytic_cost(cfg, configs.DECODE_32K, chips=256)
+        d500 = analytic_cost(cfg, configs.LONG_500K, chips=256)
+        # long_500k uses the SWA variant: window 4096 << 524288, and batch 1
+        assert d500["bytes_per_device"] < d32["bytes_per_device"]
+
+
+class TestPresets:
+    def test_all_presets_produce_specs(self):
+        import jax
+        from repro.sharding.specs import param_spec_tree, preset_rules
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        for preset in ("tp", "dp", "ep"):
+            rules = preset_rules(preset, mesh)
+            for arch in ("qwen3-moe-30b-a3b", "mamba2-1.3b",
+                         "recurrentgemma-2b"):
+                specs = param_spec_tree(configs.get_arch(arch), mesh, rules)
+                assert len(jax.tree.leaves(
+                    specs, is_leaf=lambda s: s.__class__.__name__
+                    == "PartitionSpec")) > 0

@@ -1,0 +1,180 @@
+"""Per-kernel correctness: sweep shapes/dtypes, assert_allclose vs ref.py
+oracles (kernels run in interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fedagg import fedagg
+from repro.kernels.fedagg import ref as fedagg_ref
+from repro.kernels.fedagg.ops import asyncfeded_aggregate_pallas
+from repro.kernels.rglru.ops import rglru_pallas
+from repro.kernels.rglru.ref import rglru_scan_ref
+from repro.kernels.rglru.rglru import rglru_scan
+from repro.kernels.ssd.ref import ssd_scan_ref
+from repro.kernels.ssd.ssd import ssd_scan
+from repro.kernels.swa_attn.ops import decode_attention_pallas
+from repro.kernels.swa_attn.ref import swa_decode_ref
+
+BLOCK = fedagg.BLOCK_ROWS * fedagg.LANES
+
+
+class TestFedAgg:
+    @pytest.mark.parametrize("nblocks", [1, 2, 5])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_norms(self, nblocks, dtype):
+        n = BLOCK * nblocks
+        xt = jax.random.normal(jax.random.PRNGKey(0), (n,), dtype)
+        xs = (xt + 0.1 * jax.random.normal(jax.random.PRNGKey(1), (n,),
+                                           dtype)).astype(dtype)
+        d = jax.random.normal(jax.random.PRNGKey(2), (n,), dtype) * 0.05
+        got = fedagg.fedagg_norms(xt, xs, d)
+        want = fedagg_ref.norms_ref(xt, xs, d)
+        np.testing.assert_allclose(got, want, rtol=2e-3 if dtype == jnp.bfloat16
+                                   else 1e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_axpy(self, dtype):
+        n = BLOCK * 2
+        xt = jax.random.normal(jax.random.PRNGKey(0), (n,), dtype)
+        d = jax.random.normal(jax.random.PRNGKey(1), (n,), dtype)
+        eta = jnp.float32(0.37)
+        got = fedagg.fedagg_axpy(xt, d, eta)
+        want = fedagg_ref.axpy_ref(xt, d, eta)
+        np.testing.assert_allclose(
+            got.astype(jnp.float32), want.astype(jnp.float32),
+            rtol=1e-2 if dtype == jnp.bfloat16 else 1e-5, atol=1e-6)
+
+    def test_fused_matches_two_phase(self):
+        n = BLOCK
+        xt = jax.random.normal(jax.random.PRNGKey(0), (n,))
+        xs = xt + 0.05
+        d = jax.random.normal(jax.random.PRNGKey(1), (n,)) * 0.1
+        eta = jnp.float32(0.5)
+        out, partial = fedagg.fedagg_fused(xt, xs, d, eta)
+        np.testing.assert_allclose(out, fedagg_ref.axpy_ref(xt, d, eta),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(partial, fedagg_ref.norms_ref(xt, xs, d),
+                                   rtol=1e-5)
+
+    def test_pytree_wrapper_matches_core(self):
+        from repro.core.aggregation import asyncfeded_aggregate
+        k = jax.random.PRNGKey(3)
+        tree = {"a": jax.random.normal(k, (33, 7)),
+                "b": [jax.random.normal(k, (129,)),
+                      jax.random.normal(k, (2, 3, 5))]}
+        stale = jax.tree.map(lambda x: x + 0.02, tree)
+        delta = jax.tree.map(lambda x: x * 0.01, tree)
+        r1 = asyncfeded_aggregate_pallas(tree, stale, delta, lam=2.0, eps=1.0)
+        r2 = asyncfeded_aggregate(tree, stale, delta, lam=2.0, eps=1.0)
+        np.testing.assert_allclose(float(r1.gamma), float(r2.gamma), rtol=1e-4)
+        for l1, l2 in zip(jax.tree.leaves(r1.params),
+                          jax.tree.leaves(r2.params)):
+            np.testing.assert_allclose(l1, l2, rtol=1e-4, atol=1e-6)
+
+
+class TestSSD:
+    @pytest.mark.parametrize("shape", [(2, 128, 8, 16, 64),
+                                       (1, 256, 16, 32, 128),
+                                       (3, 64, 4, 8, 32)])
+    def test_against_oracle(self, shape):
+        bh, s, p, n, chunk = shape
+        chunk = min(chunk, s)
+        k = jax.random.PRNGKey(0)
+        x = jax.random.normal(k, (bh, s, p))
+        dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (bh, s)))
+        a = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (bh,)) * 0.3)
+        b = jax.random.normal(jax.random.PRNGKey(3), (bh, s, n)) * 0.3
+        c = jax.random.normal(jax.random.PRNGKey(4), (bh, s, n)) * 0.3
+        y, st = ssd_scan(x, dt, a, b, c, chunk=chunk)
+        yr, sr = ssd_scan_ref(x, dt, a, b, c, chunk=chunk)
+        np.testing.assert_allclose(y, yr, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(st, sr, rtol=1e-4, atol=1e-4)
+
+    def test_chunk_invariance(self):
+        """Kernel result must not depend on the chunk size (pure tiling)."""
+        bh, s, p, n = 2, 128, 8, 16
+        k = jax.random.PRNGKey(0)
+        x = jax.random.normal(k, (bh, s, p))
+        dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (bh, s)))
+        a = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (bh,)) * 0.3)
+        b = jax.random.normal(jax.random.PRNGKey(3), (bh, s, n)) * 0.3
+        c = jax.random.normal(jax.random.PRNGKey(4), (bh, s, n)) * 0.3
+        y32, _ = ssd_scan(x, dt, a, b, c, chunk=32)
+        y128, _ = ssd_scan(x, dt, a, b, c, chunk=128)
+        np.testing.assert_allclose(y32, y128, rtol=1e-4, atol=1e-4)
+
+    def test_model_wrapper(self):
+        from repro.kernels.ssd.ops import ssd_chunked_pallas
+        from repro.models.ssm import ssd_chunked
+        bsz, s, h, p, g, n = 2, 64, 4, 8, 2, 16
+        k = jax.random.PRNGKey(0)
+        x = jax.random.normal(k, (bsz, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1),
+                                               (bsz, s, h)))
+        a = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (h,)) * 0.3)
+        b = jax.random.normal(jax.random.PRNGKey(3), (bsz, s, g, n)) * 0.3
+        c = jax.random.normal(jax.random.PRNGKey(4), (bsz, s, g, n)) * 0.3
+        y1, s1 = ssd_chunked_pallas(x, dt, a, b, c, chunk=32)
+        y2, s2 = ssd_chunked(x, dt, a, b, c, 32)
+        np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-4)
+
+
+class TestRGLRU:
+    @pytest.mark.parametrize("shape", [(2, 256, 128, 128, 64),
+                                       (1, 64, 512, 32, 512),
+                                       (3, 128, 96, 64, 32)])
+    def test_against_oracle(self, shape):
+        b, s, w, chunk, tile_w = shape
+        k = jax.random.PRNGKey(0)
+        log_at = -jnp.abs(jax.random.normal(k, (b, s, w))) * 0.1
+        xi = jax.random.normal(jax.random.PRNGKey(1), (b, s, w))
+        got = rglru_scan(log_at, xi, chunk=chunk, tile_w=tile_w)
+        want = rglru_scan_ref(log_at, xi)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_gate_wrapper_matches_model(self):
+        from repro.models.rglru import rglru_scan as model_scan
+        b, s, w = 2, 128, 64
+        k = jax.random.PRNGKey(0)
+        x = jax.random.normal(k, (b, s, w))
+        r = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(1), (b, s, w)))
+        i = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(2), (b, s, w)))
+        lam = jax.random.normal(jax.random.PRNGKey(3), (w,)) * 0.5 + 2.0
+        h1, f1 = rglru_pallas(x, r, i, lam, chunk=64, tile_w=32)
+        h2, f2 = model_scan(x, r, i, lam)
+        np.testing.assert_allclose(h1, h2, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(f1, f2, rtol=1e-4, atol=1e-5)
+
+
+class TestSWAAttn:
+    @pytest.mark.parametrize("gqa", [(8, 8), (8, 2), (4, 1)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_against_oracle(self, gqa, dtype):
+        h, kv = gqa
+        b, s, d = 2, 256, 64
+        k = jax.random.PRNGKey(0)
+        q = jax.random.normal(k, (b, 1, h, d), dtype)
+        kc = jax.random.normal(jax.random.PRNGKey(1), (b, s, kv, d), dtype)
+        vc = jax.random.normal(jax.random.PRNGKey(2), (b, s, kv, d), dtype)
+        vl = jnp.array([s // 2, s], jnp.int32)
+        got = decode_attention_pallas(q, kc, vc, vl, block_kv=64)
+        want = swa_decode_ref(q[:, 0], kc, vc, vl)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+        np.testing.assert_allclose(got[:, 0].astype(jnp.float32),
+                                   want.astype(jnp.float32), rtol=tol,
+                                   atol=tol)
+
+    def test_valid_len_masking(self):
+        """Entries beyond valid_len must not affect the result."""
+        b, s, h, kv, d = 1, 128, 4, 4, 32
+        q = jax.random.normal(jax.random.PRNGKey(0), (b, 1, h, d))
+        kc = jax.random.normal(jax.random.PRNGKey(1), (b, s, kv, d))
+        vc = jax.random.normal(jax.random.PRNGKey(2), (b, s, kv, d))
+        vl = jnp.array([64], jnp.int32)
+        out1 = decode_attention_pallas(q, kc, vc, vl, block_kv=32)
+        kc2 = kc.at[:, 64:].set(999.0)
+        vc2 = vc.at[:, 64:].set(-999.0)
+        out2 = decode_attention_pallas(q, kc2, vc2, vl, block_kv=32)
+        np.testing.assert_allclose(out1, out2, rtol=1e-6)

@@ -1,0 +1,123 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import math
+
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import aggregation as agg
+from repro.core.adaptive_k import update_k
+from repro.utils import pytree as pt
+
+VEC = hnp.arrays(np.float32, st.integers(1, 64),
+                 elements=st.floats(-100, 100, width=32))
+SMALL = st.floats(0.01, 10.0)
+
+
+@settings(max_examples=50, deadline=None)
+@given(x=VEC, noise=st.floats(-1, 1), dscale=st.floats(-2, 2))
+def test_gamma_nonnegative_and_eta_bounded(x, noise, dscale):
+    """gamma >= 0 and 0 < eta <= lam/eps for ANY inputs (Eq. 6/7)."""
+    x_t = {"w": jnp.asarray(x)}
+    x_s = {"w": jnp.asarray(x) + noise}
+    d = {"w": jnp.asarray(x) * dscale + 0.001}
+    lam, eps = 2.0, 0.5
+    res = agg.asyncfeded_aggregate(x_t, x_s, d, lam=lam, eps=eps)
+    assert float(res.gamma) >= 0.0
+    assert 0.0 < float(res.eta) <= lam / eps + 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(x=VEC)
+def test_pseudo_gradient_identity(x):
+    """Delta = x_K - x_0 exactly reverses: x_0 + Delta == x_K (Eq. 4)."""
+    x0 = {"w": jnp.asarray(x)}
+    xk = {"w": jnp.asarray(x) * 1.5 - 3.0}
+    delta = pt.tree_sub(xk, x0)
+    back = pt.tree_add(x0, delta)
+    np.testing.assert_allclose(back["w"], xk["w"], rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=100, deadline=None)
+@given(k=st.integers(1, 100), gamma=SMALL, gamma_bar=SMALL, kappa=SMALL)
+def test_k_update_monotone_in_gamma(k, gamma, gamma_bar, kappa):
+    """Eq.(8): staler update (bigger gamma) never yields a LARGER next K."""
+    k1 = update_k(k, gamma, gamma_bar, kappa)
+    k2 = update_k(k, gamma + 1.0, gamma_bar, kappa)
+    assert k2 <= k1
+
+
+@settings(max_examples=100, deadline=None)
+@given(k=st.integers(1, 100), gamma_bar=SMALL, kappa=SMALL)
+def test_k_fixed_point_at_setpoint(k, gamma_bar, kappa):
+    """At gamma == gamma_bar the controller must not move K (floor(0)=0)."""
+    assert update_k(k, gamma_bar, gamma_bar, kappa) == k
+
+
+@settings(max_examples=50, deadline=None)
+@given(x=VEC, scale=st.floats(0.1, 10))
+def test_staleness_scale_invariance(x, scale):
+    """gamma is invariant to rescaling BOTH the drift and the update —
+    it is a pure geometry ratio (Eq. 6)."""
+    x_t = {"w": jnp.asarray(x) + 1.0}
+    x_s = {"w": jnp.asarray(x)}
+    d = {"w": jnp.asarray(x) * 0.3 + 0.5}
+    g1, _, _ = agg.staleness(x_t, x_s, d)
+    x_t2 = {"w": (jnp.asarray(x) + 1.0 - jnp.asarray(x)) * scale
+                 + jnp.asarray(x)}       # drift scaled by `scale`
+    d2 = {"w": (jnp.asarray(x) * 0.3 + 0.5) * scale}
+    g2, _, _ = agg.staleness(x_t2, x_s, d2)
+    np.testing.assert_allclose(float(g1), float(g2), rtol=1e-3, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_flatten_unflatten_roundtrip(data):
+    shapes = data.draw(st.lists(
+        st.tuples(st.integers(1, 8), st.integers(1, 8)), min_size=1,
+        max_size=4))
+    tree = {f"l{i}": jnp.arange(a * b, dtype=jnp.float32).reshape(a, b) * 0.5
+            for i, (a, b) in enumerate(shapes)}
+    vec = pt.tree_flatten_to_vector(tree)
+    back = pt.tree_unflatten_from_vector(vec, tree)
+    for k in tree:
+        np.testing.assert_array_equal(tree[k], back[k])
+
+
+@settings(max_examples=30, deadline=None)
+@given(x=VEC, y=VEC)
+def test_tree_dist_triangle_inequality(x, y):
+    a = {"w": jnp.asarray(x)}
+    n = min(len(x), len(y))
+    a = {"w": jnp.asarray(x[:n])}
+    b = {"w": jnp.asarray(y[:n])}
+    z = {"w": jnp.zeros(n, jnp.float32)}
+    dab = float(pt.tree_dist(a, b))
+    daz = float(pt.tree_dist(a, z))
+    dzb = float(pt.tree_dist(z, b))
+    assert dab <= daz + dzb + 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_aggregation_order_of_fresh_updates_commutes(seed):
+    """Two FRESH updates (gamma=0 both orders): final params must not depend
+    on arrival order when both clients snapshot the SAME iteration and the
+    drift re-evaluation is disabled (cap=0, identical eta). This checks the
+    linearity of Eq.(5) under equal learning rates."""
+    key = jax.random.PRNGKey(seed)
+    x = {"w": jax.random.normal(key, (16,))}
+    d1 = {"w": jax.random.normal(jax.random.PRNGKey(seed + 1), (16,)) * 0.1}
+    d2 = {"w": jax.random.normal(jax.random.PRNGKey(seed + 2), (16,)) * 0.1}
+    lam, eps = 1.0, 1.0
+    # order A: d1 then d2, recomputing staleness against moving x
+    r = agg.asyncfeded_aggregate(x, x, d1, lam=lam, eps=eps)
+    ra = agg.asyncfeded_aggregate(r.params, r.params, d2, lam=lam, eps=eps)
+    # order B
+    r = agg.asyncfeded_aggregate(x, x, d2, lam=lam, eps=eps)
+    rb = agg.asyncfeded_aggregate(r.params, r.params, d1, lam=lam, eps=eps)
+    np.testing.assert_allclose(ra.params["w"], rb.params["w"], rtol=1e-4,
+                               atol=1e-5)

@@ -1,0 +1,178 @@
+"""Optimizers, data pipeline, checkpointing, sharding specs."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint import latest_step, restore_pytree, save_pytree
+from repro.data.femnist import generate_femnist
+from repro.data.pipeline import (MiniBatcher, dirichlet_partition,
+                                 load_task_datasets, synthetic_token_stream)
+from repro.data.shakespeare import generate_shakespeare
+from repro.data.synthetic import generate_synthetic
+from repro.optim import adam, adamw, momentum, sgd
+from repro.optim.optimizers import apply_updates, clip_by_global_norm
+
+
+class TestOptim:
+    def _quadratic(self, opt, steps=200):
+        params = {"w": jnp.array([5.0, -3.0])}
+        state = opt.init(params)
+        for _ in range(steps):
+            grads = jax.tree.map(lambda p: 2 * p, params)   # d/dp ||p||^2
+            ups, state = opt.update(grads, state, params)
+            params = apply_updates(params, ups)
+        return float(jnp.sum(jnp.abs(params["w"])))
+
+    def test_sgd_converges(self):
+        assert self._quadratic(sgd(0.1)) < 1e-3
+
+    def test_momentum_converges(self):
+        assert self._quadratic(momentum(0.05, beta=0.5)) < 1e-3
+
+    def test_adam_converges(self):
+        assert self._quadratic(adam(0.3)) < 1e-2
+
+    def test_adamw_decays(self):
+        # with huge weight decay params shrink even with zero grads
+        opt = adamw(0.1, weight_decay=1.0)
+        params = {"w": jnp.array([1.0])}
+        state = opt.init(params)
+        for _ in range(10):
+            ups, state = opt.update({"w": jnp.array([0.0])}, state, params)
+            params = apply_updates(params, ups)
+        assert float(params["w"][0]) < 1.0
+
+    def test_clip_by_global_norm(self):
+        g = {"a": jnp.array([3.0, 4.0])}      # norm 5
+        c = clip_by_global_norm(g, 1.0)
+        np.testing.assert_allclose(c["a"], [0.6, 0.8], rtol=1e-5)
+        g2 = {"a": jnp.array([0.3, 0.4])}     # norm .5, untouched
+        c2 = clip_by_global_norm(g2, 1.0)
+        np.testing.assert_allclose(c2["a"], g2["a"], rtol=1e-5)
+
+
+class TestData:
+    def test_synthetic_noniid(self):
+        ds = generate_synthetic(1.0, 1.0, num_clients=5, seed=0)
+        assert len(ds) == 5
+        # labels must differ in distribution across clients (non-IID)
+        hists = [np.bincount(y, minlength=10) / len(y) for _, y in ds]
+        diffs = [np.abs(hists[i] - hists[j]).sum()
+                 for i in range(5) for j in range(i + 1, 5)]
+        assert max(diffs) > 0.3
+
+    def test_synthetic_labels_consistent(self):
+        ds = generate_synthetic(0.0, 0.0, num_clients=3, seed=1)
+        for x, y in ds:
+            assert x.shape[0] == y.shape[0]
+            assert y.min() >= 0 and y.max() < 10
+
+    def test_femnist_shapes(self):
+        ds = generate_femnist(num_clients=3, samples_per_client=64, seed=0)
+        for x, y in ds:
+            assert x.shape[1:] == (28, 28, 1)
+            assert 0.0 <= x.min() and x.max() <= 1.0
+
+    def test_shakespeare_windows(self):
+        ds = generate_shakespeare(num_clients=2, samples_per_client=64, seed=0)
+        for x, y in ds:
+            assert x.shape[1] == 80
+            assert y.max() < 90
+
+    def test_task_loader_split(self):
+        train, (tx, ty) = load_task_datasets(configs.SYNTHETIC_1_1, seed=0)
+        assert len(train) == 10
+        assert len(tx) == len(ty) > 0
+
+    def test_minibatcher_deterministic(self):
+        ds = generate_synthetic(num_clients=1, seed=0)[0]
+        b1 = MiniBatcher(ds, 16, seed=7).next()
+        b2 = MiniBatcher(ds, 16, seed=7).next()
+        np.testing.assert_array_equal(b1[0], b2[0])
+
+    def test_dirichlet_partition_covers_all(self):
+        x = np.arange(1000).reshape(-1, 1).astype(np.float32)
+        y = np.repeat(np.arange(10), 100).astype(np.int32)
+        parts = dirichlet_partition(x, y, num_clients=5, alpha=0.5, seed=0)
+        total = sum(len(p[0]) for p in parts)
+        assert total == 1000
+
+    def test_token_stream_shapes(self):
+        import dataclasses
+        cfg = configs.get_arch("musicgen-large")
+        shape = dataclasses.replace(configs.TRAIN_4K, seq_len=32,
+                                    global_batch=2)
+        batch = next(synthetic_token_stream(cfg, shape))
+        assert batch["tokens"].shape == (2, cfg.num_codebooks, 32)
+        assert "labels" in batch
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(6.0).reshape(2, 3),
+                "b": {"c": jnp.ones((4,), jnp.int32)}}
+        save_pytree(tree, str(tmp_path), step=3)
+        save_pytree(jax.tree.map(lambda x: x * 2, tree), str(tmp_path), step=7)
+        assert latest_step(str(tmp_path)) == 7
+        back = restore_pytree(tree, str(tmp_path), step=3)
+        np.testing.assert_array_equal(back["a"], tree["a"])
+        back7 = restore_pytree(tree, str(tmp_path))
+        np.testing.assert_array_equal(back7["b"]["c"], tree["b"]["c"] * 2)
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        tree = {"a": jnp.ones((2,))}
+        save_pytree(tree, str(tmp_path), step=0)
+        with pytest.raises(ValueError):
+            restore_pytree({"a": jnp.ones((3,))}, str(tmp_path), step=0)
+
+
+class TestShardingSpecs:
+    def test_param_specs_cover_tree(self):
+        from repro.models.model import model_defs
+        from repro.sharding.specs import DEFAULT_RULES, param_spec_tree
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        for arch in ("h2o-danube-1.8b", "qwen3-moe-30b-a3b", "mamba2-1.3b"):
+            cfg = configs.get_arch(arch)
+            specs = param_spec_tree(cfg, mesh)
+            n_defs = len(jax.tree.leaves(
+                model_defs(cfg),
+                is_leaf=lambda x: hasattr(x, "axes")))
+            n_specs = len(jax.tree.leaves(
+                specs, is_leaf=lambda s: hasattr(s, "_normalized_spec")
+                or s.__class__.__name__ == "PartitionSpec"))
+            assert n_specs == n_defs
+
+    def test_batch_spec_divisibility(self):
+        from jax.sharding import PartitionSpec
+        from repro.sharding.specs import batch_spec
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        assert batch_spec(mesh, 8) == PartitionSpec(("data",))
+
+    def test_host_mesh_lowering_smoke(self):
+        """A reduced arch must lower+compile on the 1-device host mesh using
+        the same machinery as the production dry-run."""
+        import dataclasses
+        from repro.launch.dryrun import build_lowering
+        from conftest import reduced_f32
+        cfg = reduced_f32("h2o-danube-1.8b")
+        shape = dataclasses.replace(configs.TRAIN_4K, seq_len=32,
+                                    global_batch=2)
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        object.__setattr__  # keep flake quiet
+        from repro.configs.base import ARCHS
+        # temporarily register the reduced config under a test id
+        import repro.configs as C
+        test_id = "test-reduced-danube"
+        if test_id not in ARCHS:
+            cfg = dataclasses.replace(cfg, arch_id=test_id)
+            ARCHS.register(test_id)(cfg)
+        import repro.configs.base as base
+        sh = dataclasses.replace(shape, name="train_4k")
+        with mesh:
+            lowered = build_lowering(ARCHS[test_id], sh, mesh)
+            compiled = lowered.compile()
+        assert compiled.cost_analysis().get("flops", 0) > 0

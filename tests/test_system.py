@@ -1,0 +1,97 @@
+"""End-to-end behaviour tests for the AsyncFedED system."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import FedConfig
+from repro.core.simulator import FederatedSimulation
+
+
+@pytest.fixture(scope="module")
+def quick_fed():
+    return dataclasses.replace(configs.SYNTHETIC_1_1.fed,
+                               suspension_prob=0.1)
+
+
+class TestFederatedEndToEnd:
+    def test_asyncfeded_converges_synthetic(self, quick_fed):
+        sim = FederatedSimulation(configs.SYNTHETIC_1_1, quick_fed,
+                                  "asyncfeded", seed=0)
+        res = sim.run(max_time=20.0, eval_every=20)
+        assert res.total_updates > 50
+        assert res.max_accuracy() > 0.6       # paper reaches ~0.9; 20s slice
+
+    def test_simulator_deterministic(self, quick_fed):
+        r1 = FederatedSimulation(configs.SYNTHETIC_1_1, quick_fed,
+                                 "asyncfeded", seed=3).run(max_time=5.0)
+        r2 = FederatedSimulation(configs.SYNTHETIC_1_1, quick_fed,
+                                 "asyncfeded", seed=3).run(max_time=5.0)
+        assert r1.total_updates == r2.total_updates
+        np.testing.assert_allclose(
+            [p.accuracy for p in r1.points],
+            [p.accuracy for p in r2.points], rtol=1e-6)
+
+    @pytest.mark.parametrize("alg", ["fedasync+constant", "fedasync+hinge",
+                                     "fedbuff", "fedavg", "fedprox",
+                                     "asyncfeded-displacement"])
+    def test_baselines_run_and_learn(self, alg, quick_fed):
+        sim = FederatedSimulation(configs.SYNTHETIC_1_1, quick_fed, alg,
+                                  seed=0)
+        res = sim.run(max_time=10.0, eval_every=20)
+        assert res.points[-1].accuracy >= res.points[0].accuracy - 0.05
+
+    def test_adaptive_k_tracks_setpoint(self, quick_fed):
+        """After warmup the observed staleness must sit near gamma_bar."""
+        fed = dataclasses.replace(quick_fed, gamma_bar=2.0, kappa=1.0)
+        sim = FederatedSimulation(configs.SYNTHETIC_1_1, fed, "asyncfeded",
+                                  seed=0)
+        res = sim.run(max_time=25.0, eval_every=1000)
+        gammas = [r.gamma for r in res.history[len(res.history) // 2:]]
+        assert 0.5 <= float(np.median(gammas)) <= 6.0
+
+    def test_gmis_depth_bounds_memory(self, quick_fed):
+        fed = dataclasses.replace(quick_fed, gmis_depth=4)
+        sim = FederatedSimulation(configs.SYNTHETIC_1_1, fed, "asyncfeded",
+                                  seed=0)
+        sim.run(max_time=5.0, eval_every=50)
+        assert sim.server.gmis.num_stored <= 4
+
+
+class TestServeEndToEnd:
+    def test_serve_driver(self):
+        from repro.launch.serve import serve
+        out = serve("mamba2-1.3b", batch=1, prompt_len=16, gen_len=4,
+                    verbose=False)
+        assert out.shape[-1] >= 4
+
+    def test_arch_federated_training(self):
+        """Production-path federated pretraining at reduced scale: loss must
+        drop and AsyncFedED bookkeeping must engage."""
+        from repro.launch.train import run_arch_federated
+        out = run_arch_federated("h2o-danube-1.8b", steps=8, num_clients=2,
+                                 k_local=2, seed=0)
+        assert out["last_loss"] < out["first_loss"]
+        assert len(out["history"]) == 8
+
+
+class TestBeyondPaperVariants:
+    def test_per_leaf_aggregator_learns(self, quick_fed):
+        from repro.core.simulator import FederatedSimulation
+        from repro import configs as C
+        sim = FederatedSimulation(C.SYNTHETIC_1_1, quick_fed,
+                                  "asyncfeded-perleaf", seed=0)
+        res = sim.run(max_time=8.0, eval_every=25)
+        assert res.points[-1].accuracy > res.points[0].accuracy
+
+    def test_pallas_agg_in_training_loop(self):
+        """Route the server aggregation through the fused fedagg kernel
+        (interpret mode) inside the real federated arch-training driver."""
+        from repro.launch.train import run_arch_federated
+        out = run_arch_federated("mamba2-1.3b", steps=4, num_clients=2,
+                                 k_local=1, seed=0, use_pallas_agg=True)
+        assert len(out["history"]) == 4
+        assert all(h["eta"] > 0 for h in out["history"])
