@@ -16,7 +16,10 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, save_json, time_call
 from repro.core.aggregation import asyncfeded_aggregate
+from repro.kernels.fedagg import fedagg
+from repro.kernels.fedagg import ops as fedagg_ops
 from repro.utils import pytree as pt
+from repro.utils.xla import cost_analysis_dict
 
 
 def _mock_params(n_leaves: int = 20, leaf: int = 50_000, seed: int = 0):
@@ -51,10 +54,10 @@ def run(n_leaves: int = 20, leaf: int = 50_000) -> dict:
     us_flat = time_call(flat_fn, xt, xs, d)
 
     # structural: bytes accessed per variant
-    ca_tree = jax.jit(lambda a, b, c: asyncfeded_aggregate(
+    ca_tree = cost_analysis_dict(jax.jit(lambda a, b, c: asyncfeded_aggregate(
         a, b, c, lam=1.0, eps=1.0).params).lower(
-        tree, stale, delta).compile().cost_analysis()
-    ca_flat = flat_fn.lower(xt, xs, d).compile().cost_analysis()
+        tree, stale, delta).compile())
+    ca_flat = cost_analysis_dict(flat_fn.lower(xt, xs, d).compile())
     out = {
         "n_params": n,
         "tree_us": us_tree, "flat_us": us_flat,
@@ -65,7 +68,50 @@ def run(n_leaves: int = 20, leaf: int = 50_000) -> dict:
     emit("kernel/fedagg_tree", us_tree, f"bytes={out['tree_bytes']:.3e}")
     emit("kernel/fedagg_flat_fused", us_flat,
          f"bytes={out['flat_bytes']:.3e};speedup={out['speedup']:.2f}x")
+    out.update(run_batched())
     save_json("kernel_bench", out)
+    return out
+
+
+def run_batched(batch: int = 8, n_leaves: int = 20, leaf: int = 50_000
+                ) -> dict:
+    """Burst-arrival path: B deltas through the multi-delta batched kernel
+    (one norms sweep + one apply sweep + the host O(B^2) schedule) vs B
+    sequential fedagg_fused calls — the one-at-a-time Pallas server loop it
+    replaces. Both paths jit-cached and timed at steady state, in interpret
+    mode on CPU; the structural win (2 sweeps instead of B, 1/B the
+    pallas_call launches) is what carries to TPU."""
+    tree = _mock_params(n_leaves, leaf)
+    xt = fedagg_ops.pad_flat_vector(pt.tree_flatten_to_vector(tree))
+    n = xt.shape[0]
+    keys = jax.random.split(jax.random.PRNGKey(7), 2 * batch)
+    xs = jnp.stack([xt + 0.01 * jax.random.normal(k, (n,))
+                    for k in keys[:batch]])
+    ds = jnp.stack([0.001 * jax.random.normal(k, (n,))
+                    for k in keys[batch:]])
+    eta = jnp.float32(0.5)
+
+    @jax.jit
+    def sequential(x, stales, deltas):
+        cur = x
+        for i in range(batch):
+            cur, _ = fedagg.fedagg_fused(cur, stales[i], deltas[i], eta)
+        return cur
+
+    def batched(x, stales, deltas):
+        return fedagg_ops.flat_aggregate_batched(
+            x, stales, deltas, lam=1.0, eps=1.0)[0]
+
+    us_seq = time_call(sequential, xt, xs, ds, repeat=5)
+    us_bat = time_call(batched, xt, xs, ds, repeat=5)
+    out = {
+        "batch": batch,
+        "seq_fused_us": us_seq, "batched_us": us_bat,
+        "batched_speedup": us_seq / max(us_bat, 1e-9),
+    }
+    emit("kernel/fedagg_seq_fused_x8", us_seq, "")
+    emit("kernel/fedagg_batched", us_bat,
+         f"B={batch};speedup={out['batched_speedup']:.2f}x")
     return out
 
 

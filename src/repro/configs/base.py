@@ -212,6 +212,13 @@ class FedConfig:
     suspension_prob: float = 0.1
     transmission_mbps: float = 100.0
     seed: int = 0
+    # server runtime (beyond paper, DESIGN.md §4)
+    # "pytree": reference jnp passes | "pallas": flat-state fedagg kernels
+    backend: str = "pytree"
+    # >0: arrivals landing within this window of the first one are drained
+    # through the server's batched path in one multi-delta kernel sweep;
+    # 0 preserves the paper's one-aggregation-per-arrival semantics.
+    batch_window: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)

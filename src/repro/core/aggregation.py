@@ -17,6 +17,7 @@ from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.utils import pytree as pt
 
@@ -49,6 +50,63 @@ def staleness(x_t: PyTree, x_stale: PyTree, delta: PyTree,
 def adaptive_lr(gamma: jax.Array, lam: float, eps: float) -> jax.Array:
     """Eq.(7). Maximum value lam/eps (at gamma = 0)."""
     return lam / (gamma + eps)
+
+
+def gamma_eta_from_sq(dist_sq: jax.Array, dn_sq: jax.Array, lam: float,
+                      eps: float, cap: float = 0.0):
+    """Eq.(6)+(7) from *squared* norms — the form the fedagg kernels emit.
+    Returns (gamma, eta, dist, dnorm) with the exact zero-drift / zero-delta
+    semantics of :func:`staleness`."""
+    dist = jnp.sqrt(jnp.maximum(dist_sq, 0.0))
+    dnorm = jnp.sqrt(jnp.maximum(dn_sq, 0.0))
+    gamma = jnp.where(dist <= _TINY, 0.0, dist / jnp.maximum(dnorm, _TINY))
+    if cap > 0.0:
+        gamma = jnp.minimum(gamma, cap)
+    eta = adaptive_lr(gamma, lam, eps)
+    return gamma, eta, dist, dnorm
+
+
+def sequential_batch_schedule(dist0_sq, dn_sq, cross, gram, *, lam: float,
+                              eps: float, cap: float = 0.0):
+    """Host-side O(B^2) recursion that makes the batched kernel path
+    *sequentially equivalent* to B one-at-a-time Eq.(5-7) steps.
+
+    Applying update i after updates 0..i-1 moves the server to
+    ``x + sum_{k<i} eta_k d_k``, so its staleness distance expands to
+
+        dist_i^2 = ||x - xs_i||^2 + 2 sum_{k<i} eta_k <x - xs_i, d_k>
+                   + || sum_{k<i} eta_k d_k ||^2
+
+    — every term a scalar already emitted by ``fedagg_norms_batched``
+    (dist0_sq, cross C[i,k], Gram G). The recursion resolves eta_0..eta_{B-1}
+    in order from those B^2 scalars with no further passes over the
+    parameter vector; accumulated in f64 to keep the expansion stable.
+
+    Returns (etas, gammas, dists, dnorms) as f32 numpy arrays of shape (B,).
+    """
+    d0 = np.asarray(dist0_sq, np.float64)
+    dn = np.sqrt(np.maximum(np.asarray(dn_sq, np.float64), 0.0))
+    c = np.asarray(cross, np.float64)
+    g = np.asarray(gram, np.float64)
+    b = d0.shape[0]
+    etas = np.zeros(b)
+    gammas = np.zeros(b)
+    dists = np.zeros(b)
+    cdot = np.zeros(b)       # cdot[j] = sum_{k applied} eta_k C[j, k]
+    gdot = np.zeros(b)       # gdot[j] = sum_{k applied} eta_k G[j, k]
+    s = 0.0                  # || sum_{k applied} eta_k d_k ||^2
+    for i in range(b):
+        dist = np.sqrt(max(d0[i] + 2.0 * cdot[i] + s, 0.0))
+        gamma = 0.0 if dist <= _TINY else dist / max(dn[i], _TINY)
+        if cap > 0.0:
+            gamma = min(gamma, cap)
+        eta = lam / (gamma + eps)
+        s += 2.0 * eta * gdot[i] + eta * eta * g[i, i]
+        cdot += eta * c[:, i]
+        gdot += eta * g[:, i]
+        etas[i], gammas[i], dists[i] = eta, gamma, dist
+    f32 = lambda v: v.astype(np.float32)
+    return f32(etas), f32(gammas), f32(dists), f32(dn)
 
 
 @functools.partial(jax.jit, static_argnames=("lam", "eps", "cap"))

@@ -94,6 +94,12 @@ class DisplacementGMIS:
                       current: PyTree) -> jax.Array:
         return pt.tree_norm(self._disp[client_id])
 
+    def displacement(self, client_id) -> PyTree:
+        """Raw displacement accumulator x_t - x_{snapshot}. The flat-state
+        server feeds this straight into the fedagg norms kernel instead of
+        taking its norm leafwise."""
+        return self._disp[client_id]
+
     @property
     def num_stored(self) -> int:
         return len(self._disp)

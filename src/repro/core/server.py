@@ -11,6 +11,7 @@ import dataclasses
 from typing import Any, Dict, List, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedConfig
@@ -19,6 +20,7 @@ from repro.core.aggregation import (asyncfeded_aggregate,
                                     asyncfeded_aggregate_per_leaf,
                                     asyncfeded_aggregate_with_dist)
 from repro.core.gmis import DisplacementGMIS, RingGMIS
+from repro.kernels.fedagg import ops
 from repro.utils import pytree as pt
 
 PyTree = Any
@@ -70,15 +72,45 @@ class AsyncServer:
     def on_update(self, upd: ClientUpdate) -> ServerReply:
         raise NotImplementedError
 
+    def on_update_batch(self, upds: List[ClientUpdate]) -> List[ServerReply]:
+        """Drain a burst of arrivals (simulator ``batch_window``). Default:
+        apply one at a time, then hand every client the final model — in a
+        windowed drain all clients resume from the window's result. A batch
+        of one is exactly ``on_update``."""
+        replies = [self.on_update(u) for u in upds]
+        if len(replies) == 1:
+            return replies
+        return [ServerReply(self.params, self.t, r.k_next) for r in replies]
+
 
 class AsyncFedEDServer(AsyncServer):
-    """Algorithm 1: Euclidean-distance staleness + adaptive eta_g and K."""
+    """Algorithm 1: Euclidean-distance staleness + adaptive eta_g and K.
+
+    Two execution backends, selected with ``backend=``:
+
+    * ``"pytree"`` — the reference: four jnp passes over the parameter
+      pytree per update (Eq. 6 distance, delta norm, Eq. 5 AXPY).
+    * ``"pallas"`` — flat-state runtime: the global model lives as ONE
+      padded flat f32 vector (``pt.FlatParams``), the GMIS stores flat
+      vectors, and every update runs through the fused fedagg kernels — a
+      norms sweep and an AXPY sweep (DESIGN.md §4). Bursts drained via
+      :meth:`on_update_batch` go through the multi-delta batched kernel.
+    """
 
     name = "asyncfeded"
 
     def __init__(self, params: PyTree, fed: FedConfig,
-                 gmis_mode: str = "ring", per_leaf: bool = False):
-        super().__init__(params, fed)
+                 gmis_mode: str = "ring", per_leaf: bool = False,
+                 backend: str = "pytree", interpret: bool = True):
+        if backend not in ("pytree", "pallas"):
+            raise ValueError(f"unknown backend {backend!r}")
+        if backend == "pallas" and per_leaf:
+            raise ValueError("per-leaf staleness needs the pytree backend")
+        self.backend = backend
+        self._interpret = interpret
+        self._flat: Optional[pt.FlatParams] = None
+        self._zeros = None
+        super().__init__(params, fed)    # routes through the params setter
         self.per_leaf = per_leaf
         self.gmis_mode = gmis_mode
         if gmis_mode == "ring":
@@ -87,13 +119,34 @@ class AsyncFedEDServer(AsyncServer):
             self.gmis = DisplacementGMIS()
         else:
             raise ValueError(gmis_mode)
-        self.gmis.append(self.t, params)
+        self.gmis.append(self.t, self._gmis_state())
         self.kctl = AdaptiveK(fed.k_initial, fed.gamma_bar, fed.kappa,
                               fed.k_min, fed.k_max)
 
+    # --- flat-state plumbing: ``params`` stays the canonical pytree view ---
+    @property
+    def params(self) -> PyTree:
+        if self.backend == "pallas":
+            return self._flat.tree       # lazily unflattened, cached
+        return self._params
+
+    @params.setter
+    def params(self, value: PyTree) -> None:
+        if self.backend == "pallas":
+            self._flat = pt.FlatParams.from_tree(value, block=ops._BLOCK)
+            self._zeros = self._flat.spec.zeros()
+        else:
+            self._params = value
+
+    def _gmis_state(self):
+        """What the GMIS stores: flat vectors under the pallas backend (a
+        raw array is a one-leaf pytree, so Ring/Displacement code is
+        unchanged), full pytrees otherwise."""
+        return self._flat.vec if self.backend == "pallas" else self.params
+
     def _register(self, client_id: int) -> None:
         if self.gmis_mode == "displacement":
-            self.gmis.register_snapshot(client_id, self.t, self.params)
+            self.gmis.register_snapshot(client_id, self.t, self._gmis_state())
         else:
             self.gmis.register_snapshot(client_id, self.t)
 
@@ -101,7 +154,8 @@ class AsyncFedEDServer(AsyncServer):
         self._register(client_id)
         return ServerReply(self.params, self.t, self.kctl.get(client_id))
 
-    def on_update(self, upd: ClientUpdate) -> ServerReply:
+    # ------------------------------------------------------------ backends --
+    def _aggregate_pytree(self, upd: ClientUpdate):
         fed = self.fed
         if self.gmis_mode == "displacement":
             dist = self.gmis.distance_from(upd.client_id, upd.snapshot_iter,
@@ -111,23 +165,94 @@ class AsyncFedEDServer(AsyncServer):
                 cap=fed.staleness_cap)
             self.gmis.release(upd.client_id)
         else:
-            stale, actual = self.gmis.get(upd.snapshot_iter)
+            stale, _ = self.gmis.get(upd.snapshot_iter)
             agg = (asyncfeded_aggregate_per_leaf if self.per_leaf
                    else asyncfeded_aggregate)
             res = agg(self.params, stale, upd.delta, lam=fed.lam,
                       eps=fed.eps, cap=fed.staleness_cap)
         self.params = res.params
+        return res.gamma, res.eta, res.dist, res.delta_norm, res.params
+
+    def _aggregate_flat(self, upd: ClientUpdate):
+        fed = self.fed
+        d = self._flat.spec.flatten(upd.delta)
+        if self.gmis_mode == "displacement":
+            new_vec, gamma, eta, dist, dnorm = ops.flat_aggregate_displacement(
+                self._flat.vec, self.gmis.displacement(upd.client_id), d,
+                self._zeros, lam=fed.lam, eps=fed.eps,
+                cap=fed.staleness_cap, interpret=self._interpret)
+            self.gmis.release(upd.client_id)
+        else:
+            stale, _ = self.gmis.get(upd.snapshot_iter)
+            new_vec, gamma, eta, dist, dnorm = ops.flat_aggregate(
+                self._flat.vec, stale, d, lam=fed.lam, eps=fed.eps,
+                cap=fed.staleness_cap, interpret=self._interpret)
+        self._flat = self._flat.replace(new_vec)
+        return gamma, eta, dist, dnorm, d
+
+    def on_update(self, upd: ClientUpdate) -> ServerReply:
+        if self.backend == "pallas":
+            gamma, eta, dist, dnorm, delta = self._aggregate_flat(upd)
+        else:
+            gamma, eta, dist, dnorm, _ = self._aggregate_pytree(upd)
+            delta = upd.delta
         self.t += 1
-        self.gmis.append(self.t, self.params)
-        self.gmis.on_aggregate(res.eta, upd.delta)
-        gamma = float(res.gamma)
+        self.gmis.append(self.t, self._gmis_state())
+        self.gmis.on_aggregate(eta, delta)
+        gamma = float(gamma)
         k_next = self.kctl.observe(upd.client_id, gamma)
         self.history.append(UpdateRecord(
             self.t, upd.client_id, self.t - upd.snapshot_iter, gamma,
-            float(res.eta), upd.k_used, k_next, float(res.dist),
-            float(res.delta_norm)))
+            float(eta), upd.k_used, k_next, float(dist), float(dnorm)))
         self._register(upd.client_id)
         return ServerReply(self.params, self.t, k_next)
+
+    def on_update_batch(self, upds: List[ClientUpdate]) -> List[ServerReply]:
+        """Burst path: B deltas through the multi-delta batched kernel in
+        two grid sweeps, sequential-equivalent to B ``on_update`` calls
+        (see ``aggregation.sequential_batch_schedule``). Only the ring-GMIS
+        flat backend has the stacked stale models this needs; everything
+        else falls back to the sequential default."""
+        if (self.backend != "pallas" or self.gmis_mode != "ring"
+                or len(upds) == 1):
+            replies = [self.on_update(u) for u in upds]
+            if len(replies) > 1:
+                # Every drained client resumes from the window's FINAL
+                # model, so re-anchor their snapshot registrations there —
+                # in displacement mode on_update zeroed each accumulator at
+                # an intermediate model and then folded the remaining batch
+                # updates into it, which would charge clients drift they
+                # never experienced.
+                for u in upds:
+                    self._register(u.client_id)
+                replies = [ServerReply(self.params, self.t, r.k_next)
+                           for r in replies]
+            return replies
+        fed = self.fed
+        spec = self._flat.spec
+        deltas = jnp.stack([spec.flatten(u.delta) for u in upds])
+        stales = jnp.stack([self.gmis.get(u.snapshot_iter)[0] for u in upds])
+        new_vec, etas, gammas, dists, dnorms = ops.flat_aggregate_batched(
+            self._flat.vec, stales, deltas, lam=fed.lam, eps=fed.eps,
+            cap=fed.staleness_cap, interpret=self._interpret)
+        self._flat = self._flat.replace(new_vec)
+        k_nexts = []
+        for i, upd in enumerate(upds):
+            self.t += 1
+            gamma = float(gammas[i])
+            k_next = self.kctl.observe(upd.client_id, gamma)
+            self.history.append(UpdateRecord(
+                self.t, upd.client_id, self.t - upd.snapshot_iter, gamma,
+                float(etas[i]), upd.k_used, k_next, float(dists[i]),
+                float(dnorms[i])))
+            k_nexts.append(k_next)
+        # Intermediate models x_{t+1}..x_{t+B-1} are never handed to any
+        # client (every drained client resumes from the window's final
+        # model), so only the final version enters the GMIS.
+        self.gmis.append(self.t, self._gmis_state())
+        for upd in upds:
+            self._register(upd.client_id)
+        return [ServerReply(self.params, self.t, k) for k in k_nexts]
 
 
 class FedAsyncServer(AsyncServer):
@@ -230,6 +355,9 @@ class SyncServer:
 
 
 def make_server(name: str, params: PyTree, fed: FedConfig, **kw):
+    """Build a server by aggregator name. AsyncFedED variants accept
+    ``backend="pytree"|"pallas"`` (flat-state fedagg-kernel runtime, see
+    DESIGN.md §4.1), ``gmis_mode``, and ``interpret`` via ``**kw``."""
     name = name.lower()
     if name == "asyncfeded":
         return AsyncFedEDServer(params, fed, **kw)
@@ -238,11 +366,11 @@ def make_server(name: str, params: PyTree, fed: FedConfig, **kw):
     if name == "asyncfeded-displacement":
         return AsyncFedEDServer(params, fed, gmis_mode="displacement", **kw)
     if name == "fedasync+constant":
-        return FedAsyncServer(params, fed, mode="constant")
+        return FedAsyncServer(params, fed, mode="constant", **kw)
     if name == "fedasync+hinge":
-        return FedAsyncServer(params, fed, mode="hinge")
+        return FedAsyncServer(params, fed, mode="hinge", **kw)
     if name == "fedbuff":
-        return FedBuffServer(params, fed)
+        return FedBuffServer(params, fed, **kw)
     if name in ("fedavg", "fedprox"):
-        return SyncServer(params, fed, name=name)
+        return SyncServer(params, fed, name=name, **kw)
     raise ValueError(f"unknown aggregator {name!r}")

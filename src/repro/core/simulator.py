@@ -7,7 +7,11 @@ Reproduces, with a deterministic virtual clock:
 * client suspension — each round a client hangs with probability P for a
   random time w.r.t. the maximum running time;
 * asynchronous arrivals (every aggregator sees the same event trace for a
-  given seed, so curves are comparable across algorithms).
+  given seed, so curves are comparable across algorithms);
+* burst-arrival batching (beyond paper, DESIGN.md §4.3) — with
+  ``batch_window > 0`` all updates landing within the window of the first
+  one drain through ``server.on_update_batch`` in one multi-delta sweep;
+  ``batch_window = 0`` preserves one-aggregation-per-arrival exactly.
 
 Synchronous baselines (FedAvg/FedProx) run the same clients but the round
 duration is the max over clients — the straggler effect the paper targets.
@@ -66,16 +70,24 @@ class FederatedSimulation:
 
     def __init__(self, task: PaperTaskConfig, fed: FedConfig,
                  algorithm: str = "asyncfeded", seed: int = 0,
-                 heterogeneity: float = 0.6, server_kwargs: dict = {}):
+                 heterogeneity: float = 0.6, server_kwargs: dict = {},
+                 batch_window: Optional[float] = None):
         self.task = task
         self.fed = fed
         self.algorithm = algorithm
+        self.batch_window = (fed.batch_window if batch_window is None
+                             else batch_window)
         self.rng = np.random.default_rng(seed + 99_991)
         train_sets, (tx, ty) = load_task_datasets(task, seed=seed)
         self.test_x, self.test_y = jnp.asarray(tx), jnp.asarray(ty)
         params = small.init_task_model(jax.random.PRNGKey(seed), task)
         self.model_bytes = pt.tree_bytes(params)
-        self.server = make_server(algorithm, params, fed, **server_kwargs)
+        kw = dict(server_kwargs)
+        if (algorithm.startswith("asyncfeded")
+                and algorithm != "asyncfeded-perleaf"):
+            # per-leaf staleness only exists on the pytree backend
+            kw.setdefault("backend", fed.backend)
+        self.server = make_server(algorithm, params, fed, **kw)
         self.clients = [Client(i, task, train_sets[i], fed, seed=seed)
                         for i in range(fed.num_clients)]
         # heterogeneity: per-client step time, fixed for the run
@@ -126,10 +138,37 @@ class FederatedSimulation:
             heapq.heappush(heap, (dur, seq, c.client_id, upd))
             seq += 1
         updates = 0
+        window = self.batch_window
         while heap:
             now, _, cid, upd = heapq.heappop(heap)
             if now > max_time:
                 break
+            if window > 0:
+                # Burst drain: everything landing within `window` of this
+                # arrival is aggregated in one batched server call; the
+                # clock advances to the last drained arrival and every
+                # drained client resumes from the window's final model.
+                batch = [(cid, upd)]
+                horizon = min(now + window, max_time)
+                while heap and heap[0][0] <= horizon:
+                    now, _, cid2, upd2 = heapq.heappop(heap)
+                    batch.append((cid2, upd2))
+                replies = self.server.on_update_batch([u for _, u in batch])
+                # one eval per drained batch even when it spans several
+                # eval_every boundaries — params and clock are identical
+                # for every update in the window
+                if updates // eval_every != (updates + len(batch)) // eval_every:
+                    points.append(self._eval_point(now))
+                for (bcid, _), reply in zip(batch, replies):
+                    updates += 1
+                    c = self.clients[bcid]
+                    nxt, _ = c.run_local(reply.params, reply.k_next,
+                                         reply.iteration, self.prox_mu)
+                    dur = self._tx_time() + self._round_duration(
+                        bcid, reply.k_next)
+                    heapq.heappush(heap, (now + dur, seq, bcid, nxt))
+                    seq += 1
+                continue
             reply = self.server.on_update(upd)
             updates += 1
             if updates % eval_every == 0:

@@ -26,6 +26,37 @@ LANES = 128
 BLOCK_ROWS = 512                       # 512*128*4B = 256 KiB per operand tile
 
 
+def _f32(x: jax.Array) -> jax.Array:
+    """Upcast to f32 accumulation dtype; compile-time no-op for f32 tiles
+    (skipping the convert keeps interpret-mode op counts down)."""
+    return x if x.dtype == jnp.float32 else x.astype(jnp.float32)
+
+
+# operand budget per grid step of the multi-delta kernels (half of a
+# 16 MiB/core VMEM, leaving room for outputs and double buffering)
+_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def _batched_rows(b: int, n: int, interpret: bool) -> int:
+    """Rows per grid step for the multi-delta kernels.
+
+    Compiled (TPU): halved from BLOCK_ROWS — staying a divisor, so
+    BLOCK-padded inputs still tile evenly — until the (2B+1) resident f32
+    operand tiles fit the VMEM budget; up to B~15 the full BLOCK_ROWS tile
+    fits and the batched sweep runs 1/B the steps of the one-at-a-time loop.
+    Interpreted (CPU): the grid models no real memory and the emulator pays
+    roughly (total operand bytes) per grid step, so run the whole sweep as
+    ONE step. The kernel math is tile-count invariant (tests sweep several
+    block counts against the jnp oracle).
+    """
+    if interpret:
+        return n // LANES
+    rows = BLOCK_ROWS
+    while rows > 8 and (2 * max(b, 1) + 1) * rows * LANES * 4 > _VMEM_BUDGET_BYTES:
+        rows //= 2
+    return rows
+
+
 def _norms_kernel(xt_ref, xs_ref, d_ref, out_ref):
     xt = xt_ref[...].astype(jnp.float32)
     xs = xs_ref[...].astype(jnp.float32)
@@ -82,6 +113,117 @@ def fedagg_axpy(x_t: jax.Array, delta: jax.Array, eta: jax.Array,
         out_shape=jax.ShapeDtypeStruct((g * BLOCK_ROWS, LANES), x_t.dtype),
         interpret=interpret,
     )(eta.reshape(1, 1).astype(jnp.float32), shaped(x_t), shaped(delta))
+    return out.reshape(n)
+
+
+def _norms_batched_kernel(xt_ref, xs_ref, d_ref, dist_ref, dn_ref,
+                          c_ref, g_ref):
+    """Multi-delta phase 1: one tile of x_t against B stacked (stale, delta)
+    pairs. Beyond the per-update norms, emits the cross terms needed to make
+    the batched apply *sequentially equivalent* (DESIGN.md §4.3):
+
+        dist_ref[b] = ||x_t - x_stale_b||^2   (partial)
+        dn_ref[b]   = ||delta_b||^2           (partial)
+        c_ref[b,k]  = <x_t - x_stale_b, delta_k>
+        g_ref[k,l]  = <delta_k, delta_l>
+
+    The two Gram blocks go through the MXU as (B, tile) @ (tile, B) matmuls.
+    """
+    b = d_ref.shape[0]
+    xt = _f32(xt_ref[...])                          # (rows, LANES)
+    xs = _f32(xs_ref[...])                          # (B, rows, LANES)
+    d = _f32(d_ref[...]).reshape(b, -1)
+    s = (xt[None] - xs).reshape(b, -1)              # drift vectors
+    # 2-D dots: MXU on TPU, one sgemm each on the CPU interpreter
+    c = jnp.dot(s, d.T, preferred_element_type=jnp.float32)
+    g = jnp.dot(d, d.T, preferred_element_type=jnp.float32)
+    dist_ref[0, :] = jnp.sum(s * s, axis=1)
+    dn_ref[0, :] = jnp.sum(d * d, axis=1)
+    c_ref[0] = c
+    g_ref[0] = g
+
+
+def fedagg_norms_batched(x_t: jax.Array, x_stales: jax.Array,
+                         deltas: jax.Array, *, interpret: bool = True):
+    """Batched phase 1 over B concurrent arrivals in ONE grid sweep.
+
+    Inputs: x_t (n,), x_stales (B, n), deltas (B, n); n a BLOCK multiple
+    (zero-padded by ops.py — padding contributes 0 to every sum).
+    Returns (dist0_sq (B,), dn_sq (B,), cross (B, B), gram (B, B)) f32,
+    summed over blocks. Each grid step keeps (2B+1) operand tiles resident,
+    so rows-per-step shrinks with B to bound VMEM at the single-delta
+    footprint (~3 * 256 KiB).
+    """
+    b, n = deltas.shape
+    assert x_t.shape == (n,) and x_stales.shape == (b, n)
+    rows = _batched_rows(b, n, interpret)
+    block = rows * LANES
+    assert n % (BLOCK_ROWS * LANES) == 0, (n, BLOCK_ROWS * LANES)
+    g = n // block
+    shaped1 = lambda a: a.reshape(g * rows, LANES)
+    shapedb = lambda a: a.reshape(b, g * rows, LANES)
+    dist, dn, c, gram = pl.pallas_call(
+        _norms_batched_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((b, rows, LANES), lambda i: (0, i, 0)),
+            pl.BlockSpec((b, rows, LANES), lambda i: (0, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, b), lambda i: (i, 0)),
+            pl.BlockSpec((1, b), lambda i: (i, 0)),
+            pl.BlockSpec((1, b, b), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, b, b), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, b), jnp.float32),
+            jax.ShapeDtypeStruct((g, b), jnp.float32),
+            jax.ShapeDtypeStruct((g, b, b), jnp.float32),
+            jax.ShapeDtypeStruct((g, b, b), jnp.float32),
+        ],
+        interpret=interpret,
+    )(shaped1(x_t), shapedb(x_stales), shapedb(deltas))
+    return (jnp.sum(dist, axis=0), jnp.sum(dn, axis=0),
+            jnp.sum(c, axis=0), jnp.sum(gram, axis=0))
+
+
+def _apply_batched_kernel(etas_ref, xt_ref, d_ref, out_ref):
+    etas = etas_ref[...]                            # (1, B) f32
+    xt = _f32(xt_ref[...])                          # (rows, LANES)
+    d = _f32(d_ref[...])                            # (B, rows, LANES)
+    acc = jnp.dot(etas, d.reshape(d.shape[0], -1),
+                  preferred_element_type=jnp.float32)
+    out_ref[...] = (xt + acc.reshape(xt.shape)).astype(out_ref.dtype)
+
+
+def fedagg_apply_batched(x_t: jax.Array, deltas: jax.Array, etas: jax.Array,
+                         *, interpret: bool = True) -> jax.Array:
+    """Batched Eq.(5): x_t + sum_b etas[b] * deltas[b] in ONE grid sweep.
+
+    With etas from ``sequential_batch_schedule`` this equals applying the B
+    updates one at a time (Eq.(5) is linear in the deltas), while reading
+    x_t once instead of B times and writing one output instead of B.
+    """
+    b, n = deltas.shape
+    assert x_t.shape == (n,) and etas.shape == (b,)
+    rows = _batched_rows(b, n, interpret)
+    block = rows * LANES
+    assert n % (BLOCK_ROWS * LANES) == 0, (n, BLOCK_ROWS * LANES)
+    g = n // block
+    out = pl.pallas_call(
+        _apply_batched_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, b), lambda i: (0, 0)),          # etas broadcast
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((b, rows, LANES), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g * rows, LANES), x_t.dtype),
+        interpret=interpret,
+    )(etas.reshape(1, b).astype(jnp.float32),
+      x_t.reshape(g * rows, LANES), deltas.reshape(b, g * rows, LANES))
     return out.reshape(n)
 
 

@@ -1,16 +1,26 @@
-"""Jit'd public wrapper: AsyncFedED aggregation over parameter pytrees via
-the fused Pallas kernels. Drop-in replacement for
-``repro.core.aggregation.asyncfeded_aggregate``.
+"""Public wrappers over the fused fedagg Pallas kernels.
+
+Two API levels:
+
+* **flat** (``flat_aggregate`` / ``flat_aggregate_batched``) — operates on
+  already-padded flat f32 vectors. This is the hot path of the flat-state
+  server runtime (``AsyncFedEDServer(backend="pallas")``), which keeps the
+  global model flattened permanently so no per-step tree walk happens.
+* **pytree** (``asyncfeded_aggregate_pallas`` /
+  ``asyncfeded_aggregate_batched_pallas``) — drop-in replacements for
+  ``repro.core.aggregation.asyncfeded_aggregate`` that flatten/unflatten at
+  the boundary. Used by tests and one-off callers.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any
+from typing import Any, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.aggregation import AggregationResult
+from repro.core.aggregation import (AggregationResult, gamma_eta_from_sq,
+                                    sequential_batch_schedule)
 from repro.kernels.fedagg import fedagg
 from repro.kernels.fedagg.fedagg import BLOCK_ROWS, LANES
 from repro.utils import pytree as pt
@@ -19,11 +29,79 @@ PyTree = Any
 _BLOCK = BLOCK_ROWS * LANES
 
 
-def _pad_flat(tree: PyTree) -> jax.Array:
-    vec = pt.tree_flatten_to_vector(tree)
+def pad_flat_vector(vec: jax.Array) -> jax.Array:
+    """Zero-pad a flat (n,) vector to the kernel BLOCK multiple. Zeros
+    contribute 0 to every norm/dot the kernels emit and are sliced off
+    after the AXPY, so padding is value-transparent."""
     pad = (-vec.shape[0]) % _BLOCK
-    return jnp.pad(vec, (0, pad))
+    return jnp.pad(vec, (0, pad)) if pad else vec
 
+
+def _pad_flat(tree: PyTree) -> jax.Array:
+    return pad_flat_vector(pt.tree_flatten_to_vector(tree))
+
+
+# ---------------------------------------------------------------- flat API --
+# The flat entry points are jit-cached: the server calls them once per
+# arrival with fixed shapes, so tracing/lowering the interpret-mode grid
+# happens once per (shape, batch) instead of per update.
+
+@functools.partial(jax.jit, static_argnames=("lam", "eps", "cap", "interpret"))
+def flat_aggregate(x_t: jax.Array, x_stale: jax.Array, delta: jax.Array, *,
+                   lam: float, eps: float, cap: float = 0.0,
+                   interpret: bool = True):
+    """One Eq.(5-7) step on padded flat vectors: a norms sweep, scalar
+    gamma/eta, an AXPY sweep. Returns (new_vec, gamma, eta, dist, dnorm)."""
+    sq = fedagg.fedagg_norms(x_t, x_stale, delta, interpret=interpret)
+    gamma, eta, dist, dnorm = gamma_eta_from_sq(sq[0], sq[1], lam, eps, cap)
+    new = fedagg.fedagg_axpy(x_t, delta, eta, interpret=interpret)
+    return new, gamma, eta, dist, dnorm
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "eps", "cap", "interpret"))
+def flat_aggregate_displacement(x_t: jax.Array, disp: jax.Array,
+                                delta: jax.Array, zeros: jax.Array, *,
+                                lam: float, eps: float, cap: float = 0.0,
+                                interpret: bool = True):
+    """Displacement-GMIS variant (DESIGN.md §3): the stale model is never
+    materialized; ``disp`` = x_t - x_{t-tau} is maintained incrementally, so
+    one norms sweep over (disp, delta) — with a cached ``zeros`` vector in
+    the x_stale slot — yields both Eq.(6) norms, then one AXPY sweep applies
+    Eq.(5). Returns (new_vec, gamma, eta, dist, dnorm)."""
+    sq = fedagg.fedagg_norms(disp, zeros, delta, interpret=interpret)
+    gamma, eta, dist, dnorm = gamma_eta_from_sq(sq[0], sq[1], lam, eps, cap)
+    new = fedagg.fedagg_axpy(x_t, delta, eta, interpret=interpret)
+    return new, gamma, eta, dist, dnorm
+
+
+_norms_batched = jax.jit(fedagg.fedagg_norms_batched,
+                         static_argnames=("interpret",))
+_apply_batched = jax.jit(fedagg.fedagg_apply_batched,
+                         static_argnames=("interpret",))
+
+
+def flat_aggregate_batched(x_t: jax.Array, x_stales: jax.Array,
+                           deltas: jax.Array, *, lam: float, eps: float,
+                           cap: float = 0.0, interpret: bool = True):
+    """B concurrent arrivals in two grid sweeps, sequential-equivalent to B
+    one-at-a-time ``flat_aggregate`` calls (see
+    ``aggregation.sequential_batch_schedule``).
+
+    x_t (n,), x_stales (B, n), deltas (B, n), n a BLOCK multiple.
+    Returns (new_vec, etas, gammas, dists, dnorms) — the per-update scalars
+    as f32 numpy arrays in arrival order. Not jitted end-to-end: the
+    sequential-equivalence schedule resolves on the host between sweeps.
+    """
+    d0, dn_sq, cross, gram = _norms_batched(x_t, x_stales, deltas,
+                                            interpret=interpret)
+    etas, gammas, dists, dnorms = sequential_batch_schedule(
+        d0, dn_sq, cross, gram, lam=lam, eps=eps, cap=cap)
+    new = _apply_batched(x_t, deltas, jnp.asarray(etas),
+                         interpret=interpret)
+    return new, etas, gammas, dists, dnorms
+
+
+# -------------------------------------------------------------- pytree API --
 
 @functools.partial(jax.jit, static_argnames=("lam", "eps", "cap", "interpret"))
 def asyncfeded_aggregate_pallas(x_t: PyTree, x_stale: PyTree, delta: PyTree,
@@ -32,13 +110,25 @@ def asyncfeded_aggregate_pallas(x_t: PyTree, x_stale: PyTree, delta: PyTree,
     xt = _pad_flat(x_t)
     xs = _pad_flat(x_stale)
     d = _pad_flat(delta)
-    sq = fedagg.fedagg_norms(xt, xs, d, interpret=interpret)
-    dist, dnorm = jnp.sqrt(sq[0]), jnp.sqrt(sq[1])
-    gamma = jnp.where(dist <= 1e-12, 0.0, dist / jnp.maximum(dnorm, 1e-12))
-    if cap > 0.0:
-        gamma = jnp.minimum(gamma, cap)
-    eta = lam / (gamma + eps)
-    new_flat = fedagg.fedagg_axpy(xt, d, eta, interpret=interpret)
+    new_flat, gamma, eta, dist, dnorm = flat_aggregate(
+        xt, xs, d, lam=lam, eps=eps, cap=cap, interpret=interpret)
     n = pt.tree_size(x_t)
     new = pt.tree_unflatten_from_vector(new_flat[:n], x_t)
     return AggregationResult(new, gamma, eta, dist, dnorm)
+
+
+def asyncfeded_aggregate_batched_pallas(
+        x_t: PyTree, x_stales: Sequence[PyTree], deltas: Sequence[PyTree], *,
+        lam: float, eps: float, cap: float = 0.0, interpret: bool = True
+) -> Tuple[PyTree, Any, Any, Any, Any]:
+    """Batched pytree entry point: stacks B (stale, delta) pairs and drains
+    them through the multi-delta kernels. Returns
+    (new_params, etas, gammas, dists, dnorms). Not jitted — the
+    sequential-equivalence schedule runs on the host between the sweeps."""
+    spec = pt.FlatSpec(x_t, block=_BLOCK)
+    xt = spec.flatten(x_t)
+    xs = jnp.stack([spec.flatten(t) for t in x_stales])
+    d = jnp.stack([spec.flatten(t) for t in deltas])
+    new_flat, etas, gammas, dists, dnorms = flat_aggregate_batched(
+        xt, xs, d, lam=lam, eps=eps, cap=cap, interpret=interpret)
+    return spec.unflatten(new_flat), etas, gammas, dists, dnorms

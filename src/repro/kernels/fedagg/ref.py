@@ -26,3 +26,48 @@ def aggregate_ref(x_t: jax.Array, x_stale: jax.Array, delta: jax.Array,
     gamma = jnp.where(dist <= 1e-12, 0.0, dist / jnp.maximum(dnorm, 1e-12))
     eta = lam / (gamma + eps)
     return axpy_ref(x_t, delta, eta), gamma, eta
+
+
+def norms_batched_ref(x_t: jax.Array, x_stales: jax.Array,
+                      deltas: jax.Array):
+    """Oracle for fedagg_norms_batched: per-update norms + cross/Gram terms.
+    x_t (n,), x_stales (B, n), deltas (B, n) ->
+    (dist0_sq (B,), dn_sq (B,), cross (B, B), gram (B, B))."""
+    s = x_t[None].astype(jnp.float32) - x_stales.astype(jnp.float32)
+    d = deltas.astype(jnp.float32)
+    return (jnp.sum(s * s, axis=1), jnp.sum(d * d, axis=1),
+            s @ d.T, d @ d.T)
+
+
+def apply_batched_ref(x_t: jax.Array, deltas: jax.Array,
+                      etas: jax.Array) -> jax.Array:
+    """Oracle for fedagg_apply_batched: x_t + etas @ deltas."""
+    acc = etas.astype(jnp.float32) @ deltas.astype(jnp.float32)
+    return (x_t.astype(jnp.float32) + acc).astype(x_t.dtype)
+
+
+def aggregate_batched_seq_ref(x_t: jax.Array, x_stales: jax.Array,
+                              deltas: jax.Array, lam: float, eps: float,
+                              cap: float = 0.0):
+    """Sequential oracle for the batched path: B one-at-a-time Eq.(5-7)
+    steps, each update's staleness measured against the *moving* x. The
+    batched kernel + ``sequential_batch_schedule`` must reproduce this.
+    Returns (new, etas (B,), gammas (B,), dists (B,))."""
+    cur = x_t.astype(jnp.float32)
+    etas, gammas, dists = [], [], []
+    for i in range(deltas.shape[0]):
+        d = deltas[i].astype(jnp.float32)
+        diff = cur - x_stales[i].astype(jnp.float32)
+        dist = jnp.sqrt(jnp.sum(diff * diff))
+        dn = jnp.sqrt(jnp.sum(d * d))
+        gamma = jnp.where(dist <= 1e-12, 0.0,
+                          dist / jnp.maximum(dn, 1e-12))
+        if cap > 0.0:
+            gamma = jnp.minimum(gamma, cap)
+        eta = lam / (gamma + eps)
+        cur = cur + eta * d
+        etas.append(eta)
+        gammas.append(gamma)
+        dists.append(dist)
+    return (cur.astype(x_t.dtype), jnp.stack(etas), jnp.stack(gammas),
+            jnp.stack(dists))

@@ -27,6 +27,7 @@ import jax
 import numpy as np
 
 from repro import configs
+from repro.utils.xla import cost_analysis_dict
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.launch import mesh as mesh_lib
 from repro.launch import steps as steps_lib
@@ -266,7 +267,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             ma = compiled.memory_analysis()
-            ca = compiled.cost_analysis()
+            ca = cost_analysis_dict(compiled)
             hlo = compiled.as_text()
         coll = parse_collectives(hlo)
         flops_dev_xla = float(ca.get("flops", 0.0))
@@ -364,7 +365,7 @@ def run_aggregate(arch: str, multi_pod: bool,
                     fn, in_shardings=(pshard, pshard, pshard),
                 ).lower(params_abs, params_abs, params_abs)
             compiled = lowered.compile()
-            ca = compiled.cost_analysis()
+            ca = cost_analysis_dict(compiled)
             ma = compiled.memory_analysis()
             coll = parse_collectives(compiled.as_text())
         nbytes = cfg.param_count() * 4

@@ -8,7 +8,7 @@ helpers are the pure-jnp reference layer; the fused Pallas path lives in
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -101,6 +101,83 @@ def tree_unflatten_from_vector(vec: jax.Array, like: PyTree) -> PyTree:
         out.append(jnp.reshape(vec[off : off + n], l.shape).astype(l.dtype))
         off += n
     return jax.tree.unflatten(treedef, out)
+
+
+class FlatSpec:
+    """Cached flatten/unflatten spec for a fixed pytree structure.
+
+    Flattening a pytree for the fedagg kernels means: ravel every leaf to
+    f32, concatenate, and zero-pad to a multiple of ``block`` (the kernel's
+    VMEM tile). Doing that naively per server step re-walks the tree and
+    re-computes shapes/offsets each time; ``FlatSpec`` captures the treedef,
+    leaf shapes/dtypes and the padded length once so both directions are a
+    single concat/split with no Python re-derivation.
+    """
+
+    __slots__ = ("treedef", "shapes", "dtypes", "sizes", "n", "n_padded",
+                 "block")
+
+    def __init__(self, tree: PyTree, block: int = 1):
+        leaves, self.treedef = jax.tree.flatten(tree)
+        self.shapes = tuple(l.shape for l in leaves)
+        self.dtypes = tuple(l.dtype for l in leaves)
+        self.sizes = tuple(int(np.prod(s)) for s in self.shapes)
+        self.n = int(sum(self.sizes))
+        self.block = int(block)
+        self.n_padded = self.n + (-self.n) % max(self.block, 1)
+
+    def flatten(self, tree: PyTree) -> jax.Array:
+        """Pytree (matching this spec) -> padded flat f32 vector."""
+        vec = tree_flatten_to_vector(tree)
+        if self.n_padded != self.n:
+            vec = jnp.pad(vec, (0, self.n_padded - self.n))
+        return vec
+
+    def unflatten(self, vec: jax.Array) -> PyTree:
+        """Padded flat vector -> pytree with the original shapes/dtypes."""
+        out, off = [], 0
+        for shape, dtype, size in zip(self.shapes, self.dtypes, self.sizes):
+            out.append(jnp.reshape(vec[off:off + size], shape).astype(dtype))
+            off += size
+        return jax.tree.unflatten(self.treedef, out)
+
+    def zeros(self) -> jax.Array:
+        return jnp.zeros((self.n_padded,), jnp.float32)
+
+
+class FlatParams:
+    """A parameter pytree held as one padded flat f32 array.
+
+    The flat-state server runtime (``AsyncFedEDServer(backend="pallas")``)
+    keeps the global model in this form so every Eq.(5-7) step is a kernel
+    sweep over one contiguous vector instead of a Python walk over the tree.
+    ``tree`` materializes the pytree view lazily and caches it — the cache
+    is dropped whenever the vector is replaced.
+    """
+
+    __slots__ = ("vec", "spec", "_tree_cache")
+
+    def __init__(self, vec: jax.Array, spec: FlatSpec,
+                 tree_cache: Optional[PyTree] = None):
+        assert vec.shape == (spec.n_padded,), (vec.shape, spec.n_padded)
+        self.vec = vec
+        self.spec = spec
+        self._tree_cache = tree_cache
+
+    @classmethod
+    def from_tree(cls, tree: PyTree, block: int = 1) -> "FlatParams":
+        spec = FlatSpec(tree, block=block)
+        return cls(spec.flatten(tree), spec, tree_cache=tree)
+
+    @property
+    def tree(self) -> PyTree:
+        if self._tree_cache is None:
+            self._tree_cache = self.spec.unflatten(self.vec)
+        return self._tree_cache
+
+    def replace(self, vec: jax.Array) -> "FlatParams":
+        """New FlatParams sharing the spec; invalidates the tree cache."""
+        return FlatParams(vec, self.spec)
 
 
 def tree_map_with_path_names(fn: Callable[[str, jax.Array], Any], tree: PyTree) -> PyTree:

@@ -1,0 +1,14 @@
+"""XLA compiled-artifact introspection helpers."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+
+def cost_analysis_dict(compiled) -> Dict[str, Any]:
+    """``Compiled.cost_analysis()`` returns a dict in recent jax but a
+    one-element list of dicts in older releases (and ``None`` on some
+    backends). Normalize to a plain dict so callers can ``.get`` keys."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}

@@ -92,6 +92,73 @@ class TestAggregate:
                                    rtol=1e-6)
 
 
+class TestAggregationEdgeCasesBothBackends:
+    """Eq.(6/7) boundary semantics must agree between the pytree reference
+    and the flat Pallas backend (kernels/fedagg/ops.py)."""
+
+    LAM, EPS = 2.0, 0.5
+
+    def _both(self, x_t, x_s, d, cap=0.0):
+        from repro.kernels.fedagg.ops import asyncfeded_aggregate_pallas
+        r_tree = agg.asyncfeded_aggregate(x_t, x_s, d, lam=self.LAM,
+                                          eps=self.EPS, cap=cap)
+        r_flat = asyncfeded_aggregate_pallas(x_t, x_s, d, lam=self.LAM,
+                                             eps=self.EPS, cap=cap)
+        return r_tree, r_flat
+
+    def _assert_agree(self, r_tree, r_flat):
+        np.testing.assert_allclose(float(r_tree.gamma), float(r_flat.gamma),
+                                   rtol=1e-5, atol=1e-8)
+        np.testing.assert_allclose(float(r_tree.eta), float(r_flat.eta),
+                                   rtol=1e-5)
+        for l1, l2 in zip(jax.tree.leaves(r_tree.params),
+                          jax.tree.leaves(r_flat.params)):
+            np.testing.assert_allclose(l1, l2, rtol=1e-5, atol=1e-7)
+
+    def test_zero_norm_delta_discarded(self):
+        """||Delta|| = 0 with server drift -> gamma = dist/_TINY, so Eq.(7)
+        effectively discards the update on both backends."""
+        x_t = {"w": jnp.full((67,), 2.0)}
+        x_s = {"w": jnp.zeros((67,))}
+        zero = {"w": jnp.zeros((67,))}
+        r_tree, r_flat = self._both(x_t, x_s, zero)
+        for r in (r_tree, r_flat):
+            assert float(r.gamma) > 1e10
+            assert float(r.eta) < 1e-9
+            np.testing.assert_allclose(r.params["w"], x_t["w"], rtol=1e-6)
+        self._assert_agree(r_tree, r_flat)
+
+    def test_server_has_not_moved(self):
+        """dist <= _TINY -> gamma = 0 -> eta = lam/eps (fresh update), even
+        when the delta is also zero (0/0 case)."""
+        x = {"w": jnp.ones((33,))}
+        d = {"w": jnp.full((33,), 0.25)}
+        for delta in (d, {"w": jnp.zeros((33,))}):
+            r_tree, r_flat = self._both(x, x, delta)
+            for r in (r_tree, r_flat):
+                assert float(r.gamma) == 0.0
+                assert np.isclose(float(r.eta), self.LAM / self.EPS)
+            self._assert_agree(r_tree, r_flat)
+
+    def test_staleness_cap_clamps(self):
+        x_t = {"w": jnp.full((17,), 100.0)}
+        x_s = {"w": jnp.zeros((17,))}
+        d = {"w": jnp.full((17,), 0.01)}
+        r_tree, r_flat = self._both(x_t, x_s, d, cap=5.0)
+        for r in (r_tree, r_flat):
+            assert np.isclose(float(r.gamma), 5.0)
+            assert np.isclose(float(r.eta), self.LAM / (5.0 + self.EPS))
+        self._assert_agree(r_tree, r_flat)
+
+    def test_generic_agreement(self):
+        k = jax.random.PRNGKey(0)
+        x_t = {"w": jax.random.normal(k, (513,)),
+               "v": jax.random.normal(jax.random.PRNGKey(1), (7, 11))}
+        x_s = jax.tree.map(lambda x: x + 0.05, x_t)
+        d = jax.tree.map(lambda x: x * 0.02, x_t)
+        self._assert_agree(*self._both(x_t, x_s, d, cap=3.0))
+
+
 class TestAdaptiveK:
     def test_eq8_floor(self):
         # K + floor((gamma_bar - gamma) * kappa)

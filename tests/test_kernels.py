@@ -7,7 +7,10 @@ import pytest
 
 from repro.kernels.fedagg import fedagg
 from repro.kernels.fedagg import ref as fedagg_ref
-from repro.kernels.fedagg.ops import asyncfeded_aggregate_pallas
+from repro.kernels.fedagg.ops import (asyncfeded_aggregate_batched_pallas,
+                                      asyncfeded_aggregate_pallas,
+                                      flat_aggregate, flat_aggregate_batched,
+                                      pad_flat_vector)
 from repro.kernels.rglru.ops import rglru_pallas
 from repro.kernels.rglru.ref import rglru_scan_ref
 from repro.kernels.rglru.rglru import rglru_scan
@@ -70,6 +73,121 @@ class TestFedAgg:
         np.testing.assert_allclose(float(r1.gamma), float(r2.gamma), rtol=1e-4)
         for l1, l2 in zip(jax.tree.leaves(r1.params),
                           jax.tree.leaves(r2.params)):
+            np.testing.assert_allclose(l1, l2, rtol=1e-4, atol=1e-6)
+
+    @pytest.mark.parametrize("n", [1, 4097, BLOCK - 1, BLOCK + 129])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_padding_path_odd_sizes(self, n, dtype):
+        """Sizes that are NOT BLOCK multiples go through the zero-padding
+        path in ops.py; padding must be value-transparent."""
+        from repro.core.aggregation import asyncfeded_aggregate
+        tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (n,), dtype)}
+        stale = {"w": (tree["w"] + jnp.asarray(0.03, dtype)).astype(dtype)}
+        delta = {"w": (jax.random.normal(jax.random.PRNGKey(1), (n,), dtype)
+                       * 0.02).astype(dtype)}
+        vec = pad_flat_vector(jnp.ravel(tree["w"]).astype(jnp.float32))
+        assert vec.shape[0] % BLOCK == 0
+        r1 = asyncfeded_aggregate_pallas(tree, stale, delta, lam=1.5, eps=0.5)
+        r2 = asyncfeded_aggregate(tree, stale, delta, lam=1.5, eps=0.5)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+        np.testing.assert_allclose(float(r1.gamma), float(r2.gamma),
+                                   rtol=tol, atol=1e-6)
+        np.testing.assert_allclose(
+            r1.params["w"].astype(jnp.float32),
+            r2.params["w"].astype(jnp.float32), rtol=tol, atol=1e-5)
+
+
+class TestFedAggBatched:
+    def _inputs(self, b, nblocks, dtype=jnp.float32, seed=0):
+        n = BLOCK * nblocks
+        xt = jax.random.normal(jax.random.PRNGKey(seed), (n,), dtype)
+        xs = (xt[None] + 0.05 * jax.random.normal(
+            jax.random.PRNGKey(seed + 1), (b, n), dtype)).astype(dtype)
+        d = (jax.random.normal(jax.random.PRNGKey(seed + 2), (b, n), dtype)
+             * 0.1).astype(dtype)
+        return xt, xs, d
+
+    @pytest.mark.parametrize("b", [1, 3, 8])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_norms_batched(self, b, dtype):
+        xt, xs, d = self._inputs(b, 2, dtype)
+        got = fedagg.fedagg_norms_batched(xt, xs, d)
+        want = fedagg_ref.norms_batched_ref(xt, xs, d)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+        for g_, w_ in zip(got, want):
+            np.testing.assert_allclose(g_, w_, rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_apply_batched(self, dtype):
+        xt, _, d = self._inputs(4, 1, dtype)
+        etas = jnp.array([0.3, 0.5, 0.0, 1.2], jnp.float32)
+        got = fedagg.fedagg_apply_batched(xt, d, etas)
+        want = fedagg_ref.apply_batched_ref(xt, d, etas)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(got.astype(jnp.float32),
+                                   want.astype(jnp.float32),
+                                   rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("b", [2, 5])
+    def test_sequential_equivalence(self, b):
+        """Batched path == B one-at-a-time aggregations against the moving
+        server state (the whole point of the Gram-matrix schedule)."""
+        xt, xs, d = self._inputs(b, 2, seed=7)
+        new, etas, gammas, dists, _ = flat_aggregate_batched(
+            xt, xs, d, lam=2.0, eps=1.0)
+        rnew, retas, rgammas, rdists = fedagg_ref.aggregate_batched_seq_ref(
+            xt, xs, d, 2.0, 1.0)
+        np.testing.assert_allclose(etas, retas, rtol=1e-4)
+        np.testing.assert_allclose(gammas, rgammas, rtol=1e-4)
+        np.testing.assert_allclose(dists, rdists, rtol=1e-4)
+        np.testing.assert_allclose(new, rnew, rtol=1e-4, atol=1e-5)
+
+    def test_sequential_equivalence_with_cap(self):
+        xt, xs, d = self._inputs(3, 1, seed=11)
+        d = d * 0.001                       # large gammas -> cap active
+        new, etas, gammas, _, _ = flat_aggregate_batched(
+            xt, xs, d, lam=1.0, eps=1.0, cap=2.0)
+        rnew, retas, rgammas, _ = fedagg_ref.aggregate_batched_seq_ref(
+            xt, xs, d, 1.0, 1.0, cap=2.0)
+        assert np.all(np.asarray(gammas) <= 2.0 + 1e-6)
+        np.testing.assert_allclose(gammas, rgammas, rtol=1e-4)
+        np.testing.assert_allclose(new, rnew, rtol=1e-4, atol=1e-5)
+
+    def test_zero_delta_in_batch(self):
+        """A zero-norm delta inside a burst is discarded (eta ~ 0) without
+        perturbing its neighbours' schedule."""
+        xt, xs, d = self._inputs(3, 1, seed=13)
+        d = d.at[1].set(0.0)
+        new, etas, *_ = flat_aggregate_batched(xt, xs, d, lam=1.0, eps=1.0)
+        rnew, retas, *_ = fedagg_ref.aggregate_batched_seq_ref(
+            xt, xs, d, 1.0, 1.0)
+        assert float(etas[1]) < 1e-6
+        np.testing.assert_allclose(etas, retas, rtol=1e-4, atol=1e-9)
+        np.testing.assert_allclose(new, rnew, rtol=1e-4, atol=1e-5)
+
+    def test_batched_pytree_wrapper_odd_sizes(self):
+        """Non-BLOCK-multiple pytrees through the batched wrapper (padding
+        path) vs B sequential core aggregations."""
+        from repro.core.aggregation import asyncfeded_aggregate
+        k = jax.random.PRNGKey(5)
+        tree = {"a": jax.random.normal(k, (41, 13)),
+                "b": jax.random.normal(jax.random.PRNGKey(6), (257,))}
+        stales, deltas = [], []
+        for i in range(3):
+            stales.append(jax.tree.map(
+                lambda x: x + 0.01 * (i + 1), tree))
+            deltas.append(jax.tree.map(
+                lambda x: x * 0.005 * (i + 1), tree))
+        new, etas, gammas, _, _ = asyncfeded_aggregate_batched_pallas(
+            tree, stales, deltas, lam=1.0, eps=1.0)
+        cur = tree
+        for i in range(3):
+            res = asyncfeded_aggregate(cur, stales[i], deltas[i],
+                                       lam=1.0, eps=1.0)
+            cur = res.params
+            np.testing.assert_allclose(float(etas[i]), float(res.eta),
+                                       rtol=1e-4)
+        for l1, l2 in zip(jax.tree.leaves(new), jax.tree.leaves(cur)):
             np.testing.assert_allclose(l1, l2, rtol=1e-4, atol=1e-6)
 
 

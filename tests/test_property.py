@@ -1,5 +1,13 @@
-"""Property-based tests (hypothesis) on the system's invariants."""
+"""Property-based tests (hypothesis) on the system's invariants.
+
+``hypothesis`` is an optional test dependency (see requirements-test.txt);
+this module skips cleanly instead of erroring collection when it is absent.
+"""
 import math
+
+import pytest
+
+pytest.importorskip("hypothesis")
 
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
