@@ -1,0 +1,83 @@
+"""Client-cohort engine throughput: one vmap/scan dispatch vs C jit calls.
+
+Times one FedAvg-style round of local training (every client runs K steps
+from the same downloaded model) under both client engines at growing
+cohort sizes. The loop engine pays one jit dispatch + host staging per
+client; the cohort engine (repro.core.cohort, DESIGN.md §7) stacks the
+cohort along a leading client axis and dispatches once. Steady state only
+— compiles are excluded by ``time_call``'s warmup.
+
+CLI (CI bench-smoke runs tiny sizes):
+    python benchmarks/client_bench.py --sizes 4,8 --k 4 --repeat 2
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from benchmarks.common import emit, save_json, time_call
+from repro import configs
+from repro.core import cohort
+from repro.core.client import Client
+from repro.data.pipeline import load_task_datasets
+from repro.models import small
+
+
+def _make_clients(task, n: int, seed: int = 0):
+    fed = dataclasses.replace(task.fed, num_clients=n)
+    task = dataclasses.replace(task, num_clients=n, fed=fed,
+                               samples_per_client=64)
+    train_sets, _ = load_task_datasets(task, seed=seed)
+    clients = [Client(i, task, train_sets[i], fed, seed=seed)
+               for i in range(n)]
+    params = small.init_task_model(jax.random.PRNGKey(seed), task)
+    return task, clients, params
+
+
+def bench_round(n: int, k: int = 10, repeat: int = 5) -> dict:
+    """One FedAvg round (all n clients, K=k local steps) per engine."""
+    task, clients, params = _make_clients(configs.SYNTHETIC_1_1, n)
+    ks, iters = [k] * n, [1] * n
+
+    def loop_round():
+        return [c.run_local(params, k, 1, 0.0)[0].delta for c in clients]
+
+    def cohort_round():
+        return [u.delta for u, _ in
+                cohort.run_cohort(task, clients, params, ks, iters)]
+
+    us_loop = time_call(loop_round, repeat=repeat)
+    us_cohort = time_call(cohort_round, repeat=repeat)
+    out = {
+        "clients": n, "k": k,
+        "loop_us": us_loop, "cohort_us": us_cohort,
+        "speedup": us_loop / max(us_cohort, 1e-9),
+    }
+    emit(f"client/loop_round_c{n}", us_loop, f"k={k}")
+    emit(f"client/cohort_round_c{n}", us_cohort,
+         f"k={k};speedup={out['speedup']:.2f}x")
+    return out
+
+
+def run(sizes=(16, 64, 256), k: int = 10, repeat: int = 5) -> dict:
+    out = {"rounds": [bench_round(n, k=k, repeat=repeat) for n in sizes]}
+    save_json("client_bench", out)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sizes", default="16,64,256",
+                    help="comma-separated cohort sizes")
+    ap.add_argument("--k", type=int, default=10, help="local steps per client")
+    ap.add_argument("--repeat", type=int, default=5)
+    args = ap.parse_args()
+    sizes = tuple(int(s) for s in args.sizes.split(","))
+    print("name,us_per_call,derived")
+    run(sizes=sizes, k=args.k, repeat=args.repeat)
+
+
+if __name__ == "__main__":
+    main()

@@ -37,7 +37,7 @@ def _flat_fused(xt, xs, d, lam, eps):
     return xt + eta * d, gamma, eta
 
 
-def run(n_leaves: int = 20, leaf: int = 50_000) -> dict:
+def run(n_leaves: int = 20, leaf: int = 50_000, batch: int = 8) -> dict:
     tree = _mock_params(n_leaves, leaf)
     stale = jax.tree.map(lambda x: x + 0.01, tree)
     delta = jax.tree.map(lambda x: x * 0.001, tree)
@@ -68,7 +68,7 @@ def run(n_leaves: int = 20, leaf: int = 50_000) -> dict:
     emit("kernel/fedagg_tree", us_tree, f"bytes={out['tree_bytes']:.3e}")
     emit("kernel/fedagg_flat_fused", us_flat,
          f"bytes={out['flat_bytes']:.3e};speedup={out['speedup']:.2f}x")
-    out.update(run_batched())
+    out.update(run_batched(batch=batch, n_leaves=n_leaves, leaf=leaf))
     save_json("kernel_bench", out)
     return out
 
@@ -109,11 +109,19 @@ def run_batched(batch: int = 8, n_leaves: int = 20, leaf: int = 50_000
         "seq_fused_us": us_seq, "batched_us": us_bat,
         "batched_speedup": us_seq / max(us_bat, 1e-9),
     }
-    emit("kernel/fedagg_seq_fused_x8", us_seq, "")
+    emit(f"kernel/fedagg_seq_fused_x{batch}", us_seq, "")
     emit("kernel/fedagg_batched", us_bat,
          f"B={batch};speedup={out['batched_speedup']:.2f}x")
     return out
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-leaves", type=int, default=20)
+    ap.add_argument("--leaf", type=int, default=50_000)
+    ap.add_argument("--batch", type=int, default=8)
+    a = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(n_leaves=a.n_leaves, leaf=a.leaf, batch=a.batch)

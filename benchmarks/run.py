@@ -9,6 +9,7 @@ artifacts/bench/.
   Thm. 1 -> theory_check.run()  (drift linearity, gamma -> gamma_bar)
   §Roofline -> roofline.summarize() (from dry-run artifacts)
   §Perf   -> kernel_bench.run() (fedagg aggregation variants)
+  §Scale  -> client_bench.run() (cohort vs per-client-loop local training)
 
 ``--quick`` shrinks virtual-time budgets for CI-style runs; ``--full``
 reproduces the paper-scale sweep (all 3 tasks, longer horizon).
@@ -26,7 +27,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: convergence,robustness,"
-                         "adaptive_k,theory,roofline,kernel")
+                         "adaptive_k,theory,roofline,kernel,client")
     args = ap.parse_args()
 
     max_time = 20.0 if args.quick else (90.0 if args.full else 45.0)
@@ -60,6 +61,9 @@ def main() -> None:
     if want("kernel"):
         from benchmarks import kernel_bench
         kernel_bench.run()
+    if want("client"):
+        from benchmarks import client_bench
+        client_bench.run(sizes=(16, 64) if args.quick else (16, 64, 256))
     print(f"# total benchmark wall time: {time.time() - t0:.1f}s",
           file=sys.stderr)
 

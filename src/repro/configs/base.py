@@ -215,6 +215,13 @@ class FedConfig:
     # server runtime (beyond paper, DESIGN.md §4)
     # "pytree": reference jnp passes | "pallas": flat-state fedagg kernels
     backend: str = "pytree"
+    # client execution engine for fan-out sites — sync rounds, async
+    # initial seeding, burst re-dispatch (DESIGN.md §7):
+    # "loop":   one jit dispatch per client (exact reference)
+    # "cohort": one vmap-over-clients/scan-over-K dispatch with ragged-K
+    #           step masking (repro.core.cohort); equivalent to the loop
+    #           to float tolerance
+    client_engine: str = "loop"
     # >0: arrivals landing within this window of the first one are drained
     # through the server's batched path in one multi-delta kernel sweep;
     # 0 preserves the paper's one-aggregation-per-arrival semantics.

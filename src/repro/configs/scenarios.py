@@ -1,0 +1,41 @@
+"""Beyond-paper simulation scenarios — scale sweeps for the cohort engine.
+
+The paper evaluates at 10 clients; Fraboni et al. and FedBuff-style designs
+evaluate at hundreds. These scenarios keep the paper's task models but grow
+the client population, pairing the vectorized cohort engine (DESIGN.md §7)
+with the flat-state pallas server runtime and burst-window draining so a
+round is a handful of device dispatches instead of hundreds.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.paper_tasks import (FEMNIST, SYNTHETIC_1_1,
+                                       PaperTaskConfig)
+from repro.utils.registry import Registry
+
+SCENARIOS: Registry = Registry("simulation scenario")
+
+
+def _scaled(base: PaperTaskConfig, name: str, num_clients: int,
+            samples_per_client: int, **fed_changes) -> PaperTaskConfig:
+    fed = dataclasses.replace(base.fed, num_clients=num_clients,
+                              client_engine="cohort", **fed_changes)
+    return dataclasses.replace(base, name=name, num_clients=num_clients,
+                               samples_per_client=samples_per_client,
+                               fed=fed)
+
+
+#: 256-client Synthetic-1-1: the large-scale cohort scenario. Every fan-out
+#: site (seeding, burst re-dispatch) trains 256 clients in one dispatch;
+#: the server drains arrival bursts through the batched fedagg kernels.
+SYNTHETIC_256 = _scaled(SYNTHETIC_1_1, "synthetic-256", num_clients=256,
+                        samples_per_client=64, backend="pallas",
+                        batch_window=0.05, gmis_depth=256)
+
+#: 64-client FEMNIST: mid-scale CNN scenario (pytree server, cohort clients).
+FEMNIST_64 = _scaled(FEMNIST, "femnist-64", num_clients=64,
+                     samples_per_client=128, gmis_depth=128)
+
+for _s in (SYNTHETIC_256, FEMNIST_64):
+    SCENARIOS.register(_s.name)(_s)

@@ -5,6 +5,7 @@ from repro.core.aggregation import (AggregationResult, adaptive_lr,
                                     asyncfeded_aggregate_per_leaf,
                                     asyncfeded_aggregate_with_dist, staleness)
 from repro.core.client import Client
+from repro.core.cohort import bucket_size, run_cohort
 from repro.core.gmis import DisplacementGMIS, RingGMIS
 from repro.core.server import (AsyncFedEDServer, ClientUpdate, FedAsyncServer,
                                FedBuffServer, ServerReply, SyncServer,
@@ -15,7 +16,8 @@ from repro.core.simulator import (EvalPoint, FederatedSimulation, SimResult,
 __all__ = [
     "AdaptiveK", "update_k", "AggregationResult", "adaptive_lr", "staleness",
     "asyncfeded_aggregate", "asyncfeded_aggregate_per_leaf",
-    "asyncfeded_aggregate_with_dist", "Client", "DisplacementGMIS",
+    "asyncfeded_aggregate_with_dist", "Client", "bucket_size", "run_cohort",
+    "DisplacementGMIS",
     "RingGMIS", "AsyncFedEDServer", "ClientUpdate", "FedAsyncServer",
     "FedBuffServer", "ServerReply", "SyncServer", "make_server", "EvalPoint",
     "FederatedSimulation", "SimResult", "run_comparison",

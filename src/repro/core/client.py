@@ -25,25 +25,34 @@ from repro.utils import pytree as pt
 PyTree = Any
 
 
+def local_sgd_step(task: PaperTaskConfig, carry, bx, by, lr,
+                   beta: float, prox_mu: float, anchor: PyTree):
+    """One SGD-with-momentum step (Eq. 2) on one mini-batch.
+
+    THE local optimizer step — shared by the per-client loop below and the
+    cohort engine (repro.core.cohort), so the two engines cannot diverge.
+    FedProx: prox_mu > 0 anchors to the round's initial weights (Eq. 39).
+    """
+    p, m = carry
+    prox = (prox_mu, anchor) if prox_mu > 0 else None
+    loss, grads = jax.value_and_grad(
+        lambda q: small.task_loss(task, q, (bx, by), prox=prox))(p)
+    m = jax.tree.map(lambda mi, g: beta * mi + g, m, grads)
+    p = jax.tree.map(lambda pi, mi: pi - lr * mi, p, m)
+    return (p, m), loss
+
+
 @functools.partial(jax.jit, static_argnames=("task", "beta", "prox_mu"))
 def _local_k_steps(task: PaperTaskConfig, params: PyTree, mu_state: PyTree,
                    xs: jax.Array, ys: jax.Array, lr: jax.Array,
                    beta: float = 0.5, prox_mu: float = 0.0):
     """Scan K optimizer steps over stacked batches xs: (K, bs, ...).
 
-    Returns (delta, new_momentum, mean_loss). FedProx: prox_mu > 0 anchors
-    to the round's initial weights (Eq. 39)."""
-    anchor = params
+    Returns (delta, new_momentum, mean_loss)."""
 
     def step(carry, batch):
-        p, m = carry
-        bx, by = batch
-        prox = (prox_mu, anchor) if prox_mu > 0 else None
-        loss, grads = jax.value_and_grad(
-            lambda q: small.task_loss(task, q, (bx, by), prox=prox))(p)
-        m = jax.tree.map(lambda mi, g: beta * mi + g, m, grads)
-        p = jax.tree.map(lambda pi, mi: pi - lr * mi, p, m)
-        return (p, m), loss
+        return local_sgd_step(task, carry, batch[0], batch[1], lr, beta,
+                              prox_mu, params)
 
     (new_params, new_mu), losses = jax.lax.scan(step, (params, mu_state),
                                                 (xs, ys))
@@ -67,6 +76,19 @@ class Client:
 
     def _lr(self) -> float:
         return self.fed.local_lr * (self.fed.local_lr_decay ** self.round_idx)
+
+    # --- cohort-engine hooks (repro.core.cohort stacks many clients) ---
+    def stage_cohort(self, params: PyTree):
+        """Per-client state the cohort engine stacks: (momentum, lr)."""
+        if self._mu is None:
+            self._mu = pt.tree_zeros_like(params)
+        return self._mu, self._lr()
+
+    def commit_cohort(self, mu: PyTree) -> None:
+        """Scatter one cohort row back: new momentum + round bookkeeping,
+        exactly what :meth:`run_local` does after ``_local_k_steps``."""
+        self._mu = mu
+        self.round_idx += 1
 
     def run_local(self, params: PyTree, k: int, snapshot_iter: int,
                   prox_mu: float = 0.0) -> Tuple[ClientUpdate, float]:

@@ -1,0 +1,214 @@
+"""Vectorized client-cohort engine (DESIGN.md §7).
+
+The reference client path trains one client per jitted call: every
+``Client.run_local`` is its own dispatch, so a FedAvg round over C clients
+pays C dispatches, C host stagings, and C blocking loss transfers, and the
+client axis is never exposed to XLA. This module stacks per-client state
+along a leading client axis — params snapshot, momentum, learning rate,
+prox anchor, and the K mini-batches — and runs local training for the
+whole cohort as ONE jitted vmap-over-clients / scan-over-K computation.
+
+Two jitted cores share the host-side orchestration:
+
+* dense — every client runs the same K (sync FedAvg/FedProx rounds,
+  initial async seeding): no masking, scan length is exactly K.
+* masked — ragged per-client K (burst re-dispatch after adaptive K has
+  diverged): scan length pads to a power-of-two bucket and a per
+  ``(client, step)`` mask turns padded steps into exact no-ops — masked
+  steps keep ``(params, momentum)`` bitwise unchanged and contribute zero
+  loss, so heterogeneous ``k_next`` values share one compile.
+
+The client axis pads to a power-of-two bucket in both cores (padded rows
+are discarded), bounding distinct compilations to ``log2(C) * log2(K)``
+buckets no matter how burst sizes vary over a run.
+
+Semantics match the per-client loop exactly: the same batcher index
+stream (``MiniBatcher.next_stacked`` is RNG-state-identical to k ``next``
+calls), the same momentum carry, the same per-round lr decay, the same
+FedProx anchor. Equivalence is pinned by ``tests/test_cohort.py`` on both
+server backends, including ragged K.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, List, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_tasks import PaperTaskConfig
+from repro.core.client import local_sgd_step
+from repro.core.server import ClientUpdate
+from repro.utils import pytree as pt
+
+PyTree = Any
+
+#: valid values of ``FedConfig.client_engine``
+ENGINES = ("loop", "cohort")
+
+
+def bucket_size(n: int) -> int:
+    """Next power of two >= n (n >= 1): the shared pad size that lets
+    ragged client counts and per-client K values reuse one compile."""
+    if n < 1:
+        raise ValueError(f"bucket_size needs n >= 1, got {n}")
+    return 1 << (int(n) - 1).bit_length()
+
+
+@functools.partial(jax.jit, static_argnames=("task", "beta", "prox_mu"))
+def _cohort_dense(task: PaperTaskConfig, params: PyTree, mu: PyTree,
+                  xs: jax.Array, ys: jax.Array, lrs: jax.Array,
+                  beta: float = 0.5, prox_mu: float = 0.0):
+    """Uniform-K cohort: vmap over clients, scan over exactly K steps.
+
+    ``params``/``mu``: pytrees stacked ``(C, ...)``; ``xs``: ``(C, K, bs,
+    ...)``; ``lrs``: ``(C,)`` f32. Returns ``(deltas, new_mu,
+    mean_losses)`` stacked along the client axis.
+    """
+
+    def one_client(p0, m0, xs_c, ys_c, lr):
+        def step(carry, batch):
+            return local_sgd_step(task, carry, batch[0], batch[1], lr,
+                                  beta, prox_mu, p0)
+
+        (p_k, m_k), losses = jax.lax.scan(step, (p0, m0), (xs_c, ys_c))
+        return pt.tree_sub(p_k, p0), m_k, jnp.mean(losses)
+
+    return jax.vmap(one_client)(params, mu, xs, ys, lrs)
+
+
+@functools.partial(jax.jit, static_argnames=("task", "beta", "prox_mu"))
+def _cohort_masked(task: PaperTaskConfig, params: PyTree, mu: PyTree,
+                   xs: jax.Array, ys: jax.Array, lrs: jax.Array,
+                   mask: jax.Array, beta: float = 0.5,
+                   prox_mu: float = 0.0):
+    """Ragged-K cohort: like :func:`_cohort_dense` plus a ``(C, K)`` f32
+    step mask — a zero entry keeps that client's ``(params, momentum)``
+    carry bitwise unchanged and contributes zero loss, so client i's
+    result equals a k_i-step run regardless of the padded scan length.
+    Losses average over active steps only, matching the loop's mean over
+    exactly k losses.
+    """
+
+    def one_client(p0, m0, xs_c, ys_c, lr, mask_c):
+        def step(carry, inp):
+            bx, by, act = inp
+            (p2, m2), loss = local_sgd_step(task, carry, bx, by, lr, beta,
+                                            prox_mu, p0)
+            keep = act > 0
+            p = jax.tree.map(lambda new, old: jnp.where(keep, new, old),
+                             p2, carry[0])
+            m = jax.tree.map(lambda new, old: jnp.where(keep, new, old),
+                             m2, carry[1])
+            return (p, m), loss * act
+
+        (p_k, m_k), losses = jax.lax.scan(step, (p0, m0),
+                                          (xs_c, ys_c, mask_c))
+        mean_loss = jnp.sum(losses) / jnp.maximum(jnp.sum(mask_c), 1.0)
+        return pt.tree_sub(p_k, p0), m_k, mean_loss
+
+    return jax.vmap(one_client)(params, mu, xs, ys, lrs, mask)
+
+
+def _pad_steps(bx: np.ndarray, by: np.ndarray, k_pad: int):
+    """Pad a (k, bs, ...) batch stack to k_pad steps by repeating the last
+    real batch (valid data — masked out, never applied)."""
+    k = bx.shape[0]
+    if k == k_pad:
+        return bx, by
+    reps = k_pad - k
+    return (np.concatenate([bx, np.repeat(bx[-1:], reps, axis=0)]),
+            np.concatenate([by, np.repeat(by[-1:], reps, axis=0)]))
+
+
+def run_cohort(task: PaperTaskConfig, clients: Sequence,
+               params: Union[PyTree, Sequence[PyTree]], ks: Sequence[int],
+               snapshot_iters: Sequence[int], prox_mu: float = 0.0,
+               per_client_params: bool = False
+               ) -> List[Tuple[ClientUpdate, float]]:
+    """Train ``clients`` for ``ks`` local steps each in one jitted call.
+
+    Drop-in replacement for ``[c.run_local(params, k, it, prox_mu) for
+    ...]`` (same batcher streams, momentum carry, round_idx/lr schedule),
+    equivalent to float tolerance. ``params`` is one shared snapshot
+    pytree (every fan-out site — sync rounds, async seeding, burst
+    re-dispatch — hands the whole cohort the same downloaded model),
+    broadcast along the client axis. With ``per_client_params=True`` it is
+    instead a length-C sequence of snapshots, stacked leafwise. The flag
+    is explicit rather than inferred from ``isinstance`` so a future
+    list-rooted params pytree cannot be misread as a per-client sequence.
+    """
+    c_real = len(clients)
+    if c_real == 0:
+        return []
+    if not (len(ks) == len(snapshot_iters) == c_real):
+        raise ValueError("clients / ks / snapshot_iters length mismatch")
+
+    per_client = per_client_params
+    if per_client:
+        if len(params) != c_real:
+            raise ValueError("per_client_params needs one snapshot per "
+                             f"client, got {len(params)} for {c_real}")
+        if all(p is params[0] for p in params):
+            params, per_client = params[0], False
+    template = params[0] if per_client else params
+
+    c_pad = bucket_size(c_real)
+    uniform = len(set(ks)) == 1
+    k_pad = ks[0] if uniform else bucket_size(max(ks))
+
+    xs_rows, ys_rows, mus = [], [], []
+    lrs = np.zeros((c_pad,), np.float32)
+    mask = None if uniform else np.zeros((c_pad, k_pad), np.float32)
+    for i, (c, k) in enumerate(zip(clients, ks)):
+        mu, lr = c.stage_cohort(template)
+        bx, by = c.batcher.next_stacked(k)
+        if not uniform:
+            bx, by = _pad_steps(bx, by, k_pad)
+            mask[i, :k] = 1.0
+        xs_rows.append(bx)
+        ys_rows.append(by)
+        mus.append(mu)
+        lrs[i] = lr
+    zeros_mu = pt.tree_zeros_like(template)
+    for _ in range(c_pad - c_real):    # padded client rows: discarded
+        xs_rows.append(xs_rows[0])
+        ys_rows.append(ys_rows[0])
+        mus.append(zeros_mu)
+
+    xs = np.stack(xs_rows)
+    ys = np.stack(ys_rows)
+    # stack per-client trees on the host: jnp.stack would dispatch
+    # expand_dims+concat per client per leaf (hundreds of ops per round);
+    # momentum rows come back as np views from the previous device_get,
+    # so np.stack is a plain memcpy
+    np_stack = functools.partial(jax.tree.map,
+                                 lambda *ls: np.stack([np.asarray(x)
+                                                       for x in ls]))
+    mu_stacked = np_stack(*mus)
+    if per_client:
+        p_stacked = np_stack(*(list(params)
+                               + [template] * (c_pad - c_real)))
+    else:
+        p_stacked = jax.tree.map(
+            lambda p: jnp.broadcast_to(p, (c_pad,) + p.shape), params)
+
+    fed = clients[0].fed
+    if uniform:
+        res = _cohort_dense(task, p_stacked, mu_stacked, xs, ys,
+                            jnp.asarray(lrs), beta=fed.local_momentum,
+                            prox_mu=prox_mu)
+    else:
+        res = _cohort_masked(task, p_stacked, mu_stacked, xs, ys,
+                             jnp.asarray(lrs), jnp.asarray(mask),
+                             beta=fed.local_momentum, prox_mu=prox_mu)
+    deltas, new_mu, losses = jax.device_get(res)
+
+    out: List[Tuple[ClientUpdate, float]] = []
+    for i, (c, k, it) in enumerate(zip(clients, ks, snapshot_iters)):
+        c.commit_cohort(jax.tree.map(lambda l: l[i], new_mu))
+        delta = jax.tree.map(lambda l: l[i], deltas)
+        upd = ClientUpdate(c.client_id, it, k, delta, c.num_samples)
+        out.append((upd, float(losses[i])))
+    return out

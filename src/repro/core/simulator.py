@@ -28,8 +28,9 @@ import numpy as np
 
 from repro.configs.base import FedConfig
 from repro.configs.paper_tasks import PaperTaskConfig
+from repro.core import cohort
 from repro.core.client import Client
-from repro.core.server import ClientUpdate, SyncServer, make_server
+from repro.core.server import ClientUpdate, ServerReply, make_server
 from repro.data.pipeline import load_task_datasets
 from repro.models import small
 from repro.utils import pytree as pt
@@ -70,10 +71,14 @@ class FederatedSimulation:
 
     def __init__(self, task: PaperTaskConfig, fed: FedConfig,
                  algorithm: str = "asyncfeded", seed: int = 0,
-                 heterogeneity: float = 0.6, server_kwargs: dict = {},
+                 heterogeneity: float = 0.6,
+                 server_kwargs: Optional[dict] = None,
                  batch_window: Optional[float] = None):
         self.task = task
         self.fed = fed
+        if fed.client_engine not in cohort.ENGINES:
+            raise ValueError(f"unknown client_engine {fed.client_engine!r};"
+                             f" expected one of {cohort.ENGINES}")
         self.algorithm = algorithm
         self.batch_window = (fed.batch_window if batch_window is None
                              else batch_window)
@@ -82,7 +87,7 @@ class FederatedSimulation:
         self.test_x, self.test_y = jnp.asarray(tx), jnp.asarray(ty)
         params = small.init_task_model(jax.random.PRNGKey(seed), task)
         self.model_bytes = pt.tree_bytes(params)
-        kw = dict(server_kwargs)
+        kw = dict(server_kwargs or {})
         if (algorithm.startswith("asyncfeded")
                 and algorithm != "asyncfeded-perleaf"):
             # per-leaf staleness only exists on the pytree backend
@@ -119,6 +124,30 @@ class FederatedSimulation:
         acc, loss = self._eval(self.server.params)
         return EvalPoint(time, self.server.t, float(acc), float(loss))
 
+    # ------------------------------------------------------- local training --
+    def _run_locals(self, jobs: List[Tuple[Client, ServerReply]]
+                    ) -> List[ClientUpdate]:
+        """Train every ``(client, reply)`` fan-out job, in job order.
+
+        ``FedConfig.client_engine`` picks the execution engine: the exact
+        per-client loop, or the vectorized cohort engine — one
+        vmap-over-clients/scan-over-K dispatch (repro.core.cohort,
+        DESIGN.md §7). Both consume identical batcher/RNG streams, so the
+        event trace is engine-independent up to float tolerance.
+        """
+        if self.fed.client_engine == "cohort" and len(jobs) > 1:
+            # run_cohort collapses identical snapshot objects to the
+            # broadcast fast path itself (every server path hands a burst
+            # one shared model object)
+            out = cohort.run_cohort(
+                self.task, [c for c, _ in jobs],
+                [r.params for _, r in jobs], [r.k_next for _, r in jobs],
+                [r.iteration for _, r in jobs], prox_mu=self.prox_mu,
+                per_client_params=True)
+            return [u for u, _ in out]
+        return [c.run_local(r.params, r.k_next, r.iteration, self.prox_mu)[0]
+                for c, r in jobs]
+
     # ---------------------------------------------------------------- run --
     def run(self, max_time: float = 300.0, eval_every: int = 5) -> SimResult:
         if self.server.is_async:
@@ -129,10 +158,12 @@ class FederatedSimulation:
         points = [self._eval_point(0.0)]
         heap: List[Tuple[float, int, int, ClientUpdate]] = []
         seq = 0
-        for c in self.clients:
-            reply = self.server.on_connect(c.client_id)
-            upd, _ = c.run_local(reply.params, reply.k_next, reply.iteration,
-                                 self.prox_mu)
+        # initial seeding: every client fans out at once -> one cohort job
+        # (sim-RNG draws happen after training, in the same per-client
+        # order, so the event trace is independent of the engine)
+        jobs = [(c, self.server.on_connect(c.client_id))
+                for c in self.clients]
+        for (c, reply), upd in zip(jobs, self._run_locals(jobs)):
             dur = self._tx_time() + self._round_duration(c.client_id,
                                                          reply.k_next)
             heapq.heappush(heap, (dur, seq, c.client_id, upd))
@@ -159,14 +190,15 @@ class FederatedSimulation:
                 # for every update in the window
                 if updates // eval_every != (updates + len(batch)) // eval_every:
                     points.append(self._eval_point(now))
-                for (bcid, _), reply in zip(batch, replies):
+                # burst re-dispatch: every drained client resumes at once
+                # from the window's final model -> one cohort job
+                jobs = [(self.clients[bcid], reply)
+                        for (bcid, _), reply in zip(batch, replies)]
+                for (c, reply), nxt in zip(jobs, self._run_locals(jobs)):
                     updates += 1
-                    c = self.clients[bcid]
-                    nxt, _ = c.run_local(reply.params, reply.k_next,
-                                         reply.iteration, self.prox_mu)
                     dur = self._tx_time() + self._round_duration(
-                        bcid, reply.k_next)
-                    heapq.heappush(heap, (now + dur, seq, bcid, nxt))
+                        c.client_id, reply.k_next)
+                    heapq.heappush(heap, (now + dur, seq, c.client_id, nxt))
                     seq += 1
                 continue
             reply = self.server.on_update(upd)
@@ -188,14 +220,11 @@ class FederatedSimulation:
         rounds = 0
         while now < max_time:
             reply0 = self.server.on_connect(0)
-            updates, durations = [], []
-            for c in self.clients:
-                upd, _ = c.run_local(reply0.params, reply0.k_next,
-                                     reply0.iteration, self.prox_mu)
-                updates.append(upd)
-                durations.append(self._tx_time()
-                                 + self._round_duration(c.client_id,
-                                                        reply0.k_next))
+            # synchronous round: the whole client set is one cohort job
+            updates = self._run_locals([(c, reply0) for c in self.clients])
+            durations = [self._tx_time()
+                         + self._round_duration(c.client_id, reply0.k_next)
+                         for c in self.clients]
             now += max(durations)          # straggler-bound round time
             self.server.round(updates)
             rounds += 1

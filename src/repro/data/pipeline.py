@@ -14,16 +14,35 @@ from repro.data.synthetic import generate_synthetic, train_test_split
 Dataset = Tuple[np.ndarray, np.ndarray]
 
 
+def _synthetic_alpha_beta(name: str) -> Tuple[float, float]:
+    """Heterogeneity knobs from the paper's naming convention:
+    "synthetic-<alpha>-<beta>" (e.g. "synthetic-1-1", "synthetic-0-0").
+    Scenario names without the two-number suffix ("synthetic-256") use the
+    paper's default (1, 1)."""
+    parts = name.split("-")
+    if len(parts) == 3:
+        try:
+            return float(parts[1]), float(parts[2])
+        except ValueError:
+            pass
+    return 1.0, 1.0
+
+
 def load_task_datasets(task: PaperTaskConfig, seed: int = 0):
-    """Returns (per-client train datasets, global test set)."""
-    if task.name == "synthetic-1-1":
-        ds = generate_synthetic(1.0, 1.0, task.num_clients,
+    """Returns (per-client train datasets, global test set).
+
+    Dispatches on the task-name prefix so scaled scenario variants of a
+    paper task ("synthetic-256", "femnist-64", ...) reuse its generator.
+    """
+    if task.name.startswith("synthetic"):
+        alpha, beta = _synthetic_alpha_beta(task.name)
+        ds = generate_synthetic(alpha, beta, task.num_clients,
                                 task.input_shape[0], task.num_classes,
                                 task.samples_per_client, seed)
-    elif task.name == "femnist":
+    elif task.name.startswith("femnist"):
         ds = generate_femnist(task.num_clients, task.num_classes,
                               task.samples_per_client, seed=seed)
-    elif task.name == "shakespeare":
+    elif task.name.startswith("shakespeare"):
         ds = generate_shakespeare(task.num_clients, task.samples_per_client,
                                   seed=seed)
     else:
@@ -41,6 +60,17 @@ class MiniBatcher:
 
     def next(self) -> Dataset:
         idx = self.rng.integers(0, len(self.x), size=self.batch_size)
+        return self.x[idx], self.y[idx]
+
+    def next_stacked(self, k: int) -> Dataset:
+        """k mini-batches stacked along a leading step axis: (k, bs, ...).
+
+        One ``(k, bs)`` draw consumes the PCG64 stream element-wise, so the
+        indices AND the generator state afterwards are identical to k
+        successive :meth:`next` calls (pinned by tests/test_cohort.py) —
+        the loop and cohort client engines see byte-identical data while
+        the cohort pays one RNG call and one gather instead of k."""
+        idx = self.rng.integers(0, len(self.x), size=(k, self.batch_size))
         return self.x[idx], self.y[idx]
 
 
