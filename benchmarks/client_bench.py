@@ -1,14 +1,18 @@
 """Client-cohort engine throughput: one vmap/scan dispatch vs C jit calls.
 
 Times one FedAvg-style round of local training (every client runs K steps
-from the same downloaded model) under both client engines at growing
+from the same downloaded model) under the client engines at growing
 cohort sizes. The loop engine pays one jit dispatch + host staging per
 client; the cohort engine (repro.core.cohort, DESIGN.md §7) stacks the
-cohort along a leading client axis and dispatches once. Steady state only
-— compiles are excluded by ``time_call``'s warmup.
+cohort along a leading client axis and dispatches once; the sharded
+engine (DESIGN.md §8) shard_maps the same core over a `pod` mesh — one
+client shard per pod, as many pods as devices allow. Steady state only —
+compiles are excluded by ``time_call``'s warmup.
 
-CLI (CI bench-smoke runs tiny sizes):
+CLI (CI bench-smoke runs tiny sizes; tier1-multidevice adds the sharded
+row under 8 fake CPU devices):
     python benchmarks/client_bench.py --sizes 4,8 --k 4 --repeat 2
+    python benchmarks/client_bench.py --engines loop,cohort,cohort_sharded
 """
 from __future__ import annotations
 
@@ -24,6 +28,10 @@ from repro.core.client import Client
 from repro.data.pipeline import load_task_datasets
 from repro.models import small
 
+#: engine name -> short key used in JSON fields and emit() rows
+ENGINE_KEYS = {"loop": "loop", "cohort": "cohort",
+               "cohort_sharded": "sharded"}
+
 
 def _make_clients(task, n: int, seed: int = 0):
     fed = dataclasses.replace(task.fed, num_clients=n)
@@ -36,33 +44,45 @@ def _make_clients(task, n: int, seed: int = 0):
     return task, clients, params
 
 
-def bench_round(n: int, k: int = 10, repeat: int = 5) -> dict:
+def bench_round(n: int, k: int = 10, repeat: int = 5,
+                engines=("loop", "cohort")) -> dict:
     """One FedAvg round (all n clients, K=k local steps) per engine."""
     task, clients, params = _make_clients(configs.SYNTHETIC_1_1, n)
     ks, iters = [k] * n, [1] * n
 
-    def loop_round():
-        return [c.run_local(params, k, 1, 0.0)[0].delta for c in clients]
+    def make_fn(eng):
+        if eng == "loop":
+            return lambda: [c.run_local(params, k, 1, 0.0)[0].delta
+                            for c in clients]
+        return lambda: [u.delta for u, _ in
+                        cohort.run_cohort(task, clients, params, ks, iters,
+                                          engine=eng)]
 
-    def cohort_round():
-        return [u.delta for u, _ in
-                cohort.run_cohort(task, clients, params, ks, iters)]
-
-    us_loop = time_call(loop_round, repeat=repeat)
-    us_cohort = time_call(cohort_round, repeat=repeat)
-    out = {
-        "clients": n, "k": k,
-        "loop_us": us_loop, "cohort_us": us_cohort,
-        "speedup": us_loop / max(us_cohort, 1e-9),
-    }
-    emit(f"client/loop_round_c{n}", us_loop, f"k={k}")
-    emit(f"client/cohort_round_c{n}", us_cohort,
-         f"k={k};speedup={out['speedup']:.2f}x")
+    out = {"clients": n, "k": k, "devices": jax.device_count()}
+    for eng in engines:
+        key = ENGINE_KEYS[eng]
+        out[f"{key}_us"] = time_call(make_fn(eng), repeat=repeat)
+    if "loop" in engines and "cohort" in engines:
+        out["speedup"] = out["loop_us"] / max(out["cohort_us"], 1e-9)
+    if "cohort" in engines and "cohort_sharded" in engines:
+        out["sharded_vs_cohort"] = (out["cohort_us"]
+                                    / max(out["sharded_us"], 1e-9))
+    for eng in engines:
+        key = ENGINE_KEYS[eng]
+        derived = f"k={k}"
+        if key == "cohort" and "speedup" in out:
+            derived += f";speedup={out['speedup']:.2f}x"
+        if key == "sharded" and "sharded_vs_cohort" in out:
+            derived += (f";vs_cohort={out['sharded_vs_cohort']:.2f}x"
+                        f";pods={jax.device_count()}")
+        emit(f"client/{key}_round_c{n}", out[f"{key}_us"], derived)
     return out
 
 
-def run(sizes=(16, 64, 256), k: int = 10, repeat: int = 5) -> dict:
-    out = {"rounds": [bench_round(n, k=k, repeat=repeat) for n in sizes]}
+def run(sizes=(16, 64, 256), k: int = 10, repeat: int = 5,
+        engines=("loop", "cohort")) -> dict:
+    out = {"rounds": [bench_round(n, k=k, repeat=repeat, engines=engines)
+                      for n in sizes]}
     save_json("client_bench", out)
     return out
 
@@ -73,10 +93,17 @@ def main() -> None:
                     help="comma-separated cohort sizes")
     ap.add_argument("--k", type=int, default=10, help="local steps per client")
     ap.add_argument("--repeat", type=int, default=5)
+    ap.add_argument("--engines", default="loop,cohort",
+                    help="comma-separated client engines to time "
+                         f"(known: {','.join(ENGINE_KEYS)})")
     args = ap.parse_args()
     sizes = tuple(int(s) for s in args.sizes.split(","))
+    engines = tuple(e.strip() for e in args.engines.split(","))
+    for e in engines:
+        if e not in ENGINE_KEYS:
+            ap.error(f"unknown engine {e!r}; known: {tuple(ENGINE_KEYS)}")
     print("name,us_per_call,derived")
-    run(sizes=sizes, k=args.k, repeat=args.repeat)
+    run(sizes=sizes, k=args.k, repeat=args.repeat, engines=engines)
 
 
 if __name__ == "__main__":

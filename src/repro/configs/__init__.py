@@ -1,7 +1,7 @@
 """Config registry: the 10 assigned architectures, 4 shapes, paper tasks."""
-from repro.configs.base import (ARCHS, SHAPES, FedConfig, MeshConfig,
-                                ModelConfig, MoEConfig, ShapeConfig, SSMConfig,
-                                reduced)
+from repro.configs.base import (ARCHS, CLIENT_ENGINES, SHAPES, FedConfig,
+                                MeshConfig, ModelConfig, MoEConfig,
+                                ShapeConfig, SSMConfig, reduced)
 from repro.configs.shapes import (ALL_SHAPES, DECODE_32K, LONG_500K,
                                   PREFILL_32K, TRAIN_4K)
 

@@ -180,6 +180,13 @@ class ShapeConfig:
         return self.kind == "decode"
 
 
+#: Valid values of ``FedConfig.client_engine`` (DESIGN.md §7-8). Lives here
+#: rather than in ``repro.core.cohort`` so the config layer can fail fast
+#: without importing the engine implementations (``cohort.ENGINES`` aliases
+#: this tuple).
+CLIENT_ENGINES: Tuple[str, ...] = ("loop", "cohort", "cohort_sharded")
+
+
 @dataclasses.dataclass(frozen=True)
 class FedConfig:
     """AsyncFedED + baseline hyperparameters (paper §4, Appendix B.4)."""
@@ -216,16 +223,29 @@ class FedConfig:
     # "pytree": reference jnp passes | "pallas": flat-state fedagg kernels
     backend: str = "pytree"
     # client execution engine for fan-out sites — sync rounds, async
-    # initial seeding, burst re-dispatch (DESIGN.md §7):
-    # "loop":   one jit dispatch per client (exact reference)
-    # "cohort": one vmap-over-clients/scan-over-K dispatch with ragged-K
-    #           step masking (repro.core.cohort); equivalent to the loop
-    #           to float tolerance
+    # initial seeding, burst re-dispatch (DESIGN.md §7-8):
+    # "loop":           one jit dispatch per client (exact reference)
+    # "cohort":         one vmap-over-clients/scan-over-K dispatch with
+    #                   ragged-K step masking (repro.core.cohort);
+    #                   equivalent to the loop to float tolerance
+    # "cohort_sharded": the cohort cores shard_mapped over the `pod` mesh
+    #                   axis — each pod trains its own client shard, only
+    #                   deltas cross pods at aggregation; same event trace
+    #                   and data streams as the other two engines
     client_engine: str = "loop"
     # >0: arrivals landing within this window of the first one are drained
     # through the server's batched path in one multi-delta kernel sweep;
     # 0 preserves the paper's one-aggregation-per-arrival semantics.
     batch_window: float = 0.0
+
+    def __post_init__(self):
+        # Fail fast at config-construction time: an unknown engine name
+        # otherwise only surfaces deep inside the simulator's fan-out
+        # dispatch, after datasets and model state are already built.
+        if self.client_engine not in CLIENT_ENGINES:
+            raise ValueError(
+                f"unknown client_engine {self.client_engine!r}: expected "
+                f"one of {CLIENT_ENGINES} (see DESIGN.md §7-8)")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -22,11 +22,23 @@ The client axis pads to a power-of-two bucket in both cores (padded rows
 are discarded), bounding distinct compilations to ``log2(C) * log2(K)``
 buckets no matter how burst sizes vary over a run.
 
+The ``cohort_sharded`` engine (DESIGN.md §8) wraps the SAME two core
+bodies in ``shard_map`` over the ``pod`` axis of a 1-D client mesh
+(``launch.mesh.make_cohort_mesh``): the padded client bucket splits into
+equal per-pod shards (both are powers of two, so the split is always
+even), each pod runs the vmap/scan core on its own sub-cohort, and only
+the resulting deltas cross the pod boundary — at aggregation, on the
+host, exactly as in the unsharded engine. All host-side orchestration
+(batcher draws, staging order, commit order) is byte-identical across
+engines, so the simulator's event trace and every client's RNG state are
+engine-independent.
+
 Semantics match the per-client loop exactly: the same batcher index
 stream (``MiniBatcher.next_stacked`` is RNG-state-identical to k ``next``
 calls), the same momentum carry, the same per-round lr decay, the same
-FedProx anchor. Equivalence is pinned by ``tests/test_cohort.py`` on both
-server backends, including ragged K.
+FedProx anchor. Equivalence is pinned by ``tests/test_cohort.py`` and
+``tests/test_cohort_sharded.py`` on both server backends, including
+ragged K and client counts that don't divide the pod count.
 """
 from __future__ import annotations
 
@@ -36,16 +48,24 @@ from typing import Any, List, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
 
+from repro.configs.base import CLIENT_ENGINES
 from repro.configs.paper_tasks import PaperTaskConfig
 from repro.core.client import local_sgd_step
 from repro.core.server import ClientUpdate
+from repro.launch import mesh as mesh_lib
+from repro.sharding import specs as sh
 from repro.utils import pytree as pt
 
 PyTree = Any
 
-#: valid values of ``FedConfig.client_engine``
-ENGINES = ("loop", "cohort")
+#: valid values of ``FedConfig.client_engine`` (defined in configs.base so
+#: the config layer validates without importing engine code)
+ENGINES = CLIENT_ENGINES
+
+#: engines this module executes (everything but the per-client loop)
+COHORT_ENGINES = ("cohort", "cohort_sharded")
 
 
 def bucket_size(n: int) -> int:
@@ -56,15 +76,16 @@ def bucket_size(n: int) -> int:
     return 1 << (int(n) - 1).bit_length()
 
 
-@functools.partial(jax.jit, static_argnames=("task", "beta", "prox_mu"))
-def _cohort_dense(task: PaperTaskConfig, params: PyTree, mu: PyTree,
-                  xs: jax.Array, ys: jax.Array, lrs: jax.Array,
-                  beta: float = 0.5, prox_mu: float = 0.0):
-    """Uniform-K cohort: vmap over clients, scan over exactly K steps.
+def _dense_body(task: PaperTaskConfig, params: PyTree, mu: PyTree,
+                xs: jax.Array, ys: jax.Array, lrs: jax.Array,
+                beta: float, prox_mu: float):
+    """Uniform-K core body: vmap over clients, scan over exactly K steps.
 
     ``params``/``mu``: pytrees stacked ``(C, ...)``; ``xs``: ``(C, K, bs,
     ...)``; ``lrs``: ``(C,)`` f32. Returns ``(deltas, new_mu,
-    mean_losses)`` stacked along the client axis.
+    mean_losses)`` stacked along the client axis. Shared by the jitted
+    single-device core and the per-pod shard of the sharded core — a
+    pod's shard is just a smaller C.
     """
 
     def one_client(p0, m0, xs_c, ys_c, lr):
@@ -78,12 +99,10 @@ def _cohort_dense(task: PaperTaskConfig, params: PyTree, mu: PyTree,
     return jax.vmap(one_client)(params, mu, xs, ys, lrs)
 
 
-@functools.partial(jax.jit, static_argnames=("task", "beta", "prox_mu"))
-def _cohort_masked(task: PaperTaskConfig, params: PyTree, mu: PyTree,
-                   xs: jax.Array, ys: jax.Array, lrs: jax.Array,
-                   mask: jax.Array, beta: float = 0.5,
-                   prox_mu: float = 0.0):
-    """Ragged-K cohort: like :func:`_cohort_dense` plus a ``(C, K)`` f32
+def _masked_body(task: PaperTaskConfig, params: PyTree, mu: PyTree,
+                 xs: jax.Array, ys: jax.Array, lrs: jax.Array,
+                 mask: jax.Array, beta: float, prox_mu: float):
+    """Ragged-K core body: like :func:`_dense_body` plus a ``(C, K)`` f32
     step mask — a zero entry keeps that client's ``(params, momentum)``
     carry bitwise unchanged and contributes zero loss, so client i's
     result equals a k_i-step run regardless of the padded scan length.
@@ -111,6 +130,56 @@ def _cohort_masked(task: PaperTaskConfig, params: PyTree, mu: PyTree,
     return jax.vmap(one_client)(params, mu, xs, ys, lrs, mask)
 
 
+@functools.partial(jax.jit, static_argnames=("task", "beta", "prox_mu"))
+def _cohort_dense(task: PaperTaskConfig, params: PyTree, mu: PyTree,
+                  xs: jax.Array, ys: jax.Array, lrs: jax.Array,
+                  beta: float = 0.5, prox_mu: float = 0.0):
+    return _dense_body(task, params, mu, xs, ys, lrs, beta, prox_mu)
+
+
+@functools.partial(jax.jit, static_argnames=("task", "beta", "prox_mu"))
+def _cohort_masked(task: PaperTaskConfig, params: PyTree, mu: PyTree,
+                   xs: jax.Array, ys: jax.Array, lrs: jax.Array,
+                   mask: jax.Array, beta: float = 0.5,
+                   prox_mu: float = 0.0):
+    return _masked_body(task, params, mu, xs, ys, lrs, mask, beta, prox_mu)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_core(task: PaperTaskConfig, n_pods: int, masked: bool,
+                  beta: float, prox_mu: float):
+    """Jitted ``shard_map`` wrapper of the core bodies over a ``pod`` mesh.
+
+    Every operand carries the stacked client axis in front, so one prefix
+    spec (`sharding.specs.COHORT_PREFIX_SPEC`) shards them all: each pod
+    receives ``C_pad / n_pods`` client rows — its own params/momentum
+    slices, mini-batches, lrs and step masks — and runs the exact
+    vmap-over-clients/scan-over-K body on them. There is NO collective
+    inside local training; the deltas come back pod-sharded and cross the
+    boundary only when the server aggregates them (DESIGN.md §8).
+
+    Cached per ``(task, n_pods, masked, beta, prox_mu)``: the mesh is
+    process-global state, and jit caching below a shard_map closure is
+    keyed on the wrapped callable's identity.
+    """
+    mesh = mesh_lib.make_cohort_mesh(n_pods)
+    spec = sh.COHORT_PREFIX_SPEC
+
+    if masked:
+        def body(params, mu, xs, ys, lrs, mask):
+            return _masked_body(task, params, mu, xs, ys, lrs, mask,
+                                beta, prox_mu)
+        n_in = 6
+    else:
+        def body(params, mu, xs, ys, lrs):
+            return _dense_body(task, params, mu, xs, ys, lrs,
+                               beta, prox_mu)
+        n_in = 5
+    fn = shard_map(body, mesh=mesh, in_specs=(spec,) * n_in,
+                   out_specs=(spec, spec, spec))
+    return jax.jit(fn)
+
+
 def _pad_steps(bx: np.ndarray, by: np.ndarray, k_pad: int):
     """Pad a (k, bs, ...) batch stack to k_pad steps by repeating the last
     real batch (valid data — masked out, never applied)."""
@@ -125,7 +194,7 @@ def _pad_steps(bx: np.ndarray, by: np.ndarray, k_pad: int):
 def run_cohort(task: PaperTaskConfig, clients: Sequence,
                params: Union[PyTree, Sequence[PyTree]], ks: Sequence[int],
                snapshot_iters: Sequence[int], prox_mu: float = 0.0,
-               per_client_params: bool = False
+               per_client_params: bool = False, engine: str = "cohort"
                ) -> List[Tuple[ClientUpdate, float]]:
     """Train ``clients`` for ``ks`` local steps each in one jitted call.
 
@@ -138,7 +207,17 @@ def run_cohort(task: PaperTaskConfig, clients: Sequence,
     instead a length-C sequence of snapshots, stacked leafwise. The flag
     is explicit rather than inferred from ``isinstance`` so a future
     list-rooted params pytree cannot be misread as a per-client sequence.
+
+    ``engine`` selects the execution core: ``"cohort"`` runs the whole
+    stacked cohort on one device; ``"cohort_sharded"`` shards the client
+    axis over a ``pod`` mesh (as many pods as devices allow, capped at
+    the padded client bucket so shards stay equal-sized). Host-side
+    orchestration — and therefore every batcher's RNG state — is
+    identical either way.
     """
+    if engine not in COHORT_ENGINES:
+        raise ValueError(f"run_cohort got engine {engine!r}: expected one "
+                         f"of {COHORT_ENGINES} ('loop' is Client.run_local)")
     c_real = len(clients)
     if c_real == 0:
         return []
@@ -195,7 +274,20 @@ def run_cohort(task: PaperTaskConfig, clients: Sequence,
             lambda p: jnp.broadcast_to(p, (c_pad,) + p.shape), params)
 
     fed = clients[0].fed
-    if uniform:
+    if engine == "cohort_sharded":
+        # Per-pod client bucketing: c_pad and n_pods are both powers of
+        # two with n_pods <= c_pad, so every pod gets exactly
+        # c_pad / n_pods stacked rows — no per-pod raggedness, one
+        # compile per (bucket, pod-count) pair.
+        n_pods = mesh_lib.pod_count(max_pods=c_pad)
+        core = _sharded_core(task, n_pods, not uniform,
+                             fed.local_momentum, float(prox_mu))
+        if uniform:
+            res = core(p_stacked, mu_stacked, xs, ys, jnp.asarray(lrs))
+        else:
+            res = core(p_stacked, mu_stacked, xs, ys, jnp.asarray(lrs),
+                       jnp.asarray(mask))
+    elif uniform:
         res = _cohort_dense(task, p_stacked, mu_stacked, xs, ys,
                             jnp.asarray(lrs), beta=fed.local_momentum,
                             prox_mu=prox_mu)

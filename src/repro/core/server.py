@@ -2,7 +2,11 @@
 four baselines' aggregation rules (Appendix B.4).
 
 Servers are pure protocol logic — no clocks, no sockets. The discrete-event
-simulator (repro.core.simulator) drives them; the multi-pod path drives the
+simulator (repro.core.simulator) drives them, under any client engine
+(per-client loop, vectorized cohort, pod-sharded cohort — DESIGN.md §7-8):
+by the time a ``ClientUpdate`` reaches ``on_update``/``round``, its delta
+has already been gathered off whatever mesh trained it, so aggregation is
+the one place where pod shards meet. The multi-pod launch path drives the
 same classes with pod-sharded parameter pytrees.
 """
 from __future__ import annotations

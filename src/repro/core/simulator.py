@@ -76,9 +76,8 @@ class FederatedSimulation:
                  batch_window: Optional[float] = None):
         self.task = task
         self.fed = fed
-        if fed.client_engine not in cohort.ENGINES:
-            raise ValueError(f"unknown client_engine {fed.client_engine!r};"
-                             f" expected one of {cohort.ENGINES}")
+        # engine-name validation lives in FedConfig.__post_init__ — a bad
+        # name can't reach this constructor
         self.algorithm = algorithm
         self.batch_window = (fed.batch_window if batch_window is None
                              else batch_window)
@@ -130,12 +129,15 @@ class FederatedSimulation:
         """Train every ``(client, reply)`` fan-out job, in job order.
 
         ``FedConfig.client_engine`` picks the execution engine: the exact
-        per-client loop, or the vectorized cohort engine — one
-        vmap-over-clients/scan-over-K dispatch (repro.core.cohort,
-        DESIGN.md §7). Both consume identical batcher/RNG streams, so the
-        event trace is engine-independent up to float tolerance.
+        per-client loop, the vectorized cohort engine — one
+        vmap-over-clients/scan-over-K dispatch — or the pod-sharded
+        cohort engine, the same cores shard_mapped over a ``pod`` mesh so
+        each pod trains its own client shard (repro.core.cohort,
+        DESIGN.md §7-8). All engines consume identical batcher/RNG
+        streams, so the event trace is engine-independent up to float
+        tolerance.
         """
-        if self.fed.client_engine == "cohort" and len(jobs) > 1:
+        if self.fed.client_engine in cohort.COHORT_ENGINES and len(jobs) > 1:
             # run_cohort collapses identical snapshot objects to the
             # broadcast fast path itself (every server path hands a burst
             # one shared model object)
@@ -143,7 +145,7 @@ class FederatedSimulation:
                 self.task, [c for c, _ in jobs],
                 [r.params for _, r in jobs], [r.k_next for _, r in jobs],
                 [r.iteration for _, r in jobs], prox_mu=self.prox_mu,
-                per_client_params=True)
+                per_client_params=True, engine=self.fed.client_engine)
             return [u for u, _ in out]
         return [c.run_local(r.params, r.k_next, r.iteration, self.prox_mu)[0]
                 for c, r in jobs]

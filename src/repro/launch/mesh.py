@@ -29,6 +29,31 @@ def make_host_mesh(shape: Optional[Tuple[int, ...]] = None,
     return jax.make_mesh(shape, axes)
 
 
+def pod_count(max_pods: Optional[int] = None) -> int:
+    """Usable ``pod``-axis size on THIS process: the largest power of two
+    <= the device count (and <= ``max_pods`` when given).
+
+    Power of two so a power-of-two client bucket (``cohort.bucket_size``)
+    always divides it — every pod gets an equal-sized client shard with no
+    per-pod raggedness; a non-power-of-two ``max_pods`` is itself rounded
+    DOWN to a power of two so the invariant holds for any cap. One real
+    CPU device degenerates to 1 (the sharded engine then runs as a
+    single-shard shard_map, same code path)."""
+    n = len(jax.devices())
+    if max_pods is not None:
+        n = min(n, max_pods)
+    return max(1, 1 << (n.bit_length() - 1))
+
+
+def make_cohort_mesh(n_pods: int):
+    """1-D ``pod`` mesh over the first ``n_pods`` devices: the federated
+    client axis of the ``cohort_sharded`` engine (DESIGN.md §8). Each pod
+    owns ``C_pad / n_pods`` stacked client rows; nothing crosses pods
+    inside local training."""
+    return jax.make_mesh((n_pods,), ("pod",),
+                         devices=jax.devices()[:n_pods])
+
+
 # Hardware constants for the roofline model (TPU v5e)
 PEAK_FLOPS_BF16 = 197e12          # per chip, bf16
 HBM_BW = 819e9                    # bytes/s per chip

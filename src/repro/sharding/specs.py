@@ -14,6 +14,7 @@ from __future__ import annotations
 from typing import Any, Dict, Optional
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.configs.base import ModelConfig
@@ -162,3 +163,32 @@ def shardings_from_specs(mesh: Mesh, specs: PyTree) -> PyTree:
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s),
         specs, is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+# ---------------------------------------------------------------------------
+# Stacked cohort state: the federated client axis over `pod` (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+#: Prefix spec for every stacked cohort operand — params/momentum leaves
+#: ``(C, ...)``, batches ``(C, K, bs, ...)``, lrs ``(C,)``, step masks
+#: ``(C, K)``. As a shard_map in/out spec it partitions ONLY the leading
+#: client axis over `pod` and replicates every trailing feature axis, so a
+#: pod's shard is a self-contained sub-cohort.
+COHORT_PREFIX_SPEC = PartitionSpec("pod")
+
+
+def cohort_stacked_spec(ndim: int) -> PartitionSpec:
+    """Fully-spelled spec for one stacked leaf of rank ``ndim``: client
+    axis over `pod`, feature axes replicated."""
+    if ndim < 1:
+        raise ValueError("stacked cohort leaves have a leading client axis")
+    return PartitionSpec("pod", *([None] * (ndim - 1)))
+
+
+def cohort_spec_tree(stacked: PyTree) -> PyTree:
+    """PartitionSpec tree for a stacked per-client state pytree (leaves
+    already carry the leading ``(C, ...)`` client axis). Per-leaf
+    equivalent of `COHORT_PREFIX_SPEC` — pinned against the actual layout
+    the sharded core produces in tests/test_cohort_sharded.py."""
+    return jax.tree.map(lambda leaf: cohort_stacked_spec(np.ndim(leaf)),
+                        stacked)

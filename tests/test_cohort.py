@@ -162,10 +162,11 @@ class TestSimulatorEquivalence:
                                    rtol=1e-4)
 
     def test_unknown_engine_rejected(self):
+        # FedConfig.__post_init__ fails fast: the bad name never reaches
+        # the simulator, let alone dispatch.
         task = configs.SYNTHETIC_1_1
-        fed = dataclasses.replace(task.fed, client_engine="turbo")
         with pytest.raises(ValueError, match="client_engine"):
-            FederatedSimulation(task, fed, "fedavg", seed=0)
+            dataclasses.replace(task.fed, client_engine="turbo")
 
     def test_scenario_config_smoke(self):
         """The 256-client scenario wires cohort + pallas + burst window."""

@@ -1,0 +1,343 @@
+"""Sharded-cohort client-engine equivalence (DESIGN.md §8).
+
+`cohort_sharded` shard_maps the cohort cores over a `pod` mesh so each
+pod trains its own client shard; these tests pin that the shard boundary
+is invisible — identical simulator event traces (RNG draw order
+preserved), float-tolerance-equal deltas, and byte-identical batcher RNG
+state versus the `loop` and `cohort` engines, on both server backends,
+for uniform K, ragged K, and client counts that don't divide the pod
+count.
+
+Device topology: tests that only need the sharded CODE PATH run at any
+device count (a 1-pod mesh is valid shard_map); tests asserting real
+multi-pod placement take the `multidevice` fixture and skip below 8
+devices. `test_reexec_under_8_fake_devices` closes the gap on a plain
+1-device run by re-running this module in a subprocess with
+``--xla_force_host_platform_device_count=8`` (the flag only applies
+before the CPU backend initializes, hence the fresh process).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import MULTIDEVICE_COUNT, multidevice_subprocess_env
+from repro import configs
+from repro.core import cohort
+from repro.core.client import Client
+from repro.core.simulator import FederatedSimulation
+from repro.data.pipeline import load_task_datasets
+from repro.launch import mesh as mesh_lib
+from repro.models import small
+
+
+def assert_trees_close(a, b, rtol=2e-5, atol=1e-7):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+def trace(res):
+    return [(h.iteration, h.client_id, h.lag, h.k_next) for h in res.history]
+
+
+def make_clients(task, n, seed=0):
+    train_sets, _ = load_task_datasets(task, seed=seed)
+    return [Client(i, task, train_sets[i], task.fed, seed=seed)
+            for i in range(n)]
+
+
+class TestPodBucketing:
+    def test_pod_count_is_pow2_and_clamped(self):
+        n = mesh_lib.pod_count()
+        assert n >= 1 and (n & (n - 1)) == 0          # power of two
+        assert n <= jax.device_count()
+        assert mesh_lib.pod_count(max_pods=2) <= 2
+        assert mesh_lib.pod_count(max_pods=1) == 1
+        # a non-pow2 cap rounds DOWN to a power of two, never through
+        for cap in (3, 5, 6, 7):
+            got = mesh_lib.pod_count(max_pods=cap)
+            assert got <= cap and (got & (got - 1)) == 0
+        # a power-of-two client bucket always splits evenly over the pods
+        for c_real in (1, 3, 5, 8, 9):
+            c_pad = cohort.bucket_size(c_real)
+            assert c_pad % mesh_lib.pod_count(max_pods=c_pad) == 0
+
+    def test_run_cohort_rejects_non_cohort_engines(self):
+        task = configs.SYNTHETIC_1_1
+        clients = make_clients(task, 1)
+        params = small.init_task_model(jax.random.PRNGKey(0), task)
+        for bad in ("loop", "turbo"):
+            with pytest.raises(ValueError, match="engine"):
+                cohort.run_cohort(task, clients, params, [1], [1],
+                                  engine=bad)
+
+    def test_fedconfig_rejects_unknown_engine(self):
+        """Fail-fast at config construction, not deep inside dispatch."""
+        with pytest.raises(ValueError, match="client_engine"):
+            dataclasses.replace(configs.SYNTHETIC_1_1.fed,
+                                client_engine="turbo")
+        # all known engines construct fine
+        for eng in configs.CLIENT_ENGINES:
+            dataclasses.replace(configs.SYNTHETIC_1_1.fed,
+                                client_engine=eng)
+
+
+class TestEngineEquivalence:
+    """run_cohort(engine="cohort_sharded") == [run_local ...] == cohort."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        task = configs.SYNTHETIC_1_1
+        params = small.init_task_model(jax.random.PRNGKey(0), task)
+        return task, params
+
+    def test_uniform_k_dense_core(self, setup):
+        task, params = setup
+        loop_c = make_clients(task, 3, seed=7)
+        sh_c = make_clients(task, 3, seed=7)
+        loop = [c.run_local(params, 6, 1, 0.0) for c in loop_c]
+        shr = cohort.run_cohort(task, sh_c, params, [6] * 3, [1] * 3,
+                                engine="cohort_sharded")
+        for (u1, l1), (u2, l2) in zip(loop, shr):
+            assert (u1.client_id, u1.k_used, u1.snapshot_iter,
+                    u1.num_samples) == (u2.client_id, u2.k_used,
+                                        u2.snapshot_iter, u2.num_samples)
+            assert_trees_close(u1.delta, u2.delta)
+            assert abs(l1 - l2) < 1e-5
+
+    def test_ragged_k_momentum_carry_nondividing_c(self, setup):
+        """C=5 never divides an 8-pod mesh: the bucket pads to 8 (or the
+        pod count clamps to the bucket on small meshes); padded client
+        rows are discarded. Round 2 exercises the momentum carry."""
+        task, params = setup
+        ks = [3, 7, 5, 1, 4]
+        loop_c = make_clients(task, 5)
+        sh_c = make_clients(task, 5)
+        for rnd in (1, 2):
+            loop = [c.run_local(params, k, rnd, 0.0)
+                    for c, k in zip(loop_c, ks)]
+            shr = cohort.run_cohort(task, sh_c, params, ks, [rnd] * 5,
+                                    engine="cohort_sharded")
+            for (u1, l1), (u2, l2) in zip(loop, shr):
+                assert_trees_close(u1.delta, u2.delta)
+                assert abs(l1 - l2) < 1e-5
+        assert all(c.round_idx == 2 for c in sh_c)
+
+    def test_sharded_matches_unsharded_cohort(self, setup):
+        """Same stacked inputs through both cores: the shard boundary
+        must not change the math beyond float tolerance."""
+        task, params = setup
+        ks = [2, 4, 3, 2]
+        coh_c = make_clients(task, 4, seed=3)
+        sh_c = make_clients(task, 4, seed=3)
+        coh = cohort.run_cohort(task, coh_c, params, ks, [1] * 4)
+        shr = cohort.run_cohort(task, sh_c, params, ks, [1] * 4,
+                                engine="cohort_sharded")
+        for (u1, l1), (u2, l2) in zip(coh, shr):
+            assert_trees_close(u1.delta, u2.delta)
+            assert abs(l1 - l2) < 1e-5
+
+    def test_per_client_params_and_fedprox(self, setup):
+        task, params = setup
+        bumped = jax.tree.map(lambda p: p + 0.01, params)
+        loop_c = make_clients(task, 2, seed=4)
+        sh_c = make_clients(task, 2, seed=4)
+        loop = [loop_c[0].run_local(params, 3, 1, 0.1),
+                loop_c[1].run_local(bumped, 3, 1, 0.1)]
+        shr = cohort.run_cohort(task, sh_c, [params, bumped], [3, 3],
+                                [1, 1], prox_mu=0.1,
+                                per_client_params=True,
+                                engine="cohort_sharded")
+        for (u1, _), (u2, _) in zip(loop, shr):
+            assert_trees_close(u1.delta, u2.delta)
+
+
+class TestRngStream:
+    """MiniBatcher.next_stacked under sharded dispatch: the generator
+    state after a sharded fan-out is identical to the loop engine's, so
+    resuming with a DIFFERENT engine cannot fork the data stream."""
+
+    def test_rng_state_identical_after_fanout(self):
+        task = configs.SYNTHETIC_1_1
+        params = small.init_task_model(jax.random.PRNGKey(0), task)
+        ks = [3, 7, 5, 1, 4]
+        loop_c = make_clients(task, 5)
+        sh_c = make_clients(task, 5)
+        for c, k in zip(loop_c, ks):
+            c.run_local(params, k, 1, 0.0)
+        cohort.run_cohort(task, sh_c, params, ks, [1] * 5,
+                          engine="cohort_sharded")
+        for a, b in zip(loop_c, sh_c):
+            # full PCG64 state, not just the next draw
+            assert (a.batcher.rng.bit_generator.state
+                    == b.batcher.rng.bit_generator.state)
+            np.testing.assert_array_equal(a.batcher.next()[0],
+                                          b.batcher.next()[0])
+
+    def test_engine_switch_mid_run(self):
+        """Round 1 sharded, round 2 loop == two loop rounds: an engine
+        switch between rounds is invisible to the data stream and the
+        model math."""
+        task = configs.SYNTHETIC_1_1
+        params = small.init_task_model(jax.random.PRNGKey(0), task)
+        loop_c = make_clients(task, 3, seed=9)
+        mix_c = make_clients(task, 3, seed=9)
+        ks = [2, 3, 2]
+        [c.run_local(params, k, 1, 0.0) for c, k in zip(loop_c, ks)]
+        cohort.run_cohort(task, mix_c, params, ks, [1] * 3,
+                          engine="cohort_sharded")
+        loop = [c.run_local(params, k, 2, 0.0)
+                for c, k in zip(loop_c, ks)]
+        mixed = [c.run_local(params, k, 2, 0.0)
+                 for c, k in zip(mix_c, ks)]
+        for (u1, l1), (u2, l2) in zip(loop, mixed):
+            assert_trees_close(u1.delta, u2.delta)
+            assert abs(l1 - l2) < 1e-5
+
+
+class TestSimulatorEquivalence:
+    """client_engine="cohort_sharded" reproduces the loop engine's event
+    trace exactly (cohort-vs-loop is pinned by test_cohort.py, so all
+    three engines agree by transitivity)."""
+
+    def test_fedavg_rounds(self):
+        task = configs.SYNTHETIC_1_1
+        fed_s = dataclasses.replace(task.fed,
+                                    client_engine="cohort_sharded")
+        r1 = FederatedSimulation(task, task.fed, "fedavg",
+                                 seed=1).run(max_time=25.0)
+        r2 = FederatedSimulation(task, fed_s, "fedavg",
+                                 seed=1).run(max_time=25.0)
+        assert r1.total_updates == r2.total_updates >= 2
+        np.testing.assert_allclose([p.accuracy for p in r1.points],
+                                   [p.accuracy for p in r2.points],
+                                   rtol=1e-4)
+        np.testing.assert_allclose([p.loss for p in r1.points],
+                                   [p.loss for p in r2.points], rtol=1e-4)
+
+    @pytest.mark.parametrize("backend", ["pytree", "pallas"])
+    def test_async_seeding_and_burst_redispatch(self, backend):
+        """batch_window > 0 drives both sharded fan-out sites: initial
+        seeding (uniform K -> dense core) and windowed burst re-dispatch
+        (adaptive K diverges -> ragged masked core)."""
+        task = configs.SYNTHETIC_1_1
+        fed_l = dataclasses.replace(task.fed, backend=backend)
+        fed_s = dataclasses.replace(fed_l, client_engine="cohort_sharded")
+        r1 = FederatedSimulation(task, fed_l, "asyncfeded", seed=3,
+                                 batch_window=0.05).run(max_time=4.0)
+        r2 = FederatedSimulation(task, fed_s, "asyncfeded", seed=3,
+                                 batch_window=0.05).run(max_time=4.0)
+        assert r1.total_updates == r2.total_updates > 20
+        assert trace(r1) == trace(r2)
+        # ragged re-dispatch actually happened: adaptive K diverged
+        assert len({h.k_next for h in r1.history}) > 1
+        np.testing.assert_allclose([h.gamma for h in r1.history],
+                                   [h.gamma for h in r2.history],
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose([p.accuracy for p in r1.points],
+                                   [p.accuracy for p in r2.points],
+                                   rtol=1e-4)
+
+
+class TestMultidevicePlacement:
+    """Real multi-pod assertions: need >= 8 devices (CI tier1-multidevice
+    or the subprocess re-exec below)."""
+
+    def test_outputs_are_pod_sharded(self, multidevice):
+        """The jitted sharded core really places one client shard per pod
+        — output leaves are laid out over all 8 devices with the client
+        axis over `pod`."""
+        task = configs.SYNTHETIC_1_1
+        fed = task.fed
+        c = 8
+        clients = make_clients(task, c)
+        params = small.init_task_model(jax.random.PRNGKey(0), task)
+        p_stacked = jax.tree.map(
+            lambda p: jax.numpy.broadcast_to(p, (c,) + p.shape), params)
+        mu = jax.tree.map(lambda p: jax.numpy.zeros((c,) + p.shape),
+                          params)
+        bs = [cl.batcher.next_stacked(4) for cl in clients]
+        xs = np.stack([b[0] for b in bs])
+        ys = np.stack([b[1] for b in bs])
+        lrs = np.full((c,), fed.local_lr, np.float32)
+        core = cohort._sharded_core(task, MULTIDEVICE_COUNT, False,
+                                    fed.local_momentum, 0.0)
+        deltas, _, losses = core(p_stacked, mu, xs, ys, lrs)
+        leaf = jax.tree.leaves(deltas)[0]
+        assert len(leaf.sharding.device_set) == MULTIDEVICE_COUNT
+        assert leaf.sharding.spec[0] == "pod"
+        assert losses.shape == (c,)
+        # the spelled-out stacked-state specs describe the same layout
+        # the prefix-spec'd core actually produced
+        from jax.sharding import NamedSharding
+        from repro.sharding import specs as sh
+        mesh = mesh_lib.make_cohort_mesh(MULTIDEVICE_COUNT)
+        for got, spec in zip(jax.tree.leaves(deltas),
+                             jax.tree.leaves(sh.cohort_spec_tree(deltas))):
+            assert got.sharding.is_equivalent_to(
+                NamedSharding(mesh, spec), got.ndim)
+
+    def test_nondividing_counts_on_real_pods(self, multidevice):
+        """C=5 pads to an 8-row bucket over 8 pods (3 discarded padded
+        rows); C=3 pads to 4 and the pod count clamps to 4. Both must
+        match the loop exactly."""
+        task = configs.SYNTHETIC_1_1
+        params = small.init_task_model(jax.random.PRNGKey(0), task)
+        for n, ks in ((5, [3, 7, 5, 1, 4]), (3, [2, 4, 3])):
+            loop_c = make_clients(task, n, seed=n)
+            sh_c = make_clients(task, n, seed=n)
+            loop = [c.run_local(params, k, 1, 0.0)
+                    for c, k in zip(loop_c, ks)]
+            shr = cohort.run_cohort(task, sh_c, params, ks, [1] * n,
+                                    engine="cohort_sharded")
+            for (u1, _), (u2, _) in zip(loop, shr):
+                assert_trees_close(u1.delta, u2.delta)
+
+    def test_shared_snapshot_broadcast_collapse(self, multidevice):
+        """A burst handing every client the SAME snapshot object takes
+        the broadcast fast path; it must equal the explicit shared-params
+        call across real pods."""
+        task = configs.SYNTHETIC_1_1
+        params = small.init_task_model(jax.random.PRNGKey(0), task)
+        a_c = make_clients(task, 8, seed=1)
+        b_c = make_clients(task, 8, seed=1)
+        via_list = cohort.run_cohort(task, a_c, [params] * 8, [2] * 8,
+                                     [1] * 8, per_client_params=True,
+                                     engine="cohort_sharded")
+        via_shared = cohort.run_cohort(task, b_c, params, [2] * 8,
+                                       [1] * 8, engine="cohort_sharded")
+        assert len(via_list) == len(via_shared) == 8
+        for (u1, l1), (u2, l2) in zip(via_list, via_shared):
+            assert_trees_close(u1.delta, u2.delta)
+            assert abs(l1 - l2) < 1e-6
+
+
+def test_reexec_under_8_fake_devices():
+    """On a LOCAL 1-device run, re-run this module in a subprocess that
+    forces 8 fake CPU devices, so the multi-pod placement tests above
+    execute even without the tier1-multidevice CI job. Skips (rather
+    than recursing) when this process already sees 8 devices, and in CI
+    — there the dedicated tier1-multidevice job provides this coverage
+    and the re-exec would only duplicate it on the tier1 critical path."""
+    if jax.device_count() >= MULTIDEVICE_COUNT:
+        pytest.skip("already running with >= 8 devices")
+    if os.environ.get("CI"):
+        pytest.skip("CI: 8-device coverage comes from tier1-multidevice")
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-m", "pytest", "-x", "-q",
+             "-p", "no:cacheprovider", __file__, "-k", "not reexec"],
+            env=multidevice_subprocess_env(), capture_output=True,
+            text=True, timeout=1500)
+    except FileNotFoundError:
+        pytest.skip("python executable unavailable for subprocess re-exec")
+    except subprocess.TimeoutExpired:
+        pytest.fail("multidevice subprocess timed out")
+    assert proc.returncode == 0, (
+        "multidevice re-exec failed:\n" + proc.stdout[-4000:]
+        + "\n" + proc.stderr[-2000:])
