@@ -11,6 +11,13 @@ from repro import configs
 from repro.core.simulator import FederatedSimulation
 
 
+def _row(res) -> dict:
+    """One run's JSON row via SimResult.to_json() (shared serialization)."""
+    j = res.to_json()
+    return {"max_acc": j["max_acc"], "final_acc": j["final_acc"],
+            "curve": j["curve"]}
+
+
 def run(task_name: str = "synthetic-1-1", max_time: float = 45.0,
         ks=(5, 10, 15, 20), seed: int = 0) -> dict:
     task = configs.PAPER_TASKS[task_name]
@@ -20,13 +27,9 @@ def run(task_name: str = "synthetic-1-1", max_time: float = 45.0,
     sim = FederatedSimulation(task, task.fed, "asyncfeded", seed=seed)
     res = sim.run(max_time=max_time, eval_every=10)
     ks_seen = [r.k_next for r in res.history]
-    out["adaptive"] = {
-        "max_acc": res.max_accuracy(),
-        "final_acc": res.points[-1].accuracy,
-        "k_mean": float(np.mean(ks_seen)), "k_min": int(np.min(ks_seen)),
-        "k_max": int(np.max(ks_seen)),
-        "curve": [(p.time, p.accuracy) for p in res.points],
-    }
+    out["adaptive"] = dict(
+        _row(res), k_mean=float(np.mean(ks_seen)),
+        k_min=int(np.min(ks_seen)), k_max=int(np.max(ks_seen)))
     emit(f"adaptive_k/{task_name}/adaptive", 0.0,
          f"max_acc={out['adaptive']['max_acc']:.4f};k_mean="
          f"{out['adaptive']['k_mean']:.1f}")
@@ -36,11 +39,7 @@ def run(task_name: str = "synthetic-1-1", max_time: float = 45.0,
         fed = dataclasses.replace(task.fed, k_initial=k, kappa=0.0)
         sim = FederatedSimulation(task, fed, "asyncfeded", seed=seed)
         res = sim.run(max_time=max_time, eval_every=10)
-        out[f"K={k}"] = {
-            "max_acc": res.max_accuracy(),
-            "final_acc": res.points[-1].accuracy,
-            "curve": [(p.time, p.accuracy) for p in res.points],
-        }
+        out[f"K={k}"] = _row(res)
         emit(f"adaptive_k/{task_name}/K={k}", 0.0,
              f"max_acc={out[f'K={k}']['max_acc']:.4f}")
     save_json("adaptive_k", out)

@@ -1,0 +1,114 @@
+"""Arrival-model sweep + burst-window autotuning row (DESIGN.md §9).
+
+Runs the same task/protocol under each client-behavior model (paper /
+trace / poisson-burst / diurnal) and, per model, under each drain-window
+policy (fixed values and ``"auto"``). Reports accuracy, update count, and
+— the autotuning headline — the number of server drains: on bursty
+arrivals the auto window batches clusters through ONE multi-delta kernel
+sweep each, so ``drains`` falls well below ``updates`` at equal accuracy,
+while on regular arrivals it stays closed (drains == updates, zero added
+staleness).
+
+CLI (CI bench-smoke runs the tiny sweep):
+    python -m benchmarks.arrival_bench --models paper,poisson-burst \
+        --windows 0,auto --max-time 6 --clients 8
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from benchmarks.common import emit, save_json, summarize_runs
+from repro import configs
+from repro.core.behavior import BEHAVIORS
+from repro.core.simulator import FederatedSimulation
+
+#: model-specific knobs for the sweep — burst_gap tuned so clusters are
+#: dense relative to compute time at smoke scale
+BEHAVIOR_KWARGS = {
+    "poisson-burst": {"burst_gap": 0.6, "jitter": 0.005},
+    "diurnal": {"period": 8.0, "amplitude": 0.7},
+}
+
+
+def _parse_window(s: str):
+    return "auto" if s == "auto" else float(s)
+
+
+def bench_model(model: str, windows, *, clients: int = 8,
+                max_time: float = 6.0, seed: int = 1,
+                algorithm: str = "asyncfeded") -> dict:
+    """One behavior model under every window policy, shared seed/task."""
+    fed = dataclasses.replace(
+        configs.SYNTHETIC_1_1.fed, num_clients=clients, backend="pallas",
+        client_behavior=model)
+    task = dataclasses.replace(configs.SYNTHETIC_1_1, num_clients=clients,
+                               samples_per_client=32, fed=fed)
+    out = {"model": model, "clients": clients, "max_time": max_time}
+    for window in windows:
+        sim = FederatedSimulation(
+            task, fed, algorithm, seed=seed, batch_window=window,
+            behavior_kwargs=BEHAVIOR_KWARGS.get(model, {}))
+        res = sim.run(max_time=max_time, eval_every=10)
+        row = summarize_runs([res])
+        if window == "auto":
+            row["controller"] = sim.window_controller.stats()
+        key = f"window={window}"
+        out[key] = row
+        emit(f"arrival/{model}/{key}", row["t90_mean"] * 1e6,
+             f"acc={row['max_acc_mean']:.3f};updates={row['updates']}"
+             f";drains={row['drains']}")
+    return out
+
+
+def run(models=("paper", "poisson-burst", "diurnal"),
+        windows=(0.0, "auto"), clients: int = 8, max_time: float = 6.0,
+        seed: int = 1) -> dict:
+    out = {m: bench_model(m, windows, clients=clients, max_time=max_time,
+                          seed=seed) for m in models}
+    # the acceptance row: auto vs fixed-zero on the burst scenario —
+    # fewer drains at equal accuracy tolerance
+    zero = next((w for w in windows if w != "auto" and float(w) == 0.0),
+                None)
+    if "poisson-burst" in out and zero is not None and "auto" in windows:
+        burst = out["poisson-burst"]
+        fixed, auto = burst[f"window={zero}"], burst["window=auto"]
+        out["auto_vs_fixed0_burst"] = {
+            "drains_fixed0": fixed["drains"],
+            "drains_auto": auto["drains"],
+            "drain_reduction": 1.0 - auto["drains"] / max(fixed["drains"], 1),
+            "acc_fixed0": fixed["max_acc_mean"],
+            "acc_auto": auto["max_acc_mean"],
+            "acc_gap": abs(auto["max_acc_mean"] - fixed["max_acc_mean"]),
+        }
+        r = out["auto_vs_fixed0_burst"]
+        emit("arrival/auto_vs_fixed0_burst", 0.0,
+             f"drains={r['drains_auto']}vs{r['drains_fixed0']}"
+             f";acc_gap={r['acc_gap']:.3f}")
+    save_json("arrival_bench", out)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--models", default="paper,poisson-burst,diurnal",
+                    help=f"comma-separated subset of {sorted(BEHAVIORS)}")
+    ap.add_argument("--windows", default="0,auto",
+                    help="comma-separated window policies (floats or auto)")
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--max-time", type=float, default=6.0)
+    ap.add_argument("--seed", type=int, default=1)
+    args = ap.parse_args()
+    models = tuple(m.strip() for m in args.models.split(","))
+    for m in models:
+        if m not in BEHAVIORS:
+            ap.error(f"unknown model {m!r}; known: {sorted(BEHAVIORS)}")
+    windows = tuple(_parse_window(w.strip())
+                    for w in args.windows.split(","))
+    print("name,us_per_call,derived")
+    run(models=models, windows=windows, clients=args.clients,
+        max_time=args.max_time, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -4,9 +4,27 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Callable
+from typing import Callable, Optional, Sequence
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def summarize_runs(runs: Sequence, within_time: Optional[float] = None
+                   ) -> dict:
+    """Aggregate one algorithm's seed runs into the JSON row every driver
+    used to hand-roll, built on ``SimResult.summary()/to_json()``: seed
+    means of the scalar fields plus the first seed's accuracy curve."""
+    import numpy as np
+    summaries = [r.summary() for r in runs]
+    out = {f"{k}_mean": float(np.mean([s[k] for s in summaries]))
+           for k in ("final_acc", "max_acc", "t90")}
+    if within_time is not None:
+        out["max_acc_within_mean"] = float(
+            np.mean([r.max_accuracy(within_time) for r in runs]))
+    out["updates"] = summaries[0]["updates"]
+    out["drains"] = summaries[0]["drains"]
+    out["curve"] = runs[0].to_json()["curve"]
+    return out
 
 
 def save_json(name: str, obj) -> str:

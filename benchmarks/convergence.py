@@ -4,9 +4,7 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from benchmarks.common import emit, save_json
+from benchmarks.common import emit, save_json, summarize_runs
 from repro import configs
 from repro.core.simulator import run_comparison
 
@@ -31,16 +29,7 @@ def run(tasks=("synthetic-1-1",), max_time: float = 60.0,
                                  seeds=seeds, eval_every=eval_every)
         summary = {}
         for alg, runs in results.items():
-            finals = [r.points[-1].accuracy for r in runs]
-            maxes = [r.max_accuracy() for r in runs]
-            t90s = [r.time_to_accuracy(0.9 * r.max_accuracy()) for r in runs]
-            summary[alg] = {
-                "final_acc_mean": float(np.mean(finals)),
-                "max_acc_mean": float(np.mean(maxes)),
-                "t90_mean": float(np.mean(t90s)),
-                "updates": runs[0].total_updates,
-                "curve": [(p.time, p.accuracy) for p in runs[0].points],
-            }
+            summary[alg] = summarize_runs(runs)
             emit(f"convergence/{task_name}/{alg}",
                  summary[alg]["t90_mean"] * 1e6,
                  f"max_acc={summary[alg]['max_acc_mean']:.4f}")

@@ -3,9 +3,7 @@ within a time budget, and time to 90% of max accuracy, vs suspension
 probability P."""
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import emit, save_json
+from benchmarks.common import emit, save_json, summarize_runs
 from repro import configs
 from repro.core.simulator import run_comparison
 
@@ -23,12 +21,11 @@ def run(task_name: str = "synthetic-1-1",
                                  suspension_prob=p)
         row = {}
         for alg, runs in results.items():
-            maxacc = float(np.mean([r.max_accuracy(max_time) for r in runs]))
-            t90 = float(np.mean([r.time_to_accuracy(0.9 * r.max_accuracy())
-                                 for r in runs]))
-            row[alg] = {"max_acc": maxacc, "t90": t90}
-            emit(f"robustness/{task_name}/P={p}/{alg}", t90 * 1e6,
-                 f"max_acc={maxacc:.4f}")
+            s = summarize_runs(runs, within_time=max_time)
+            row[alg] = {"max_acc": s["max_acc_within_mean"],
+                        "t90": s["t90_mean"]}
+            emit(f"robustness/{task_name}/P={p}/{alg}",
+                 s["t90_mean"] * 1e6, f"max_acc={row[alg]['max_acc']:.4f}")
         out[str(p)] = row
     save_json("robustness", out)
     return out

@@ -10,6 +10,7 @@ artifacts/bench/.
   §Roofline -> roofline.summarize() (from dry-run artifacts)
   §Perf   -> kernel_bench.run() (fedagg aggregation variants)
   §Scale  -> client_bench.run() (cohort vs per-client-loop local training)
+  §9      -> arrival_bench.run() (behavior models x drain-window policies)
 
 ``--quick`` shrinks virtual-time budgets for CI-style runs; ``--full``
 reproduces the paper-scale sweep (all 3 tasks, longer horizon).
@@ -27,7 +28,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: convergence,robustness,"
-                         "adaptive_k,theory,roofline,kernel,client")
+                         "adaptive_k,theory,roofline,kernel,client,arrival")
     args = ap.parse_args()
 
     max_time = 20.0 if args.quick else (90.0 if args.full else 45.0)
@@ -64,6 +65,10 @@ def main() -> None:
     if want("client"):
         from benchmarks import client_bench
         client_bench.run(sizes=(16, 64) if args.quick else (16, 64, 256))
+    if want("arrival"):
+        from benchmarks import arrival_bench
+        arrival_bench.run(clients=8 if args.quick else 16,
+                          max_time=5.0 if args.quick else max_time * 0.25)
     print(f"# total benchmark wall time: {time.time() - t0:.1f}s",
           file=sys.stderr)
 

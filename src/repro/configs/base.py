@@ -7,7 +7,7 @@ dataclasses — hashable so they can be closed over by jitted functions.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 from repro.utils.registry import Registry
 
@@ -186,6 +186,11 @@ class ShapeConfig:
 #: this tuple).
 CLIENT_ENGINES: Tuple[str, ...] = ("loop", "cohort", "cohort_sharded")
 
+#: Valid values of ``FedConfig.client_behavior`` (DESIGN.md §9) — mirrors
+#: ``repro.core.behavior.BEHAVIORS`` for the same fail-fast reason.
+CLIENT_BEHAVIORS: Tuple[str, ...] = ("paper", "trace", "poisson-burst",
+                                     "diurnal")
+
 
 @dataclasses.dataclass(frozen=True)
 class FedConfig:
@@ -233,10 +238,26 @@ class FedConfig:
     #                   deltas cross pods at aggregation; same event trace
     #                   and data streams as the other two engines
     client_engine: str = "loop"
+    # client-behavior model driving arrival dynamics (DESIGN.md §9):
+    # "paper" (exact §B.2 lognormal/TCP/suspension semantics, default),
+    # "trace" (replayable round-duration traces), "poisson-burst"
+    # (clustered arrivals), "diurnal" (time-varying rates).
+    client_behavior: str = "paper"
+    # shared behavior knobs: per-round probability of a temporary offline
+    # gap (churn) / of permanent departure (dropout). 0 = paper semantics
+    # with zero extra RNG draws.
+    churn_prob: float = 0.0
+    dropout_prob: float = 0.0
+    # model-specific behavior knobs as a hashable (name, value) tuple —
+    # e.g. (("burst_gap", 0.5), ("jitter", 0.01)) — merged into the
+    # behavior model's constructor kwargs by the simulator.
+    behavior_params: Tuple[Tuple[str, float], ...] = ()
     # >0: arrivals landing within this window of the first one are drained
     # through the server's batched path in one multi-delta kernel sweep;
-    # 0 preserves the paper's one-aggregation-per-arrival semantics.
-    batch_window: float = 0.0
+    # 0 preserves the paper's one-aggregation-per-arrival semantics;
+    # "auto" picks the window online from observed inter-arrival density
+    # (repro.core.events.AutoWindow, DESIGN.md §9).
+    batch_window: Union[float, str] = 0.0
 
     def __post_init__(self):
         # Fail fast at config-construction time: an unknown engine name
@@ -246,6 +267,18 @@ class FedConfig:
             raise ValueError(
                 f"unknown client_engine {self.client_engine!r}: expected "
                 f"one of {CLIENT_ENGINES} (see DESIGN.md §7-8)")
+        if self.client_behavior not in CLIENT_BEHAVIORS:
+            raise ValueError(
+                f"unknown client_behavior {self.client_behavior!r}: "
+                f"expected one of {CLIENT_BEHAVIORS} (see DESIGN.md §9)")
+        if isinstance(self.batch_window, str):
+            if self.batch_window != "auto":
+                raise ValueError(
+                    f"batch_window must be a number >= 0 or 'auto', got "
+                    f"{self.batch_window!r}")
+        elif self.batch_window < 0:
+            raise ValueError(
+                f"batch_window must be >= 0, got {self.batch_window!r}")
 
 
 @dataclasses.dataclass(frozen=True)

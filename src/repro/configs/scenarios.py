@@ -37,5 +37,36 @@ SYNTHETIC_256 = _scaled(SYNTHETIC_1_1, "synthetic-256", num_clients=256,
 FEMNIST_64 = _scaled(FEMNIST, "femnist-64", num_clients=64,
                      samples_per_client=128, gmis_depth=128)
 
-for _s in (SYNTHETIC_256, FEMNIST_64):
+# --- arrival-dynamics scenarios (client-behavior models, DESIGN.md §9) ---
+
+#: Bursty arrivals + autotuned drain window: clients cluster on a global
+#: Poisson burst process and the server opens its window from observed
+#: inter-arrival density, draining each cluster through ONE multi-delta
+#: kernel sweep. The scenario behind the auto-vs-fixed bench row
+#: (benchmarks/arrival_bench.py).
+SYNTHETIC_BURST = _scaled(
+    SYNTHETIC_1_1, "synthetic-burst", num_clients=32, samples_per_client=64,
+    backend="pallas", batch_window="auto", gmis_depth=128,
+    client_behavior="poisson-burst",
+    behavior_params=(("burst_gap", 0.6), ("jitter", 0.01)))
+
+#: Time-of-day load swings with client churn: device throughput follows a
+#: sinusoidal diurnal profile and 2% of rounds end in a temporary offline
+#: gap — arrival density drifts, exercising the auto controller's
+#: open/close transitions.
+SYNTHETIC_DIURNAL = _scaled(
+    SYNTHETIC_1_1, "synthetic-diurnal", num_clients=32,
+    samples_per_client=64, batch_window="auto",
+    client_behavior="diurnal", churn_prob=0.02,
+    behavior_params=(("period", 15.0), ("amplitude", 0.7)))
+
+#: Replayed round-duration traces: every client cycles a deterministic
+#: lognormal trace synthesized from the seed — the template for driving
+#: the simulator from recorded production inter-arrival logs.
+SYNTHETIC_TRACE = _scaled(
+    SYNTHETIC_1_1, "synthetic-trace", num_clients=16, samples_per_client=64,
+    client_behavior="trace")
+
+for _s in (SYNTHETIC_256, FEMNIST_64, SYNTHETIC_BURST, SYNTHETIC_DIURNAL,
+           SYNTHETIC_TRACE):
     SCENARIOS.register(_s.name)(_s)

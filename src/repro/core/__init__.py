@@ -1,5 +1,9 @@
 """AsyncFedED core: the paper's contribution as composable pieces."""
 from repro.core.adaptive_k import AdaptiveK, update_k
+from repro.core.behavior import BEHAVIORS, ClientBehavior, make_behavior
+from repro.core.events import (AutoWindow, EventLoop, EventQueue,
+                               FixedWindow, VirtualClock,
+                               make_window_controller)
 from repro.core.aggregation import (AggregationResult, adaptive_lr,
                                     asyncfeded_aggregate,
                                     asyncfeded_aggregate_per_leaf,
@@ -14,7 +18,10 @@ from repro.core.simulator import (EvalPoint, FederatedSimulation, SimResult,
                                   run_comparison)
 
 __all__ = [
-    "AdaptiveK", "update_k", "AggregationResult", "adaptive_lr", "staleness",
+    "AdaptiveK", "update_k", "BEHAVIORS", "ClientBehavior", "make_behavior",
+    "AutoWindow", "EventLoop", "EventQueue", "FixedWindow", "VirtualClock",
+    "make_window_controller",
+    "AggregationResult", "adaptive_lr", "staleness",
     "asyncfeded_aggregate", "asyncfeded_aggregate_per_leaf",
     "asyncfeded_aggregate_with_dist", "Client", "bucket_size", "run_cohort",
     "DisplacementGMIS",

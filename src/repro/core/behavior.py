@@ -1,0 +1,226 @@
+"""Pluggable client-behavior models: who arrives when (DESIGN.md §9).
+
+The paper's environment (§B.2 — lognormal device heterogeneity, TCP
+transmission, random suspension) used to be hard-wired into the simulator.
+It is now one model among several behind a single interface, so the same
+protocol/server/engine stack can run under any arrival dynamics — which is
+where async FL methods actually differentiate (Fraboni et al. 2022).
+
+A behavior model owns the simulator's timing RNG outright. ``dispatch``
+answers, for one client handed ``k`` local steps at virtual time ``now``:
+*how long until its update lands* — or ``None`` if the client churns out
+permanently. Every model shares two knobs: ``churn_prob`` (per round, the
+client goes offline for an exponential extra gap before its update lands)
+and ``dropout_prob`` (per round, the client leaves for good). Both default
+to 0 and make **zero** RNG draws when 0, so the ``paper`` model with
+default knobs replays the pre-refactor generator stream byte-for-byte
+(pinned by tests/test_event_runtime.py).
+
+Models:
+
+* ``paper``         — exact §B.2 semantics (the default).
+* ``trace``         — replayable per-client round-duration traces.
+* ``poisson-burst`` — arrivals cluster on a global Poisson burst process.
+* ``diurnal``       — sinusoidal time-of-day rate modulation.
+"""
+from __future__ import annotations
+
+import bisect
+import math
+from typing import Dict, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.configs.base import FedConfig
+
+#: seconds per local SGD step on the nominal client (pre-refactor
+#: ``FederatedSimulation.BASE_STEP_TIME``)
+BASE_STEP_TIME = 0.05
+#: max suspension hang ~ U(0, HANG_SCALE * step_time * K) (pre-refactor
+#: ``FederatedSimulation.HANG_SCALE``)
+HANG_SCALE = 30.0
+
+
+class ClientBehavior:
+    """Base class: per-client device speeds + the shared churn/dropout
+    knobs. Subclasses implement :meth:`duration`."""
+
+    name = "base"
+
+    def __init__(self, fed: FedConfig, *, seed: int, model_bytes: int,
+                 heterogeneity: float = 0.6, churn_prob: float = 0.0,
+                 dropout_prob: float = 0.0, churn_scale: float = 10.0):
+        self.fed = fed
+        self.model_bytes = model_bytes
+        self.heterogeneity = heterogeneity
+        self.churn_prob = float(churn_prob)
+        self.dropout_prob = float(dropout_prob)
+        self.churn_scale = float(churn_scale)
+        # Same seed derivation as the pre-refactor simulator, so the paper
+        # model's generator stream is byte-identical to the old
+        # ``FederatedSimulation.rng``.
+        self.rng = np.random.default_rng(seed + 99_991)
+        # heterogeneity: per-client step time, fixed for the run (the old
+        # simulator drew this vector first, before any per-dispatch draw)
+        self.step_time = (BASE_STEP_TIME
+                          * self.rng.lognormal(0.0, heterogeneity,
+                                               fed.num_clients))
+
+    # --- §B.2 primitives shared by several models -------------------------
+    def _tx_time(self) -> float:
+        """TCP transmission: model_bytes / speed * coef, coef ~ N(1, 0.2)
+        truncated at 0.1."""
+        coef = max(0.1, self.rng.normal(1.0, 0.2))
+        return self.model_bytes / (self.fed.transmission_mbps * 1e6 / 8) * coef
+
+    def _hang_time(self, k: int) -> float:
+        """Suspension: with prob P the client hangs for a random time w.r.t.
+        the round's maximum running time."""
+        if self.rng.random() < self.fed.suspension_prob:
+            return self.rng.uniform(0.0, HANG_SCALE * BASE_STEP_TIME * k)
+        return 0.0
+
+    # --- the interface ----------------------------------------------------
+    def duration(self, client_id: int, k: int, now: float) -> float:
+        """Wall time from dispatch at ``now`` until the update arrives."""
+        raise NotImplementedError
+
+    def dispatch(self, client_id: int, k: int, now: float) -> Optional[float]:
+        """One fan-out: duration until arrival, or ``None`` if the client
+        drops out permanently. Churn/dropout draw from the RNG only when
+        their knobs are nonzero (paper-stream preservation)."""
+        dur = self.duration(client_id, k, now)
+        if self.dropout_prob and self.rng.random() < self.dropout_prob:
+            return None
+        if self.churn_prob and self.rng.random() < self.churn_prob:
+            dur += self.rng.exponential(self.churn_scale * BASE_STEP_TIME * k)
+        return dur
+
+
+class PaperBehavior(ClientBehavior):
+    """Exact §B.2 semantics — download tx + suspension hang + K local steps
+    + upload tx, with the pre-refactor draw order per dispatch:
+    normal (download), random [+ uniform] (hang), normal (upload)."""
+
+    name = "paper"
+
+    def duration(self, client_id: int, k: int, now: float) -> float:
+        # grouping matters: the legacy loop computed
+        # tx + (hang + k*step + tx), and float addition isn't associative —
+        # byte-equivalence includes the sum order
+        down = self._tx_time()
+        return down + (self._hang_time(k) + k * self.step_time[client_id]
+                       + self._tx_time())
+
+
+class TraceBehavior(ClientBehavior):
+    """Replayable round-duration traces: client ``i``'s n-th dispatch takes
+    ``trace_i[n % len]`` seconds regardless of K — a pure replay of
+    recorded wall times (adaptive K changes *what* trains, not *when* it
+    lands). ``trace`` may be one shared sequence (each client cycles it
+    with its own counter), a mapping client_id -> sequence, or ``None`` —
+    then a deterministic lognormal trace of ``trace_len`` durations per
+    client is synthesized from the seed, so runs replay exactly."""
+
+    name = "trace"
+
+    def __init__(self, fed: FedConfig, *,
+                 trace: Union[None, Sequence[float],
+                              Dict[int, Sequence[float]]] = None,
+                 trace_len: int = 64, trace_scale: float = 1.0, **kw):
+        super().__init__(fed, **kw)
+        self.trace_scale = float(trace_scale)
+        if trace is None:
+            base = self.fed.k_initial * self.step_time  # (C,) nominal rounds
+            noise = self.rng.lognormal(0.0, 0.5,
+                                       (fed.num_clients, int(trace_len)))
+            self._trace = {i: (base[i] * noise[i]).tolist()
+                           for i in range(fed.num_clients)}
+        elif isinstance(trace, dict):
+            self._trace = {int(c): list(map(float, t))
+                           for c, t in trace.items()}
+        else:
+            shared = list(map(float, trace))
+            self._trace = {i: shared for i in range(fed.num_clients)}
+        self._pos: Dict[int, int] = {}
+
+    def duration(self, client_id: int, k: int, now: float) -> float:
+        t = self._trace[client_id]
+        i = self._pos.get(client_id, 0)
+        self._pos[client_id] = i + 1
+        return t[i % len(t)] * self.trace_scale
+
+
+class PoissonBurstBehavior(ClientBehavior):
+    """Clustered arrivals: a global Poisson process of burst epochs (mean
+    gap ``burst_gap``); a client that finishes computing waits for the next
+    epoch and lands shortly after it (``jitter``-mean exponential), so
+    updates arrive in dense clusters separated by quiet gaps — the regime
+    where windowed draining through the batched fedagg kernel wins."""
+
+    name = "poisson-burst"
+
+    def __init__(self, fed: FedConfig, *, burst_gap: float = 1.0,
+                 jitter: float = 0.01, **kw):
+        super().__init__(fed, **kw)
+        self.burst_gap = float(burst_gap)
+        self.jitter = float(jitter)
+        self._epochs = [0.0]
+
+    def _next_epoch_after(self, t: float) -> float:
+        while self._epochs[-1] < t:
+            self._epochs.append(self._epochs[-1]
+                                + self.rng.exponential(self.burst_gap))
+        return self._epochs[bisect.bisect_left(self._epochs, t)]
+
+    def duration(self, client_id: int, k: int, now: float) -> float:
+        ready = now + k * self.step_time[client_id] + self._tx_time()
+        epoch = self._next_epoch_after(ready)
+        return (epoch - now) + self.rng.exponential(self.jitter)
+
+
+class DiurnalBehavior(ClientBehavior):
+    """Time-varying rates: device throughput is modulated by a sinusoidal
+    day profile ``r(t) = 1 + amplitude * sin(2 pi t / period)`` — clients
+    run faster (arrivals denser) at the peak and slower at the trough, so
+    the arrival density the auto-window controller sees drifts over time."""
+
+    name = "diurnal"
+
+    def __init__(self, fed: FedConfig, *, period: float = 20.0,
+                 amplitude: float = 0.8, phase: float = 0.0, **kw):
+        super().__init__(fed, **kw)
+        assert 0.0 <= amplitude < 1.0, amplitude
+        self.period = float(period)
+        self.amplitude = float(amplitude)
+        self.phase = float(phase)
+
+    def rate(self, t: float) -> float:
+        return 1.0 + self.amplitude * math.sin(
+            2.0 * math.pi * (t + self.phase) / self.period)
+
+    def duration(self, client_id: int, k: int, now: float) -> float:
+        down = self._tx_time()
+        compute = (self._hang_time(k) + k * self.step_time[client_id])
+        return (down + compute / self.rate(now) + self._tx_time())
+
+
+#: behavior name -> class; ``configs.base.CLIENT_BEHAVIORS`` mirrors the
+#: keys so FedConfig can fail fast without importing this module.
+BEHAVIORS = {cls.name: cls for cls in
+             (PaperBehavior, TraceBehavior, PoissonBurstBehavior,
+              DiurnalBehavior)}
+
+
+def make_behavior(name: str, fed: FedConfig, *, seed: int, model_bytes: int,
+                  heterogeneity: float = 0.6, **kwargs) -> ClientBehavior:
+    """Build a behavior model by name. ``kwargs`` are model-specific knobs
+    (merged from ``FedConfig.behavior_params`` and the simulator's
+    ``behavior_kwargs`` by the caller)."""
+    try:
+        cls = BEHAVIORS[name]
+    except KeyError:
+        raise ValueError(f"unknown client_behavior {name!r}: expected one "
+                         f"of {tuple(BEHAVIORS)}") from None
+    return cls(fed, seed=seed, model_bytes=model_bytes,
+               heterogeneity=heterogeneity, **kwargs)

@@ -86,6 +86,16 @@ class AsyncServer:
             return replies
         return [ServerReply(self.params, self.t, r.k_next) for r in replies]
 
+    def batch_limit(self) -> Optional[int]:
+        """Largest burst this server's drain path digests at full kernel
+        efficiency (None = no preference). The auto-window controller
+        (events.AutoWindow) clamps its target batch to this."""
+        return None
+
+    def finalize(self, now: float) -> None:
+        """Runtime end-of-run hook, called once when virtual time runs out.
+        Default: nothing pending."""
+
 
 class AsyncFedEDServer(AsyncServer):
     """Algorithm 1: Euclidean-distance staleness + adaptive eta_g and K.
@@ -258,6 +268,11 @@ class AsyncFedEDServer(AsyncServer):
             self._register(upd.client_id)
         return [ServerReply(self.params, self.t, k) for k in k_nexts]
 
+    def batch_limit(self) -> Optional[int]:
+        if self.backend == "pallas" and self.gmis_mode == "ring":
+            return ops.fedagg.batched_b_max()
+        return None
+
 
 class FedAsyncServer(AsyncServer):
     """FedAsync (Xie et al. [43]): x <- (1-a) x + a x_local, with constant
@@ -311,20 +326,31 @@ class FedBuffServer(AsyncServer):
     def on_connect(self, client_id: int) -> ServerReply:
         return ServerReply(self.params, self.t, self.fed.k_initial)
 
+    def _flush(self, client_id: int, k_used: int) -> None:
+        scale = self.fed.lam / len(self.buffer)
+        mean = self.buffer[0]
+        for d in self.buffer[1:]:
+            mean = pt.tree_add(mean, d)
+        self.params = pt.tree_axpy(scale, mean, self.params)
+        self.buffer = []
+        self.t += 1
+        self.history.append(UpdateRecord(
+            self.t, client_id, 0, float("nan"), scale, k_used,
+            self.fed.k_initial, float("nan"), float("nan")))
+
     def on_update(self, upd: ClientUpdate) -> ServerReply:
         self.buffer.append(upd.delta)
         if len(self.buffer) >= self.fed.fedbuff_size:
-            mean = self.buffer[0]
-            for d in self.buffer[1:]:
-                mean = pt.tree_add(mean, d)
-            scale = self.fed.lam / len(self.buffer)
-            self.params = pt.tree_axpy(scale, mean, self.params)
-            self.buffer = []
-            self.t += 1
-            self.history.append(UpdateRecord(
-                self.t, upd.client_id, 0, float("nan"), scale, upd.k_used,
-                self.fed.k_initial, float("nan"), float("nan")))
+            self._flush(upd.client_id, upd.k_used)
         return ServerReply(self.params, self.t, self.fed.k_initial)
+
+    def finalize(self, now: float) -> None:
+        """Flush a partially filled buffer at end of run — scaled by the
+        actual buffer size, like any flush — instead of silently dropping
+        up to ``fedbuff_size - 1`` finished client rounds. Recorded in
+        ``history`` with client_id -1 (no single contributing client)."""
+        if self.buffer:
+            self._flush(-1, 0)
 
 
 class SyncServer:
@@ -356,6 +382,10 @@ class SyncServer:
             self.t, -1, 0, 0.0, 1.0, updates[0].k_used,
             self.fed.k_initial, 0.0, 0.0))
         return ServerReply(self.params, self.t, self.fed.k_initial)
+
+    def finalize(self, now: float) -> None:
+        """Runtime end-of-run hook; synchronous rounds leave nothing
+        pending."""
 
 
 def make_server(name: str, params: PyTree, fed: FedConfig, **kw):

@@ -1,17 +1,28 @@
-"""Discrete-event simulator of the paper's training environment (§B.2).
+"""Layered discrete-event simulation of federated training (DESIGN.md §9).
 
-Reproduces, with a deterministic virtual clock:
-* device heterogeneity — per-client local-step durations (lognormal spread);
-* transmission time  = model_bytes / speed * coefficient, coefficient ~ N(1, 0.2)
-  truncated at 0.1 (paper's TCP/IP model);
-* client suspension — each round a client hangs with probability P for a
-  random time w.r.t. the maximum running time;
-* asynchronous arrivals (every aggregator sees the same event trace for a
-  given seed, so curves are comparable across algorithms);
-* burst-arrival batching (beyond paper, DESIGN.md §4.3) — with
-  ``batch_window > 0`` all updates landing within the window of the first
-  one drain through ``server.on_update_batch`` in one multi-delta sweep;
-  ``batch_window = 0`` preserves one-aggregation-per-arrival exactly.
+Three layers, composed here:
+
+* **event runtime** (repro.core.events) — virtual clock, typed arrival
+  events, the burst-drain loop, and the batch-window policies (fixed or
+  the ``"auto"`` inter-arrival-density controller);
+* **client behavior** (repro.core.behavior) — *when* updates land:
+  ``paper`` reproduces the paper's §B.2 environment exactly (lognormal
+  device heterogeneity, TCP transmission, random suspension), ``trace`` /
+  ``poisson-burst`` / ``diurnal`` open other worlds, all with churn and
+  dropout knobs;
+* **protocol** (repro.core.server / client / cohort) — what an arrival
+  does: aggregation through either server backend, local training through
+  any client engine.
+
+Every aggregator sees the same event trace for a given seed and behavior,
+so curves are comparable across algorithms. Burst-arrival batching
+(DESIGN.md §4.3): with a positive (or auto-opened) window, all updates
+landing within the window of the first one drain through
+``server.on_update_batch`` in one multi-delta sweep; ``batch_window = 0``
+preserves one-aggregation-per-arrival exactly. Under the ``paper`` model
+with a fixed window the runtime is byte-identical — RNG draw order, event
+trace, batcher PCG64 states — to the pre-refactor monolithic loop
+(pinned by tests/test_event_runtime.py).
 
 Synchronous baselines (FedAvg/FedProx) run the same clients but the round
 duration is the max over clients — the straggler effect the paper targets.
@@ -19,17 +30,18 @@ duration is the max over clients — the straggler effect the paper targets.
 from __future__ import annotations
 
 import dataclasses
-import heapq
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import FedConfig
 from repro.configs.paper_tasks import PaperTaskConfig
 from repro.core import cohort
+from repro.core.behavior import make_behavior
 from repro.core.client import Client
+from repro.core.events import (EventLoop, VirtualClock,
+                               make_window_controller)
 from repro.core.server import ClientUpdate, ServerReply, make_server
 from repro.data.pipeline import load_task_datasets
 from repro.models import small
@@ -52,6 +64,9 @@ class SimResult:
     points: List[EvalPoint]
     history: list
     total_updates: int
+    #: server drain calls (== aggregations for window 0; < total_updates
+    #: when burst windows batch arrivals; == rounds for sync servers)
+    total_drains: int = 0
 
     def max_accuracy(self, within_time: Optional[float] = None) -> float:
         pts = [p for p in self.points
@@ -64,24 +79,42 @@ class SimResult:
                 return p.time
         return float("inf")
 
+    def summary(self) -> dict:
+        """The scalar row every benchmark driver reports."""
+        return {
+            "algorithm": self.algorithm,
+            "final_acc": float(self.points[-1].accuracy),
+            "max_acc": float(self.max_accuracy()),
+            "t90": float(self.time_to_accuracy(0.9 * self.max_accuracy())),
+            "updates": self.total_updates,
+            "drains": self.total_drains,
+        }
+
+    def to_json(self) -> dict:
+        """JSON-serializable record: the summary plus the accuracy curve
+        (used by benchmarks/common.summarize_runs — drivers should not
+        re-implement this)."""
+        out = self.summary()
+        out["curve"] = [(p.time, p.accuracy) for p in self.points]
+        return out
+
 
 class FederatedSimulation:
-    BASE_STEP_TIME = 0.05          # seconds per local SGD step, nominal client
-    HANG_SCALE = 30.0              # max hang ~ U(0, HANG_SCALE * step_time * K)
-
     def __init__(self, task: PaperTaskConfig, fed: FedConfig,
                  algorithm: str = "asyncfeded", seed: int = 0,
                  heterogeneity: float = 0.6,
                  server_kwargs: Optional[dict] = None,
-                 batch_window: Optional[float] = None):
+                 batch_window: Optional[Any] = None,
+                 behavior: Optional[str] = None,
+                 behavior_kwargs: Optional[dict] = None):
         self.task = task
         self.fed = fed
         # engine-name validation lives in FedConfig.__post_init__ — a bad
         # name can't reach this constructor
         self.algorithm = algorithm
+        # a float or "auto"; resolved to a window controller per run
         self.batch_window = (fed.batch_window if batch_window is None
                              else batch_window)
-        self.rng = np.random.default_rng(seed + 99_991)
         train_sets, (tx, ty) = load_task_datasets(task, seed=seed)
         self.test_x, self.test_y = jnp.asarray(tx), jnp.asarray(ty)
         params = small.init_task_model(jax.random.PRNGKey(seed), task)
@@ -94,29 +127,23 @@ class FederatedSimulation:
         self.server = make_server(algorithm, params, fed, **kw)
         self.clients = [Client(i, task, train_sets[i], fed, seed=seed)
                         for i in range(fed.num_clients)]
-        # heterogeneity: per-client step time, fixed for the run
-        self.step_time = (self.BASE_STEP_TIME
-                          * self.rng.lognormal(0.0, heterogeneity,
-                                               fed.num_clients))
+        # arrival dynamics: the behavior model owns the timing RNG and the
+        # per-client device speeds (behavior-name validation lives in
+        # FedConfig.__post_init__; kwargs: config tuple < explicit dict)
+        bkw = dict(fed.behavior_params)
+        bkw.setdefault("churn_prob", fed.churn_prob)
+        bkw.setdefault("dropout_prob", fed.dropout_prob)
+        bkw.update(behavior_kwargs or {})
+        self.behavior = make_behavior(
+            behavior or fed.client_behavior, fed, seed=seed,
+            model_bytes=self.model_bytes, heterogeneity=heterogeneity, **bkw)
         self._eval = jax.jit(lambda p: (
             small.task_accuracy(task, p, (self.test_x, self.test_y)),
             small.task_loss(task, p, (self.test_x, self.test_y))))
         self.prox_mu = fed.fedprox_mu if algorithm == "fedprox" else 0.0
-
-    # ------------------------------------------------------------- timing --
-    def _tx_time(self) -> float:
-        coef = max(0.1, self.rng.normal(1.0, 0.2))
-        return self.model_bytes / (self.fed.transmission_mbps * 1e6 / 8) * coef
-
-    def _hang_time(self, k: int) -> float:
-        if self.rng.random() < self.fed.suspension_prob:
-            return self.rng.uniform(
-                0.0, self.HANG_SCALE * self.BASE_STEP_TIME * k)
-        return 0.0
-
-    def _round_duration(self, cid: int, k: int) -> float:
-        return (self._hang_time(k) + k * self.step_time[cid]
-                + self._tx_time())
+        #: the last run's window controller (events.WindowController) —
+        #: benchmarks read its .stats() for the autotune telemetry
+        self.window_controller = None
 
     # --------------------------------------------------------------- eval --
     def _eval_point(self, time: float) -> EvalPoint:
@@ -150,6 +177,19 @@ class FederatedSimulation:
         return [c.run_local(r.params, r.k_next, r.iteration, self.prox_mu)[0]
                 for c, r in jobs]
 
+    def _dispatch(self, loop: EventLoop, now: float,
+                  jobs: List[Tuple[Client, ServerReply]]) -> int:
+        """Train a fan-out (one cohort job), then arm one arrival per
+        client. Behavior draws happen after training, in job order, so the
+        event trace is engine-independent. Returns the number of updates
+        dispatched (dropped-out clients still count — their aggregation
+        happened; they just never come back)."""
+        for (c, reply), upd in zip(jobs, self._run_locals(jobs)):
+            delay = self.behavior.dispatch(c.client_id, reply.k_next, now)
+            if delay is not None:
+                loop.queue.push(now + delay, c.client_id, upd)
+        return len(jobs)
+
     # ---------------------------------------------------------------- run --
     def run(self, max_time: float = 300.0, eval_every: int = 5) -> SimResult:
         if self.server.is_async:
@@ -158,89 +198,84 @@ class FederatedSimulation:
 
     def _run_async(self, max_time: float, eval_every: int) -> SimResult:
         points = [self._eval_point(0.0)]
-        heap: List[Tuple[float, int, int, ClientUpdate]] = []
-        seq = 0
+        self.window_controller = make_window_controller(
+            self.batch_window, batch_limit=self.server.batch_limit())
+        loop = EventLoop(self.window_controller, max_time)
         # initial seeding: every client fans out at once -> one cohort job
-        # (sim-RNG draws happen after training, in the same per-client
-        # order, so the event trace is independent of the engine)
-        jobs = [(c, self.server.on_connect(c.client_id))
-                for c in self.clients]
-        for (c, reply), upd in zip(jobs, self._run_locals(jobs)):
-            dur = self._tx_time() + self._round_duration(c.client_id,
-                                                         reply.k_next)
-            heapq.heappush(heap, (dur, seq, c.client_id, upd))
-            seq += 1
+        self._dispatch(loop, 0.0, [(c, self.server.on_connect(c.client_id))
+                                   for c in self.clients])
         updates = 0
-        window = self.batch_window
-        while heap:
-            now, _, cid, upd = heapq.heappop(heap)
-            if now > max_time:
-                break
-            if window > 0:
-                # Burst drain: everything landing within `window` of this
-                # arrival is aggregated in one batched server call; the
-                # clock advances to the last drained arrival and every
-                # drained client resumes from the window's final model.
-                batch = [(cid, upd)]
-                horizon = min(now + window, max_time)
-                while heap and heap[0][0] <= horizon:
-                    now, _, cid2, upd2 = heapq.heappop(heap)
-                    batch.append((cid2, upd2))
-                replies = self.server.on_update_batch([u for _, u in batch])
-                # one eval per drained batch even when it spans several
-                # eval_every boundaries — params and clock are identical
-                # for every update in the window
-                if updates // eval_every != (updates + len(batch)) // eval_every:
-                    points.append(self._eval_point(now))
-                # burst re-dispatch: every drained client resumes at once
-                # from the window's final model -> one cohort job
-                jobs = [(self.clients[bcid], reply)
-                        for (bcid, _), reply in zip(batch, replies)]
-                for (c, reply), nxt in zip(jobs, self._run_locals(jobs)):
-                    updates += 1
-                    dur = self._tx_time() + self._round_duration(
-                        c.client_id, reply.k_next)
-                    heapq.heappush(heap, (now + dur, seq, c.client_id, nxt))
-                    seq += 1
-                continue
-            reply = self.server.on_update(upd)
-            updates += 1
-            if updates % eval_every == 0:
+
+        def handle(now: float, batch) -> None:
+            nonlocal updates
+            # one aggregation sweep per drained batch (a batch of one is
+            # exactly on_update) ...
+            replies = self.server.on_update_batch(
+                [ev.payload for ev in batch])
+            # ... one eval per drained batch even when it spans several
+            # eval_every boundaries — params and clock are identical for
+            # every update in the window
+            if updates // eval_every != (updates + len(batch)) // eval_every:
                 points.append(self._eval_point(now))
-            c = self.clients[cid]
-            nxt, _ = c.run_local(reply.params, reply.k_next, reply.iteration,
-                                 self.prox_mu)
-            dur = self._tx_time() + self._round_duration(cid, reply.k_next)
-            heapq.heappush(heap, (now + dur, seq, cid, nxt))
-            seq += 1
-        points.append(self._eval_point(min(now, max_time)))
-        return SimResult(self.algorithm, points, self.server.history, updates)
+            # re-dispatch: every drained client resumes at once from the
+            # window's final model -> one cohort job
+            updates += self._dispatch(
+                loop, now, [(self.clients[ev.client_id], reply)
+                            for ev, reply in zip(batch, replies)])
+
+        end = loop.run(handle)
+        self.server.finalize(end)      # e.g. FedBuff flushes a partial buffer
+        points.append(self._eval_point(end))
+        return SimResult(self.algorithm, points, self.server.history,
+                         updates, loop.drains)
 
     def _run_sync(self, max_time: float, eval_every: int) -> SimResult:
         points = [self._eval_point(0.0)]
-        now = 0.0
+        clock = VirtualClock()
+        roster = list(self.clients)
         rounds = 0
-        while now < max_time:
+        while clock.now < max_time and roster:
             reply0 = self.server.on_connect(0)
-            # synchronous round: the whole client set is one cohort job
-            updates = self._run_locals([(c, reply0) for c in self.clients])
-            durations = [self._tx_time()
-                         + self._round_duration(c.client_id, reply0.k_next)
-                         for c in self.clients]
-            now += max(durations)          # straggler-bound round time
+            # synchronous round: the whole (surviving) client set is one
+            # cohort job
+            updates = self._run_locals([(c, reply0) for c in roster])
+            durations = [self.behavior.dispatch(c.client_id, reply0.k_next,
+                                                clock.now)
+                         for c in roster]
+            # dropout permanence matches the async loop: a dropped client's
+            # update still aggregates (it uploaded, then left) but it never
+            # joins another round — and never bounds another round's
+            # straggler max
+            roster = [c for c, d in zip(roster, durations) if d is not None]
+            live = [d for d in durations if d is not None]
+            if not live:                   # every client dropped out
+                break
+            clock.advance(max(live))       # straggler-bound round time
             self.server.round(updates)
             rounds += 1
-            if rounds % max(1, eval_every // 2) == 0 or now >= max_time:
-                points.append(self._eval_point(min(now, max_time)))
-        return SimResult(self.algorithm, points, self.server.history, rounds)
+            if rounds % max(1, eval_every // 2) == 0 or clock.now >= max_time:
+                points.append(self._eval_point(min(clock.now, max_time)))
+        self.server.finalize(min(clock.now, max_time))
+        return SimResult(self.algorithm, points, self.server.history,
+                         rounds, rounds)
 
 
 def run_comparison(task: PaperTaskConfig, algorithms: List[str],
                    fed: Optional[FedConfig] = None, max_time: float = 300.0,
                    seeds: Tuple[int, ...] = (0,), eval_every: int = 5,
-                   suspension_prob: Optional[float] = None
+                   suspension_prob: Optional[float] = None, *,
+                   heterogeneity: float = 0.6,
+                   server_kwargs: Optional[dict] = None,
+                   batch_window: Optional[Any] = None,
+                   behavior_kwargs: Optional[dict] = None
                    ) -> Dict[str, List[SimResult]]:
-    """Fig. 2/3 driver: same task + clients + clock across algorithms."""
+    """Fig. 2/3 driver: same task + clients + clock across algorithms.
+
+    ``heterogeneity``, ``server_kwargs`` (e.g. ``{"backend": "pallas"}``),
+    ``batch_window`` (a float or ``"auto"``), and ``behavior_kwargs`` are
+    threaded straight into every :class:`FederatedSimulation`, so drivers
+    can compare backends/engines/windows without hand-rolling the loop.
+    """
     fed = fed or task.fed
     if suspension_prob is not None:
         fed = dataclasses.replace(fed, suspension_prob=suspension_prob)
@@ -248,7 +283,10 @@ def run_comparison(task: PaperTaskConfig, algorithms: List[str],
     for alg in algorithms:
         runs = []
         for seed in seeds:
-            sim = FederatedSimulation(task, fed, algorithm=alg, seed=seed)
+            sim = FederatedSimulation(
+                task, fed, algorithm=alg, seed=seed,
+                heterogeneity=heterogeneity, server_kwargs=server_kwargs,
+                batch_window=batch_window, behavior_kwargs=behavior_kwargs)
             runs.append(sim.run(max_time=max_time, eval_every=eval_every))
         out[alg] = runs
     return out

@@ -37,6 +37,15 @@ def _f32(x: jax.Array) -> jax.Array:
 _VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 
 
+def batched_b_max() -> int:
+    """Largest batch B for which the multi-delta kernels keep the full
+    BLOCK_ROWS tile per grid step — the knee of the B-dependent VMEM row
+    schedule below. Beyond it ``_batched_rows`` starts halving rows, so a
+    bigger burst buys fewer steps per delta but more steps overall; the
+    auto-window controller targets this as its free-batch ceiling."""
+    return (_VMEM_BUDGET_BYTES // (BLOCK_ROWS * LANES * 4) - 1) // 2
+
+
 def _batched_rows(b: int, n: int, interpret: bool) -> int:
     """Rows per grid step for the multi-delta kernels.
 

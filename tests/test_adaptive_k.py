@@ -1,0 +1,67 @@
+"""AdaptiveK controller edge cases (Eq. 8): clamping at k_min/k_max,
+negative steps, floor semantics, and per-client state isolation."""
+import math
+
+from repro.core.adaptive_k import AdaptiveK, update_k
+
+
+class TestUpdateK:
+    def test_negative_step_when_staler_than_setpoint(self):
+        # gamma > gamma_bar -> floor((gamma_bar - gamma) * kappa) < 0
+        assert update_k(10, gamma=5.0, gamma_bar=3.0, kappa=1.0) == 8
+
+    def test_positive_step_when_fresher_than_setpoint(self):
+        assert update_k(10, gamma=1.0, gamma_bar=3.0, kappa=1.0) == 12
+
+    def test_floor_is_floor_not_trunc(self):
+        # (3.0 - 3.5) * 1.0 = -0.5: floor -> -1 (trunc would give 0)
+        assert update_k(10, gamma=3.5, gamma_bar=3.0, kappa=1.0) == 9
+        assert math.floor(-0.5) == -1
+
+    def test_k_min_saturation(self):
+        assert update_k(2, gamma=100.0, gamma_bar=3.0, kappa=1.0,
+                        k_min=1, k_max=64) == 1
+        # already at the floor: a huge negative step stays clamped
+        assert update_k(1, gamma=100.0, gamma_bar=3.0, kappa=5.0,
+                        k_min=1, k_max=64) == 1
+
+    def test_k_max_saturation(self):
+        assert update_k(60, gamma=0.0, gamma_bar=10.0, kappa=1.0,
+                        k_min=1, k_max=64) == 64
+        assert update_k(64, gamma=0.0, gamma_bar=10.0, kappa=1.0,
+                        k_min=1, k_max=64) == 64
+
+    def test_kappa_zero_disables_controller(self):
+        for gamma in (0.0, 3.0, 50.0):
+            assert update_k(10, gamma, gamma_bar=3.0, kappa=0.0) == 10
+
+
+class TestAdaptiveK:
+    def test_unseen_client_gets_k_initial(self):
+        ctl = AdaptiveK(10, gamma_bar=3.0, kappa=1.0, k_min=1, k_max=64)
+        assert ctl.get("a") == 10
+
+    def test_observe_integrates_per_client(self):
+        ctl = AdaptiveK(10, gamma_bar=3.0, kappa=1.0, k_min=1, k_max=64)
+        assert ctl.observe("a", 1.0) == 12         # +floor(2.0)
+        assert ctl.observe("a", 5.0) == 10         # -floor(2.0)
+        assert ctl.get("b") == 10                  # b untouched by a's path
+
+    def test_saturates_at_k_min_under_persistent_staleness(self):
+        ctl = AdaptiveK(10, gamma_bar=3.0, kappa=2.0, k_min=2, k_max=64)
+        for _ in range(20):
+            k = ctl.observe("slow", 50.0)
+        assert k == 2 and ctl.get("slow") == 2
+
+    def test_saturates_at_k_max_under_persistent_freshness(self):
+        ctl = AdaptiveK(10, gamma_bar=8.0, kappa=3.0, k_min=1, k_max=24)
+        for _ in range(20):
+            k = ctl.observe("fast", 0.0)
+        assert k == 24 and ctl.get("fast") == 24
+
+    def test_recovers_from_saturation(self):
+        ctl = AdaptiveK(10, gamma_bar=3.0, kappa=1.0, k_min=1, k_max=64)
+        for _ in range(20):
+            ctl.observe("c", 50.0)                 # pin at k_min
+        assert ctl.get("c") == 1
+        assert ctl.observe("c", 0.0) == 4          # +floor(3.0): climbs back

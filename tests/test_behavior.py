@@ -1,0 +1,179 @@
+"""Client-behavior models (repro.core.behavior): registry, determinism,
+churn/dropout knobs, and the end-to-end arrival-dynamics scenarios
+including auto-window draining on the burst scenario."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import CLIENT_BEHAVIORS, FedConfig
+from repro.core import behavior as bh
+from repro.core.simulator import FederatedSimulation, run_comparison
+
+
+FED = configs.SYNTHETIC_1_1.fed
+
+
+def make(name, fed=FED, seed=0, **kw):
+    return bh.make_behavior(name, fed, seed=seed, model_bytes=100_000, **kw)
+
+
+class TestRegistry:
+    def test_config_tuple_mirrors_registry(self):
+        assert set(CLIENT_BEHAVIORS) == set(bh.BEHAVIORS)
+
+    def test_unknown_name_fails_fast_in_config(self):
+        with pytest.raises(ValueError, match="client_behavior"):
+            dataclasses.replace(FED, client_behavior="markov")
+
+    def test_unknown_name_fails_in_factory(self):
+        with pytest.raises(ValueError, match="client_behavior"):
+            make("markov")
+
+    def test_bad_batch_window_rejected(self):
+        with pytest.raises(ValueError, match="batch_window"):
+            dataclasses.replace(FED, batch_window="adaptive")
+        with pytest.raises(ValueError, match="batch_window"):
+            dataclasses.replace(FED, batch_window=-0.1)
+        dataclasses.replace(FED, batch_window="auto")   # valid
+
+
+class TestDeterminismAndKnobs:
+    @pytest.mark.parametrize("name", sorted(bh.BEHAVIORS))
+    def test_same_seed_same_durations(self, name):
+        a, b = make(name, seed=7), make(name, seed=7)
+        da = [a.dispatch(i % FED.num_clients, 5, float(i)) for i in range(20)]
+        db = [b.dispatch(i % FED.num_clients, 5, float(i)) for i in range(20)]
+        assert da == db
+        assert all(d is None or d > 0 for d in da)
+
+    def test_default_knobs_make_no_extra_draws(self):
+        # churn/dropout at 0 must leave the generator stream untouched —
+        # the paper model's byte-equivalence depends on it
+        a = make("paper")
+        b = make("paper")
+        b.churn_prob = b.dropout_prob = 0.0
+        for i in range(10):
+            assert a.dispatch(i % FED.num_clients, 5, 0.0) == \
+                b.dispatch(i % FED.num_clients, 5, 0.0)
+        assert a.rng.bit_generator.state == b.rng.bit_generator.state
+
+    def test_dropout_eventually_drops(self):
+        m = make("paper", dropout_prob=0.5)
+        outs = [m.dispatch(0, 5, 0.0) for _ in range(40)]
+        assert any(o is None for o in outs)
+
+    def test_churn_adds_delay_on_average(self):
+        base = make("paper", seed=11)
+        churny = make("paper", seed=11, churn_prob=1.0, churn_scale=100.0)
+        d0 = np.mean([base.dispatch(0, 5, 0.0) for _ in range(30)])
+        d1 = np.mean([churny.dispatch(0, 5, 0.0) for _ in range(30)])
+        assert d1 > d0
+
+    def test_trace_replays_cyclically_and_ignores_k(self):
+        m = make("trace", trace=[1.0, 2.0, 3.0])
+        assert [m.duration(0, 5, 0.0) for _ in range(4)] == \
+            [1.0, 2.0, 3.0, 1.0]
+        # per-client counters are independent
+        assert m.duration(1, 99, 0.0) == 1.0
+
+    def test_trace_synthesized_when_absent(self):
+        m = make("trace", seed=3)
+        first = [m.duration(c, 5, 0.0) for c in range(FED.num_clients)]
+        again = make("trace", seed=3)
+        assert first == [again.duration(c, 5, 0.0)
+                         for c in range(FED.num_clients)]
+
+    def test_poisson_burst_clusters_arrivals(self):
+        m = make("poisson-burst", seed=5, burst_gap=5.0, jitter=1e-4)
+        arrivals = sorted(m.dispatch(c, 2, 0.0)
+                          for c in range(FED.num_clients))
+        gaps = np.diff(arrivals)
+        # most gaps are intra-cluster (tiny) with at least one large
+        # inter-burst gap — the clustering the window controller exploits
+        assert np.median(gaps) < 0.01
+
+    def test_diurnal_peak_faster_than_trough(self):
+        m = make("diurnal", seed=2, period=20.0, amplitude=0.8)
+        assert m.rate(5.0) > 1.5 and m.rate(15.0) < 0.5
+        fed0 = dataclasses.replace(FED, suspension_prob=0.0)
+        m = make("diurnal", fed=fed0, seed=2, period=20.0, amplitude=0.8)
+        peak = np.mean([m.duration(0, 10, 5.0) for _ in range(20)])
+        trough = np.mean([m.duration(0, 10, 15.0) for _ in range(20)])
+        assert peak < trough
+
+
+class TestBehaviorSimulations:
+    """Every model drives a full simulation and still learns."""
+
+    @pytest.mark.parametrize("name", ["trace", "poisson-burst", "diurnal"])
+    def test_model_runs_and_learns(self, name):
+        fed = dataclasses.replace(FED, client_behavior=name)
+        res = FederatedSimulation(configs.SYNTHETIC_1_1, fed, "asyncfeded",
+                                  seed=0).run(max_time=4.0)
+        assert res.total_updates > 5
+        assert res.max_accuracy() > 0.5
+
+    def test_dropout_shrinks_participation(self):
+        fed = dataclasses.replace(FED, dropout_prob=0.5)
+        res = FederatedSimulation(configs.SYNTHETIC_1_1, fed, "asyncfeded",
+                                  seed=0).run(max_time=4.0)
+        # with heavy dropout the run dies early: every client eventually
+        # leaves and the queue drains empty
+        base = FederatedSimulation(configs.SYNTHETIC_1_1, FED, "asyncfeded",
+                                   seed=0).run(max_time=4.0)
+        assert res.total_updates < base.total_updates
+
+    def test_burst_scenario_auto_window_batches(self):
+        """The acceptance row: on the burst scenario the auto window drains
+        fewer times than one-per-arrival at comparable accuracy."""
+        task = configs.SYNTHETIC_BURST
+        fed = dataclasses.replace(task.fed, num_clients=8)
+        task = dataclasses.replace(task, num_clients=8, fed=fed,
+                                   samples_per_client=32)
+        auto = FederatedSimulation(task, fed, "asyncfeded", seed=1)
+        r_auto = auto.run(max_time=8.0)
+        r_fix = FederatedSimulation(task, fed, "asyncfeded", seed=1,
+                                    batch_window=0.0).run(max_time=8.0)
+        assert r_auto.total_drains < r_auto.total_updates
+        assert r_fix.total_drains == r_fix.total_updates
+        assert auto.window_controller.stats()["opened"] > 0
+        assert abs(r_auto.max_accuracy() - r_fix.max_accuracy()) < 0.1
+
+    def test_scenarios_registered(self):
+        for name in ("synthetic-burst", "synthetic-diurnal",
+                     "synthetic-trace"):
+            assert name in configs.SCENARIOS
+
+    def test_run_comparison_threads_runtime_knobs(self):
+        """server_kwargs/batch_window/heterogeneity reach every sim, so
+        drivers can compare backends/windows without hand-rolling the
+        loop."""
+        res = run_comparison(
+            configs.SYNTHETIC_1_1, ["asyncfeded"], fed=FED, max_time=2.0,
+            server_kwargs={"backend": "pallas"}, batch_window=0.05,
+            heterogeneity=0.1)
+        r = res["asyncfeded"][0]
+        assert r.total_updates > 0
+        # a positive window on the pallas backend batches at least once in
+        # a 10-client burst-seeded run
+        assert r.total_drains <= r.total_updates
+        base = run_comparison(configs.SYNTHETIC_1_1, ["asyncfeded"],
+                              fed=FED, max_time=2.0, heterogeneity=0.1)
+        # low heterogeneity: both runs share the event-density regime but
+        # backends/windows differ per the threaded kwargs
+        assert base["asyncfeded"][0].total_drains == \
+            base["asyncfeded"][0].total_updates
+
+    def test_behavior_params_flow_from_config(self):
+        fed = dataclasses.replace(
+            FED, client_behavior="poisson-burst",
+            behavior_params=(("burst_gap", 2.5),))
+        sim = FederatedSimulation(configs.SYNTHETIC_1_1, fed, "asyncfeded")
+        assert sim.behavior.name == "poisson-burst"
+        assert sim.behavior.burst_gap == 2.5
+        # explicit kwargs override the config tuple
+        sim2 = FederatedSimulation(configs.SYNTHETIC_1_1, fed, "asyncfeded",
+                                   behavior_kwargs={"burst_gap": 9.0})
+        assert sim2.behavior.burst_gap == 9.0

@@ -1,0 +1,211 @@
+"""The layered event runtime is invisible under the paper model.
+
+``FederatedSimulation`` was refactored from one monolithic loop into the
+event runtime (repro.core.events) + client-behavior models
+(repro.core.behavior). The load-bearing invariant: under the ``paper``
+behavior model with a fixed window, the refactor reproduces the
+pre-refactor simulator *byte-for-byte* — RNG draw order (timing generator
+AND every client's PCG64 batcher state), the event trace
+``(iteration, client_id, lag, k_next)``, and the eval curve — on both
+server backends and every client engine.
+
+:class:`LegacySimulation` below is a frozen verbatim copy of the
+pre-refactor ``_run_async``/``_run_sync`` and §B.2 timing draws (PR 3
+state of repro/core/simulator.py), driving the same client/server/engine
+stack. Do not "modernize" it — its whole value is staying what the code
+used to be.
+"""
+import dataclasses
+import heapq
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.simulator import FederatedSimulation, SimResult
+from conftest import MULTIDEVICE_COUNT, multidevice_subprocess_env
+
+BASE_STEP_TIME = 0.05
+HANG_SCALE = 30.0
+
+
+class LegacySimulation(FederatedSimulation):
+    """Pre-refactor monolithic loop over the refactored construction: the
+    same clients/servers/engines, but timing draws and the drain loop are
+    the frozen originals (own generator, seeded exactly like the old
+    ``FederatedSimulation.rng``)."""
+
+    def __init__(self, task, fed, algorithm="asyncfeded", seed=0,
+                 heterogeneity=0.6, batch_window=None):
+        super().__init__(task, fed, algorithm, seed=seed,
+                         heterogeneity=heterogeneity,
+                         batch_window=batch_window)
+        self.rng = np.random.default_rng(seed + 99_991)
+        self.step_time = (BASE_STEP_TIME
+                          * self.rng.lognormal(0.0, heterogeneity,
+                                               fed.num_clients))
+
+    # --- frozen §B.2 timing (pre-refactor methods, verbatim) --------------
+    def _tx_time(self):
+        coef = max(0.1, self.rng.normal(1.0, 0.2))
+        return self.model_bytes / (self.fed.transmission_mbps * 1e6 / 8) * coef
+
+    def _hang_time(self, k):
+        if self.rng.random() < self.fed.suspension_prob:
+            return self.rng.uniform(0.0, HANG_SCALE * BASE_STEP_TIME * k)
+        return 0.0
+
+    def _round_duration(self, cid, k):
+        return (self._hang_time(k) + k * self.step_time[cid]
+                + self._tx_time())
+
+    # --- frozen drain loops (pre-refactor _run_async/_run_sync, verbatim) --
+    def _run_async(self, max_time, eval_every):
+        points = [self._eval_point(0.0)]
+        heap = []
+        seq = 0
+        jobs = [(c, self.server.on_connect(c.client_id))
+                for c in self.clients]
+        for (c, reply), upd in zip(jobs, self._run_locals(jobs)):
+            dur = self._tx_time() + self._round_duration(c.client_id,
+                                                         reply.k_next)
+            heapq.heappush(heap, (dur, seq, c.client_id, upd))
+            seq += 1
+        updates = 0
+        window = self.batch_window
+        while heap:
+            now, _, cid, upd = heapq.heappop(heap)
+            if now > max_time:
+                break
+            if window > 0:
+                batch = [(cid, upd)]
+                horizon = min(now + window, max_time)
+                while heap and heap[0][0] <= horizon:
+                    now, _, cid2, upd2 = heapq.heappop(heap)
+                    batch.append((cid2, upd2))
+                replies = self.server.on_update_batch([u for _, u in batch])
+                if updates // eval_every != (updates + len(batch)) // eval_every:
+                    points.append(self._eval_point(now))
+                jobs = [(self.clients[bcid], reply)
+                        for (bcid, _), reply in zip(batch, replies)]
+                for (c, reply), nxt in zip(jobs, self._run_locals(jobs)):
+                    updates += 1
+                    dur = self._tx_time() + self._round_duration(
+                        c.client_id, reply.k_next)
+                    heapq.heappush(heap, (now + dur, seq, c.client_id, nxt))
+                    seq += 1
+                continue
+            reply = self.server.on_update(upd)
+            updates += 1
+            if updates % eval_every == 0:
+                points.append(self._eval_point(now))
+            c = self.clients[cid]
+            nxt, _ = c.run_local(reply.params, reply.k_next, reply.iteration,
+                                 self.prox_mu)
+            dur = self._tx_time() + self._round_duration(cid, reply.k_next)
+            heapq.heappush(heap, (now + dur, seq, cid, nxt))
+            seq += 1
+        points.append(self._eval_point(min(now, max_time)))
+        return SimResult(self.algorithm, points, self.server.history, updates)
+
+    def _run_sync(self, max_time, eval_every):
+        points = [self._eval_point(0.0)]
+        now = 0.0
+        rounds = 0
+        while now < max_time:
+            reply0 = self.server.on_connect(0)
+            updates = self._run_locals([(c, reply0) for c in self.clients])
+            durations = [self._tx_time()
+                         + self._round_duration(c.client_id, reply0.k_next)
+                         for c in self.clients]
+            now += max(durations)
+            self.server.round(updates)
+            rounds += 1
+            if rounds % max(1, eval_every // 2) == 0 or now >= max_time:
+                points.append(self._eval_point(min(now, max_time)))
+        return SimResult(self.algorithm, points, self.server.history, rounds)
+
+
+def trace(res):
+    return [(h.iteration, h.client_id, h.lag, h.k_next) for h in res.history]
+
+
+def assert_equivalent(new_sim, new_res, old_sim, old_res):
+    """Byte-identical: event trace, eval curve, timing-RNG state, and every
+    client's PCG64 batcher state."""
+    assert new_res.total_updates == old_res.total_updates
+    assert trace(new_res) == trace(old_res)
+    # bitwise — both runs execute identical jitted computations
+    assert ([(p.time, p.iteration, p.accuracy, p.loss)
+             for p in new_res.points]
+            == [(p.time, p.iteration, p.accuracy, p.loss)
+                for p in old_res.points])
+    np.testing.assert_array_equal(new_sim.behavior.step_time,
+                                  old_sim.step_time)
+    assert (new_sim.behavior.rng.bit_generator.state
+            == old_sim.rng.bit_generator.state)
+    for a, b in zip(new_sim.clients, old_sim.clients):
+        assert (a.batcher.rng.bit_generator.state
+                == b.batcher.rng.bit_generator.state)
+
+
+def run_pair(fed, algorithm="asyncfeded", seed=3, window=None, max_time=3.0):
+    task = configs.SYNTHETIC_1_1
+    new_sim = FederatedSimulation(task, fed, algorithm, seed=seed,
+                                  batch_window=window)
+    new_res = new_sim.run(max_time=max_time)
+    old_sim = LegacySimulation(task, fed, algorithm, seed=seed,
+                               batch_window=window)
+    old_res = old_sim.run(max_time=max_time)
+    return new_sim, new_res, old_sim, old_res
+
+
+@pytest.fixture(scope="module")
+def quick_fed():
+    return dataclasses.replace(configs.SYNTHETIC_1_1.fed,
+                               suspension_prob=0.1)
+
+
+class TestPaperModelEquivalence:
+    """The refactor is invisible: paper model + fixed window == legacy."""
+
+    @pytest.mark.parametrize("backend", ["pytree", "pallas"])
+    @pytest.mark.parametrize("engine", ["loop", "cohort"])
+    @pytest.mark.parametrize("window", [0.0, 0.05])
+    def test_async_trace_and_rng_state(self, quick_fed, backend, engine,
+                                       window):
+        fed = dataclasses.replace(quick_fed, backend=backend,
+                                  client_engine=engine)
+        assert_equivalent(*run_pair(fed, window=window))
+
+    @pytest.mark.parametrize("engine", ["loop", "cohort"])
+    def test_sync_round_equivalence(self, quick_fed, engine):
+        fed = dataclasses.replace(quick_fed, client_engine=engine)
+        assert_equivalent(*run_pair(fed, algorithm="fedavg"))
+
+    def test_sharded_engine_equivalence(self, quick_fed, multidevice):
+        fed = dataclasses.replace(quick_fed, backend="pallas",
+                                  client_engine="cohort_sharded")
+        assert_equivalent(*run_pair(fed, window=0.05))
+
+    def test_config_window_used_when_arg_omitted(self, quick_fed):
+        fed = dataclasses.replace(quick_fed, batch_window=0.05)
+        assert_equivalent(*run_pair(fed, window=None))
+
+
+def test_sharded_reexec_under_8_fake_devices():
+    """Plain tier-1 runs single-device; re-run the sharded equivalence case
+    in a fresh 8-fake-device process (same pattern as
+    tests/test_cohort_sharded.py)."""
+    if jax.device_count() >= MULTIDEVICE_COUNT:
+        pytest.skip("already multi-device: the in-process test ran")
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q",
+         f"{__file__}::TestPaperModelEquivalence::"
+         "test_sharded_engine_equivalence"],
+        env=multidevice_subprocess_env(), capture_output=True, text=True,
+        timeout=1200)
+    assert proc.returncode == 0, (proc.stdout + proc.stderr)[-4000:]

@@ -1,0 +1,133 @@
+"""Unit tests for the event runtime layer (repro.core.events): queue
+ordering, window policies including the auto controller's control law, and
+the drain loop's batching semantics."""
+import pytest
+
+from repro.core.events import (AutoWindow, EventLoop, EventQueue,
+                               FixedWindow, VirtualClock,
+                               make_window_controller)
+
+
+class TestEventQueue:
+    def test_orders_by_time_then_seq(self):
+        q = EventQueue()
+        q.push(2.0, 1, "late")
+        q.push(1.0, 2, "early")
+        q.push(1.0, 3, "early-tie")
+        order = [(q.pop().client_id, q.pop().client_id, q.pop().client_id)]
+        assert order == [(2, 3, 1)]      # ties drain in push order
+
+    def test_peek_and_len(self):
+        q = EventQueue()
+        assert not q and len(q) == 0
+        q.push(5.0, 0, None)
+        assert q and len(q) == 1 and q.peek_time() == 5.0
+
+
+class TestVirtualClock:
+    def test_advance_monotonic(self):
+        c = VirtualClock()
+        assert c.advance(1.5) == 1.5
+        assert c.advance_to(1.0) == 1.5  # never moves backwards
+        assert c.advance_to(3.0) == 3.0
+
+
+class TestWindowPolicies:
+    def test_fixed(self):
+        ctl = make_window_controller(0.25)
+        assert isinstance(ctl, FixedWindow)
+        assert ctl.window() == 0.25
+        ctl.observe([1.0, 2.0])          # no-op
+        assert ctl.window() == 0.25
+
+    def test_make_rejects_unknown_string(self):
+        with pytest.raises(ValueError):
+            make_window_controller("adaptive")
+
+    def test_auto_closed_during_warmup(self):
+        ctl = AutoWindow(warmup=8)
+        ctl.observe([0.1 * i for i in range(4)])
+        assert ctl.window() == 0.0
+
+    def test_auto_stays_closed_on_regular_arrivals(self):
+        ctl = AutoWindow(warmup=8, burstiness=1.5)
+        ctl.observe([0.1 * i for i in range(100)])   # constant gaps
+        assert ctl.window() == 0.0                   # g_s == g_f: no burst
+
+    def test_auto_opens_on_burst_and_spans_target_batch(self):
+        ctl = AutoWindow(warmup=8, burstiness=1.5, target_batch=8,
+                         alpha_fast=0.5, w_max=10.0)
+        # long-run regime: 1.0s gaps; then a dense cluster of 1ms gaps
+        times = [float(i) for i in range(20)]
+        times += [20.0 + 0.001 * i for i in range(20)]
+        ctl.observe(times)
+        w = ctl.window()
+        assert w > 0.0
+        # window ~ target_batch * fast gap estimate
+        assert w == pytest.approx(8 * ctl._fast)
+        assert ctl.stats()["opened"] == 1
+
+    def test_auto_window_clamped_to_w_max(self):
+        ctl = AutoWindow(warmup=4, burstiness=1.1, target_batch=1000,
+                         w_max=0.5)
+        ctl.observe([float(i) for i in range(10)] + [9.001, 9.002, 9.003])
+        assert ctl.window() <= 0.5
+
+    def test_auto_target_clamped_to_batch_limit(self):
+        ctl = make_window_controller("auto", batch_limit=4, target_batch=64)
+        assert isinstance(ctl, AutoWindow)
+        assert ctl.target_batch == 4
+        assert make_window_controller("auto").target_batch == 8
+
+
+class TestEventLoop:
+    def _loop(self, window, max_time=100.0):
+        return EventLoop(FixedWindow(window), max_time)
+
+    def test_zero_window_singleton_batches_even_on_ties(self):
+        loop = self._loop(0.0)
+        for cid in range(3):
+            loop.queue.push(1.0, cid, f"u{cid}")
+        batches = []
+        loop.run(lambda now, b: batches.append((now, [e.client_id for e in b])))
+        assert batches == [(1.0, [0]), (1.0, [1]), (1.0, [2])]
+        assert loop.drains == 3
+
+    def test_window_drains_burst_and_advances_clock(self):
+        loop = self._loop(0.5)
+        loop.queue.push(1.0, 0, None)
+        loop.queue.push(1.4, 1, None)
+        loop.queue.push(1.45, 2, None)
+        loop.queue.push(3.0, 3, None)
+        batches = []
+        end = loop.run(lambda now, b:
+                       batches.append((now, [e.client_id for e in b])))
+        assert batches == [(1.45, [0, 1, 2]), (3.0, [3])]
+        assert loop.drains == 2 and end == 3.0
+
+    def test_max_time_cuts_run_and_clamps_return(self):
+        loop = self._loop(0.0, max_time=2.0)
+        loop.queue.push(1.0, 0, None)
+        loop.queue.push(5.0, 1, None)
+        seen = []
+        end = loop.run(lambda now, b: seen.append(b[0].client_id))
+        assert seen == [0] and end == 2.0
+
+    def test_window_horizon_clamped_to_max_time(self):
+        loop = self._loop(10.0, max_time=2.0)
+        loop.queue.push(1.0, 0, None)
+        loop.queue.push(1.5, 1, None)
+        loop.queue.push(2.5, 2, None)    # beyond max_time: not drained
+        batches = []
+        loop.run(lambda now, b: batches.append([e.client_id for e in b]))
+        assert batches == [[0, 1]]
+
+    def test_handler_rearms_loop(self):
+        loop = self._loop(0.0, max_time=10.0)
+        loop.queue.push(1.0, 0, 0)
+        def handle(now, batch):
+            n = batch[0].payload
+            if n < 3:
+                loop.queue.push(now + 1.0, 0, n + 1)
+        end = loop.run(handle)
+        assert loop.drains == 4 and end == 4.0

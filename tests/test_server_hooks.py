@@ -1,0 +1,136 @@
+"""Server runtime hooks: the ``finalize()`` end-of-run flush (FedBuff's
+partial buffer), the displacement-mode ``on_update_batch`` sequential
+fallback's snapshot re-registration, and the ``batch_limit()`` drain hook
+the auto-window controller consumes."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.server import ClientUpdate, make_server
+from repro.core.simulator import FederatedSimulation
+from repro.kernels.fedagg import fedagg
+from repro.utils import pytree as pt
+
+
+FED = dataclasses.replace(configs.SYNTHETIC_1_1.fed, fedbuff_size=4)
+
+
+def tiny_params(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (4, 3)), "b": jnp.zeros((3,))}
+
+
+def upd(cid, snapshot_iter=1, k_used=5, seed=0, scale=0.1):
+    p = tiny_params(seed + 100 + cid)
+    delta = jax.tree.map(lambda x: scale * x, p)
+    return ClientUpdate(cid, snapshot_iter, k_used, delta)
+
+
+class TestFinalize:
+    def test_fedbuff_flushes_partial_buffer(self):
+        srv = make_server("fedbuff", tiny_params(), FED)
+        before = srv.params
+        for cid in range(3):                      # fedbuff_size=4: no flush
+            srv.on_update(upd(cid))
+        assert len(srv.buffer) == 3 and srv.t == 1 and not srv.history
+        srv.finalize(now=10.0)
+        assert not srv.buffer and srv.t == 2
+        # scaled by the ACTUAL buffer size (3), like any flush
+        rec = srv.history[-1]
+        assert rec.eta == pytest.approx(FED.lam / 3)
+        assert rec.client_id == -1
+        expect = pt.tree_axpy(FED.lam / 3,
+                              pt.tree_add(pt.tree_add(upd(0).delta,
+                                                      upd(1).delta),
+                                          upd(2).delta), before)
+        for a, b in zip(jax.tree.leaves(expect), jax.tree.leaves(srv.params)):
+            np.testing.assert_allclose(a, b, rtol=1e-6)
+
+    def test_fedbuff_finalize_empty_buffer_is_noop(self):
+        srv = make_server("fedbuff", tiny_params(), FED)
+        for cid in range(4):
+            srv.on_update(upd(cid))               # exactly one full flush
+        t, hist = srv.t, list(srv.history)
+        srv.finalize(now=10.0)
+        assert srv.t == t and srv.history == hist
+
+    def test_other_servers_finalize_noop(self):
+        for name in ("asyncfeded", "fedasync+hinge", "fedavg"):
+            srv = make_server(name, tiny_params(), FED)
+            t = srv.t
+            srv.finalize(now=1.0)
+            assert srv.t == t and not srv.history
+
+    def test_runtime_calls_finalize_and_history_records_flush(self):
+        fed = dataclasses.replace(configs.SYNTHETIC_1_1.fed, fedbuff_size=64)
+        sim = FederatedSimulation(configs.SYNTHETIC_1_1, fed, "fedbuff",
+                                  seed=0)
+        res = sim.run(max_time=2.0)
+        # buffer (size 64) can never fill at 10 clients in 2 virtual
+        # seconds — without finalize the whole run would record nothing
+        assert len(res.history) == 1
+        assert res.history[-1].client_id == -1
+        assert res.points[-1].iteration == 2      # final eval sees the flush
+
+
+class TestDisplacementBatchFallback:
+    def _server(self):
+        fed = dataclasses.replace(FED, num_clients=4)
+        srv = make_server("asyncfeded-displacement", tiny_params(), fed,
+                          backend="pytree")
+        for cid in range(3):
+            srv.on_connect(cid)
+        return srv
+
+    def test_batch_reregisters_at_final_model(self):
+        srv = self._server()
+        replies = srv.on_update_batch([upd(0), upd(1)])
+        # every drained client resumes from the window's FINAL model, so
+        # its displacement accumulator must restart at zero there — not at
+        # the intermediate model on_update re-registered it at
+        for cid in (0, 1):
+            assert float(srv.gmis.distance_from(cid, srv.t, srv.params)) == 0.0
+            for leaf in jax.tree.leaves(srv.gmis.displacement(cid)):
+                np.testing.assert_array_equal(leaf, np.zeros_like(leaf))
+        # and every reply hands back the final model/iteration
+        for r in replies:
+            assert r.iteration == srv.t
+            for a, b in zip(jax.tree.leaves(r.params),
+                            jax.tree.leaves(srv.params)):
+                np.testing.assert_array_equal(a, b)
+
+    def test_batch_charges_no_phantom_drift_next_round(self):
+        """After a drain, a client's next update (built on the final model)
+        must see gamma == 0 if the server hasn't moved since."""
+        srv = self._server()
+        srv.on_update_batch([upd(0), upd(1)])
+        t = srv.t
+        srv.on_update(upd(0, snapshot_iter=t, seed=7))
+        assert srv.history[-1].dist == 0.0
+        assert srv.history[-1].gamma == 0.0
+
+    def test_uninvolved_client_keeps_accumulating(self):
+        srv = self._server()
+        srv.on_update_batch([upd(0), upd(1)])
+        # client 2 was registered before the batch and did not participate:
+        # its displacement tracks the batch's movement, nonzero
+        d2 = float(srv.gmis.distance_from(2, 1, srv.params))
+        assert d2 > 0.0
+
+
+class TestBatchLimit:
+    def test_pallas_ring_reports_kernel_knee(self):
+        srv = make_server("asyncfeded", tiny_params(), FED,
+                          backend="pallas")
+        assert srv.batch_limit() == fedagg.batched_b_max() == 15
+
+    def test_other_paths_report_none(self):
+        assert make_server("asyncfeded", tiny_params(), FED,
+                           backend="pytree").batch_limit() is None
+        assert make_server("asyncfeded-displacement", tiny_params(), FED,
+                           backend="pallas").batch_limit() is None
+        assert make_server("fedbuff", tiny_params(), FED).batch_limit() is None
