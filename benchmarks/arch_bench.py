@@ -1,0 +1,93 @@
+"""Arch-path engine bench: loop vs cohort local training of a reduced
+assigned architecture through the full event runtime (DESIGN.md §10).
+
+The unified task substrate runs `ModelConfig` architectures through the
+same `FederatedSimulation` as the paper tasks, so the cohort engine's
+dispatch amortization now applies to real transformer clients. This bench
+reports, per engine: wall time, aggregated updates, server drains, and
+the final eval loss — plus a memory-budgeted row showing the planner's
+fallback ladder in action (the plan lands in the JSON row).
+
+CLI (CI bench-smoke runs the tiny sweep):
+    python -m benchmarks.arch_bench --arch h2o-danube-1.8b --steps 6 \
+        --clients 4 --d-model 64 --seq-len 16
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+from benchmarks.common import emit, save_json
+from repro.core import tasks
+from repro.core.simulator import FederatedSimulation
+
+
+def bench_engine(task, fed, *, engine: str, steps: int, seed: int = 0,
+                 memory_budget_mb: float = 0.0) -> dict:
+    fed = dataclasses.replace(fed, client_engine=engine,
+                              memory_budget_mb=memory_budget_mb)
+    sim = FederatedSimulation(task, fed, "asyncfeded", seed=seed)
+    t0 = time.perf_counter()
+    res = sim.run(max_time=float("inf"), eval_every=max(1, steps // 2),
+                  max_updates=steps)
+    wall = time.perf_counter() - t0
+    row = {"engine": engine, "wall_s": wall, "updates": res.total_updates,
+           "drains": res.total_drains,
+           "final_eval_loss": float(res.points[-1].loss)}
+    if res.plan is not None:
+        row["plan"] = res.plan
+    return row
+
+
+def run(arch: str = "h2o-danube-1.8b", steps: int = 6, clients: int = 4,
+        k_local: int = 2, d_model: int = 64, seq_len: int = 16,
+        num_layers: int = 1, budget_mb: float = 1.0, seed: int = 0) -> dict:
+    task = tasks.arch_task(arch, seq_len=seq_len, global_batch=2,
+                           num_layers=num_layers, d_model=d_model)
+    fed = dataclasses.replace(task.fed, num_clients=clients,
+                              k_initial=k_local)
+    out = {"arch": arch, "clients": clients, "steps": steps,
+           "d_model": d_model, "seq_len": seq_len}
+    for engine in ("loop", "cohort"):
+        row = bench_engine(task, fed, engine=engine, steps=steps, seed=seed)
+        out[engine] = row
+        emit(f"arch/{arch}/{engine}", row["wall_s"] * 1e6,
+             f"updates={row['updates']};drains={row['drains']}"
+             f";loss={row['final_eval_loss']:.3f}")
+    out["speedup_cohort_vs_loop"] = (out["loop"]["wall_s"]
+                                     / max(out["cohort"]["wall_s"], 1e-9))
+    # the fallback-ladder row: a deliberately tight budget forces the
+    # planner off the full-width cohort (clamp / microbatch / loop)
+    row = bench_engine(task, fed, engine="cohort", steps=steps, seed=seed,
+                       memory_budget_mb=budget_mb)
+    out["cohort_budgeted"] = row
+    plan = row.get("plan", {})
+    emit(f"arch/{arch}/cohort@{budget_mb}MiB", row["wall_s"] * 1e6,
+         f"plan_engine={plan.get('engine')};width={plan.get('width')}"
+         f";k_chunk={plan.get('k_chunk')}")
+    path = save_json("arch_bench", out)
+    print(f"[arch_bench] wrote {path} "
+          f"(cohort speedup {out['speedup_cohort_vs_loop']:.2f}x, "
+          f"budgeted plan: {plan.get('reason', 'n/a')})")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--steps", type=int, default=6)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--k", type=int, default=2)
+    ap.add_argument("--d-model", type=int, default=64)
+    ap.add_argument("--seq-len", type=int, default=16)
+    ap.add_argument("--layers", type=int, default=1)
+    ap.add_argument("--budget-mb", type=float, default=1.0)
+    args = ap.parse_args()
+    run(arch=args.arch, steps=args.steps, clients=args.clients,
+        k_local=args.k, d_model=args.d_model, seq_len=args.seq_len,
+        num_layers=args.layers, budget_mb=args.budget_mb)
+
+
+if __name__ == "__main__":
+    main()

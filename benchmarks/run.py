@@ -11,6 +11,8 @@ artifacts/bench/.
   §Perf   -> kernel_bench.run() (fedagg aggregation variants)
   §Scale  -> client_bench.run() (cohort vs per-client-loop local training)
   §9      -> arrival_bench.run() (behavior models x drain-window policies)
+  §10     -> arch_bench.run()   (loop vs cohort on a reduced assigned arch,
+                                 plus the memory-budget fallback row)
 
 ``--quick`` shrinks virtual-time budgets for CI-style runs; ``--full``
 reproduces the paper-scale sweep (all 3 tasks, longer horizon).
@@ -28,7 +30,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: convergence,robustness,"
-                         "adaptive_k,theory,roofline,kernel,client,arrival")
+                         "adaptive_k,theory,roofline,kernel,client,arrival,"
+                         "arch")
     args = ap.parse_args()
 
     max_time = 20.0 if args.quick else (90.0 if args.full else 45.0)
@@ -69,6 +72,10 @@ def main() -> None:
         from benchmarks import arrival_bench
         arrival_bench.run(clients=8 if args.quick else 16,
                           max_time=5.0 if args.quick else max_time * 0.25)
+    if want("arch"):
+        from benchmarks import arch_bench
+        arch_bench.run(steps=4 if args.quick else 8,
+                       clients=4 if args.quick else 8)
     print(f"# total benchmark wall time: {time.time() - t0:.1f}s",
           file=sys.stderr)
 

@@ -1,15 +1,21 @@
 """End-to-end driver: federated pretraining of an assigned architecture.
 
-Each simulated client (pod) runs REAL `train_step`s on its own non-IID token
-stream; the server aggregates pseudo-gradients with AsyncFedED over the full
-parameter pytree — the production protocol path, at CPU-reduced scale
+Each simulated client runs REAL `forward` train steps on its own token
+stream; the server aggregates pseudo-gradients with AsyncFedED over the
+full parameter pytree — the production protocol path, at CPU-reduced scale
 (same model family, 2 layers, d_model 256).
 
+Since the task-substrate refactor (DESIGN.md §10) this rides the SAME
+discrete-event runtime as the paper tasks: pluggable client behavior,
+cohort client engines planned against a memory budget, burst-window
+autotuning, and end-of-run `finalize()` — pick them from the CLI.
+
 Shows: per-update staleness gamma, the adaptive global lr eta, the K
-controller, and the training loss dropping.
+controller, and the eval loss dropping.
 
 Run:  PYTHONPATH=src python examples/federated_llm_pretraining.py \
-          [--arch qwen3-moe-30b-a3b] [--steps 30]
+          [--arch qwen3-moe-30b-a3b] [--steps 30] [--engine cohort] \
+          [--memory-budget-mb 256]
 """
 import argparse
 
@@ -19,6 +25,11 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="h2o-danube-1.8b")
 ap.add_argument("--steps", type=int, default=30)
 ap.add_argument("--clients", type=int, default=4)
+ap.add_argument("--engine", default="cohort",
+                choices=["loop", "cohort", "cohort_sharded"])
+ap.add_argument("--memory-budget-mb", type=float, default=0.0,
+                help="per-dispatch cohort budget in MiB (0 = unlimited); "
+                     "the chosen plan is reported below")
 ap.add_argument("--pallas-agg", action="store_true",
                 help="route aggregation through the fused fedagg kernel "
                      "(interpret mode on CPU)")
@@ -26,9 +37,15 @@ args = ap.parse_args()
 
 out = run_arch_federated(args.arch, steps=args.steps,
                          num_clients=args.clients, k_local=2, seed=0,
-                         use_pallas_agg=args.pallas_agg)
-print(f"\nloss: {out['first_loss']:.4f} -> {out['last_loss']:.4f} "
-      f"over {args.steps} aggregations "
+                         use_pallas_agg=args.pallas_agg,
+                         client_engine=args.engine,
+                         memory_budget_mb=args.memory_budget_mb)
+print(f"\neval loss: {out['first_loss']:.4f} -> {out['last_loss']:.4f} "
+      f"over {out['updates']} aggregations in {out['drains']} drains "
       f"({out['wall_s']:.1f}s wall)")
 ks = [h["k_next"] for h in out["history"]]
 print(f"adaptive K ranged over [{min(ks)}, {max(ks)}]")
+if "plan" in out:
+    p = out["plan"]
+    print(f"memory plan: engine={p['engine']} width={p['width']} "
+          f"k_chunk={p['k_chunk']} ({p['reason']})")

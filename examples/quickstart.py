@@ -6,12 +6,16 @@ FedAsync — the paper's Fig. 2 in miniature.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
+import os
+
 import numpy as np
 
 from repro import configs
 from repro.core.simulator import FederatedSimulation
 
-MAX_TIME = 30.0        # seconds of VIRTUAL time (deterministic clock)
+# seconds of VIRTUAL time (deterministic clock); the examples-smoke CI job
+# shrinks it via the env var to keep the critical path fast
+MAX_TIME = float(os.environ.get("QUICKSTART_MAX_TIME", "30"))
 
 task = configs.SYNTHETIC_1_1
 print(f"task={task.name}  clients={task.fed.num_clients}  "

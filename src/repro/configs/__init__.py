@@ -12,9 +12,12 @@ from repro.configs import (granite_34b, h2o_danube_1_8b, mamba2_1_3b,  # noqa: F
                            qwen3_moe_30b_a3b, recurrentgemma_2b)
 from repro.configs.paper_tasks import (FEMNIST, PAPER_TASKS, SHAKESPEARE,
                                        SYNTHETIC_1_1, PaperTaskConfig)
-from repro.configs.scenarios import (FEMNIST_64, SCENARIOS,
-                                     SYNTHETIC_256, SYNTHETIC_BURST,
-                                     SYNTHETIC_DIURNAL, SYNTHETIC_TRACE)
+from repro.configs.scenarios import (ARCH_DANUBE_BUDGETED,
+                                     ARCH_DANUBE_SMOKE, ARCH_MAMBA2_SMOKE,
+                                     ArchScenarioConfig, FEMNIST_64,
+                                     SCENARIOS, SYNTHETIC_256,
+                                     SYNTHETIC_BURST, SYNTHETIC_DIURNAL,
+                                     SYNTHETIC_TRACE)
 
 ALL_ARCH_IDS = tuple(ARCHS.names())
 
@@ -34,5 +37,6 @@ __all__ = [
     "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
     "SYNTHETIC_1_1", "FEMNIST", "SHAKESPEARE",
     "SCENARIOS", "SYNTHETIC_256", "FEMNIST_64", "SYNTHETIC_BURST",
-    "SYNTHETIC_DIURNAL", "SYNTHETIC_TRACE",
+    "SYNTHETIC_DIURNAL", "SYNTHETIC_TRACE", "ArchScenarioConfig",
+    "ARCH_DANUBE_SMOKE", "ARCH_MAMBA2_SMOKE", "ARCH_DANUBE_BUDGETED",
 ]

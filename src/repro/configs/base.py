@@ -213,6 +213,8 @@ class FedConfig:
     fedasync_alpha: float = 0.5
     hinge_a: float = 5.0
     hinge_b: float = 5.0
+    # FedAsync "poly" staleness decay: s(lag) = (lag + 1) ** -poly_a
+    poly_a: float = 0.5
     fedprox_mu: float = 0.1
     fedbuff_size: int = 4
     # local training
@@ -258,6 +260,17 @@ class FedConfig:
     # "auto" picks the window online from observed inter-arrival density
     # (repro.core.events.AutoWindow, DESIGN.md §9).
     batch_window: Union[float, str] = 0.0
+    # >0 with batch_window="auto": the gamma-aware control term — the
+    # controller EWMAs observed staleness gamma and shrinks any opened
+    # window by threshold/ewma once the EWMA drifts above this threshold
+    # (events.AutoWindow gamma_threshold). 0 disables the term.
+    window_gamma_threshold: float = 0.0
+    # device-memory budget for one cohort fan-out dispatch, in MiB
+    # (DESIGN.md §10). 0 = unlimited. When the shapes-based footprint
+    # estimate exceeds it, the planner (repro.core.budget) clamps the
+    # vmap width, microbatches the K-scan, and finally falls back
+    # cohort -> loop; the chosen plan lands in SimResult.summary().
+    memory_budget_mb: float = 0.0
 
     def __post_init__(self):
         # Fail fast at config-construction time: an unknown engine name
@@ -279,6 +292,10 @@ class FedConfig:
         elif self.batch_window < 0:
             raise ValueError(
                 f"batch_window must be >= 0, got {self.batch_window!r}")
+        if self.memory_budget_mb < 0:
+            raise ValueError(
+                f"memory_budget_mb must be >= 0 (0 = unlimited), got "
+                f"{self.memory_budget_mb!r}")
 
 
 @dataclasses.dataclass(frozen=True)

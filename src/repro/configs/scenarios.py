@@ -1,15 +1,23 @@
-"""Beyond-paper simulation scenarios — scale sweeps for the cohort engine.
+"""Beyond-paper simulation scenarios — scale sweeps for the cohort engine
+and arch-task scenarios for the unified substrate.
 
 The paper evaluates at 10 clients; Fraboni et al. and FedBuff-style designs
 evaluate at hundreds. These scenarios keep the paper's task models but grow
 the client population, pairing the vectorized cohort engine (DESIGN.md §7)
 with the flat-state pallas server runtime and burst-window draining so a
 round is a handful of device dispatches instead of hundreds.
+
+Arch scenarios (:class:`ArchScenarioConfig`) are declarative — name, arch
+id, reduction knobs, FedConfig — and resolve to a
+``repro.core.tasks.ArchTask`` via ``tasks.as_task``, so the config layer
+stays free of core/model imports while ``FederatedSimulation(SCENARIOS
+["arch-danube-smoke"], ...)`` just works (DESIGN.md §10).
 """
 from __future__ import annotations
 
 import dataclasses
 
+from repro.configs.base import FedConfig
 from repro.configs.paper_tasks import (FEMNIST, SYNTHETIC_1_1,
                                        PaperTaskConfig)
 from repro.utils.registry import Registry
@@ -67,6 +75,49 @@ SYNTHETIC_TRACE = _scaled(
     SYNTHETIC_1_1, "synthetic-trace", num_clients=16, samples_per_client=64,
     client_behavior="trace")
 
+#: THE baseline FedConfig for arch tasks — the old ``run_arch_federated``
+#: loop's knobs (gentle lr/momentum for real transformers, small K) plus
+#: the cohort engine and auto window. ``core.tasks.ArchTask.fed`` returns
+#: this same object, so the scenario entries and ad-hoc ``arch_task(...)``
+#: handles can never drift apart.
+ARCH_FED_BASELINE = FedConfig(lam=1.0, eps=1.0, gamma_bar=2.0, kappa=1.0,
+                              k_initial=2, num_clients=4, local_lr=3e-3,
+                              local_momentum=0.9, local_lr_decay=1.0,
+                              client_engine="cohort", batch_window="auto")
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchScenarioConfig:
+    """Declarative arch-task scenario (DESIGN.md §10): which assigned
+    architecture, at what reduced scale, under which FedConfig.
+    ``repro.core.tasks.as_task`` resolves it to an ``ArchTask``."""
+    name: str
+    arch_id: str
+    seq_len: int = 64
+    global_batch: int = 4
+    num_layers: int = 2
+    d_model: int = 256
+    fed: FedConfig = ARCH_FED_BASELINE
+
+
+#: Dense-attention arch through the full event runtime: cohort engine,
+#: auto window, SimResult telemetry — the smoke entry point for the
+#: large-arch path the old run_arch_federated loop bypassed.
+ARCH_DANUBE_SMOKE = ArchScenarioConfig("arch-danube-smoke",
+                                       "h2o-danube-1.8b")
+
+#: SSM family (Mamba-2 SSD blocks) on the same runtime.
+ARCH_MAMBA2_SMOKE = ArchScenarioConfig("arch-mamba2-smoke", "mamba2-1.3b")
+
+#: Memory-budgeted cohort: an 8-client fan-out planned against a 64 MiB
+#: per-dispatch budget — exercises the vmap-width clamp / K-microbatch /
+#: loop fallback ladder (repro.core.budget) end-to-end.
+ARCH_DANUBE_BUDGETED = ArchScenarioConfig(
+    "arch-danube-budgeted", "h2o-danube-1.8b",
+    fed=dataclasses.replace(ARCH_FED_BASELINE, num_clients=8,
+                            memory_budget_mb=64))
+
 for _s in (SYNTHETIC_256, FEMNIST_64, SYNTHETIC_BURST, SYNTHETIC_DIURNAL,
-           SYNTHETIC_TRACE):
+           SYNTHETIC_TRACE, ARCH_DANUBE_SMOKE, ARCH_MAMBA2_SMOKE,
+           ARCH_DANUBE_BUDGETED):
     SCENARIOS.register(_s.name)(_s)

@@ -1,4 +1,9 @@
-"""The four assigned input shapes."""
+"""The four assigned input shapes, plus the stacked-cohort footprint law
+the memory-budget planner applies (DESIGN.md §10).
+
+The law is pure shape arithmetic — no jax, no allocation — so the config
+layer can evaluate it before any model state exists.
+"""
 from repro.configs.base import SHAPES, ShapeConfig
 
 TRAIN_4K = ShapeConfig(name="train_4k", seq_len=4_096, global_batch=256, kind="train")
@@ -10,3 +15,31 @@ for _s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K):
     SHAPES.register(_s.name)(_s)
 
 ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+#: Stacked per-client parameter-state copies a cohort dispatch holds live:
+#: the params snapshot row, the momentum row, the delta output row, and
+#: one gradient-sized temporary inside the backward pass.
+PARAM_STATE_COPIES = 4
+
+
+def cohort_footprint_bytes(param_bytes: int, batch_bytes: int,
+                           act_bytes: int, clients: int,
+                           k_steps: int) -> int:
+    """Estimated device bytes of ONE stacked-cohort dispatch.
+
+    The budget law (DESIGN.md §10): every stacked client row carries
+    ``PARAM_STATE_COPIES`` parameter copies, its K staged mini-batches,
+    and one client's worth of forward/backward activations (the scan
+    serializes steps, so activations don't multiply by K)::
+
+        footprint(C, K) = C * (4 * P + K * B + A)
+
+    ``param_bytes``/``batch_bytes``/``act_bytes`` come from the task
+    substrate (``LocalTask.batch_bytes`` / ``activation_bytes``); the
+    planner (repro.core.budget) shrinks C (vmap width), then K
+    (scan microbatches), then falls back to the per-client loop until the
+    estimate fits ``FedConfig.memory_budget_mb``.
+    """
+    per_client = (PARAM_STATE_COPIES * int(param_bytes)
+                  + int(k_steps) * int(batch_bytes) + int(act_bytes))
+    return int(clients) * per_client

@@ -1,6 +1,7 @@
 """AsyncFedED core: the paper's contribution as composable pieces."""
 from repro.core.adaptive_k import AdaptiveK, update_k
 from repro.core.behavior import BEHAVIORS, ClientBehavior, make_behavior
+from repro.core.budget import CohortPlan, plan_cohort
 from repro.core.events import (AutoWindow, EventLoop, EventQueue,
                                FixedWindow, VirtualClock,
                                make_window_controller)
@@ -16,9 +17,12 @@ from repro.core.server import (AsyncFedEDServer, ClientUpdate, FedAsyncServer,
                                make_server)
 from repro.core.simulator import (EvalPoint, FederatedSimulation, SimResult,
                                   run_comparison)
+from repro.core.tasks import (TASKS, ArchTask, LocalTask, PaperTask,
+                              arch_task, as_task)
 
 __all__ = [
     "AdaptiveK", "update_k", "BEHAVIORS", "ClientBehavior", "make_behavior",
+    "CohortPlan", "plan_cohort",
     "AutoWindow", "EventLoop", "EventQueue", "FixedWindow", "VirtualClock",
     "make_window_controller",
     "AggregationResult", "adaptive_lr", "staleness",
@@ -28,4 +32,5 @@ __all__ = [
     "RingGMIS", "AsyncFedEDServer", "ClientUpdate", "FedAsyncServer",
     "FedBuffServer", "ServerReply", "SyncServer", "make_server", "EvalPoint",
     "FederatedSimulation", "SimResult", "run_comparison",
+    "TASKS", "ArchTask", "LocalTask", "PaperTask", "arch_task", "as_task",
 ]

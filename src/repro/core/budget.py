@@ -1,0 +1,114 @@
+"""Memory-budgeted cohort-engine planning (DESIGN.md §10).
+
+The stacked cohort engine (repro.core.cohort) holds ``C`` client rows of
+parameters, momentum, deltas, K staged mini-batches, and activations live
+on device at once. For the paper's MLPs that is kilobytes; for an
+assigned ``ModelConfig`` architecture it is what decides whether the
+cohort engine is usable at all. This module turns a byte budget
+(``FedConfig.memory_budget_mb``) into an execution plan *before* any
+device allocation happens, using the pure shape arithmetic of
+``configs.shapes.cohort_footprint_bytes`` fed by the task substrate's
+estimators (``LocalTask.batch_bytes`` / ``activation_bytes``).
+
+Fallback ladder, applied in order until the estimate fits:
+
+1. **full cohort** — one dispatch, vmap width = the padded client bucket;
+2. **clamped vmap width** — the client axis splits into power-of-two
+   chunks run sequentially (width >= 2, still amortizing dispatch);
+3. **K-scan microbatches** — each chunk's local steps split into
+   ``k_chunk``-step segments with the momentum/params carry threaded
+   through on device (disabled under FedProx, whose anchor must be the
+   round's initial weights for all K steps);
+4. **cohort -> loop** — below a 2-client cohort the stacked layout has no
+   advantage; the plan demotes the fan-out to the exact per-client loop.
+
+Every plan is equivalent to the unconstrained dispatch to float tolerance
+(chunking the vmap width or the scan never changes per-client math); the
+chosen plan is reported through ``SimResult.summary()["plan"]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.base import FedConfig
+from repro.configs.shapes import cohort_footprint_bytes
+from repro.core import tasks
+
+
+def _bucket(n: int) -> int:
+    """Next power of two >= n (mirrors cohort.bucket_size; re-derived here
+    so the config-adjacent planner needs no engine import)."""
+    return 1 << (int(n) - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortPlan:
+    """The execution plan one fan-out runs under."""
+
+    engine: str          # "cohort" | "cohort_sharded" | "loop" (fallback)
+    width: int           # max stacked clients per dispatch (pow2 bucket)
+    k_chunk: int         # max local steps per scan segment
+    est_bytes: int       # footprint of one dispatch under this plan
+    full_bytes: int      # unconstrained single-dispatch footprint
+    budget_bytes: int    # 0 = unlimited
+    reason: str = "fits"
+
+    @property
+    def constrained(self) -> bool:
+        return self.reason != "fits"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def plan_cohort(task, fed: FedConfig, *, clients: int, k: int,
+                param_bytes: int, prox_mu: float = 0.0, ragged: bool = False,
+                budget_bytes: Optional[int] = None) -> CohortPlan:
+    """Plan one fan-out of ``clients`` clients x ``k`` local steps.
+
+    ``ragged`` means per-client K values differ: the executor then pads
+    the scan axis to the power-of-two bucket of ``max(ks)`` (the masked
+    core), so the plan must certify the PADDED staged-batch bytes, not the
+    raw maximum. ``budget_bytes`` overrides ``fed.memory_budget_mb``
+    (tests); 0 means unlimited and always yields the full single-dispatch
+    plan.
+    """
+    task = tasks.as_task(task)
+    if budget_bytes is None:
+        budget_bytes = int(fed.memory_budget_mb * 2 ** 20)
+    bb = task.batch_bytes(fed)
+    ab = task.activation_bytes(fed)
+
+    def fp(width: int, k_chunk: int) -> int:
+        return cohort_footprint_bytes(param_bytes, bb, ab, width, k_chunk)
+
+    width = _bucket(max(clients, 1))
+    k_chunk = max(int(k), 1)
+    if ragged:
+        k_chunk = _bucket(k_chunk)     # what the masked core actually stages
+    full = fp(width, k_chunk)
+    engine = fed.client_engine
+    if budget_bytes <= 0 or full <= budget_bytes:
+        return CohortPlan(engine, width, k_chunk, full, full, budget_bytes)
+
+    reasons = []
+    while width > 2 and fp(width, k_chunk) > budget_bytes:
+        width //= 2
+    if fp(width, k_chunk) <= budget_bytes:
+        reasons.append(f"vmap width clamped to {width}")
+    elif prox_mu > 0:
+        reasons.append("K-microbatching unavailable under FedProx")
+    else:
+        while k_chunk > 1 and fp(width, k_chunk) > budget_bytes:
+            k_chunk = max(1, k_chunk // 2)
+        if fp(width, k_chunk) <= budget_bytes:
+            reasons.append(f"vmap width clamped to {width}, "
+                           f"K-scan split into {k_chunk}-step microbatches")
+    if fp(width, k_chunk) > budget_bytes:
+        # even a 2-client stacked chunk overflows: demote to the loop
+        engine = "loop"
+        reasons.append("budget below a 2-client cohort chunk: "
+                       "falling back to the per-client loop")
+    return CohortPlan(engine, width, k_chunk, fp(width, k_chunk), full,
+                      budget_bytes, reason="; ".join(reasons))

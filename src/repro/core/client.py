@@ -1,9 +1,13 @@
-"""Client-side local training (Algorithm 2).
+"""Client-side local training (Algorithm 2), generic over the task
+substrate (repro.core.tasks).
 
 A client downloads (x_t, K), performs K local SGD-with-momentum steps on
 mini-batches of its own dataset (Eq. 2), and uploads the pseudo-gradient
 Delta = x_K - x_0 (Eq. 4). Any optimizer is allowed (paper §4); we default
-to momentum(0.5) with per-round lr decay 0.995 (Appendix B.4).
+to momentum(0.5) with per-round lr decay 0.995 (Appendix B.4). The loss,
+data sampler, and batch layout come from the :class:`LocalTask` — the
+same client trains the paper's 60-float MLP rows and a reduced LLM's
+token batches.
 """
 from __future__ import annotations
 
@@ -12,46 +16,48 @@ from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import FedConfig
-from repro.configs.paper_tasks import PaperTaskConfig
+from repro.core import tasks
 from repro.core.server import ClientUpdate
-from repro.data.pipeline import MiniBatcher
-from repro.models import small
-from repro.optim import momentum
 from repro.utils import pytree as pt
 
 PyTree = Any
 
 
-def local_sgd_step(task: PaperTaskConfig, carry, bx, by, lr,
+def local_sgd_step(task, carry, bx, by, lr,
                    beta: float, prox_mu: float, anchor: PyTree):
     """One SGD-with-momentum step (Eq. 2) on one mini-batch.
 
     THE local optimizer step — shared by the per-client loop below and the
     cohort engine (repro.core.cohort), so the two engines cannot diverge.
+    ``bx`` is the batch's inputs pytree (an array for the paper tasks, a
+    token dict for arch tasks); ``by`` its targets. ``task`` may be any
+    handle ``tasks.as_task`` accepts (coercion happens at trace time).
     FedProx: prox_mu > 0 anchors to the round's initial weights (Eq. 39).
     """
+    task = tasks.as_task(task)
     p, m = carry
     prox = (prox_mu, anchor) if prox_mu > 0 else None
     loss, grads = jax.value_and_grad(
-        lambda q: small.task_loss(task, q, (bx, by), prox=prox))(p)
+        lambda q: task.loss(q, (bx, by), prox=prox))(p)
     m = jax.tree.map(lambda mi, g: beta * mi + g, m, grads)
     p = jax.tree.map(lambda pi, mi: pi - lr * mi, p, m)
     return (p, m), loss
 
 
 @functools.partial(jax.jit, static_argnames=("task", "beta", "prox_mu"))
-def _local_k_steps(task: PaperTaskConfig, params: PyTree, mu_state: PyTree,
-                   xs: jax.Array, ys: jax.Array, lr: jax.Array,
+def _local_k_steps(task, params: PyTree, mu_state: PyTree,
+                   xs, ys, lr: jax.Array,
                    beta: float = 0.5, prox_mu: float = 0.0):
-    """Scan K optimizer steps over stacked batches xs: (K, bs, ...).
+    """Scan K optimizer steps over stacked batches xs: (K, bs, ...) —
+    leafwise when the inputs are a pytree.
 
     Returns (delta, new_momentum, mean_loss)."""
 
     def step(carry, batch):
-        return local_sgd_step(task, carry, batch[0], batch[1], lr, beta,
+        bx, by = batch
+        return local_sgd_step(task, carry, bx, by, lr, beta,
                               prox_mu, params)
 
     (new_params, new_mu), losses = jax.lax.scan(step, (params, mu_state),
@@ -63,14 +69,15 @@ def _local_k_steps(task: PaperTaskConfig, params: PyTree, mu_state: PyTree,
 class Client:
     """One federated client: local data + persistent optimizer state."""
 
-    def __init__(self, client_id: int, task: PaperTaskConfig,
-                 dataset, fed: FedConfig, seed: int = 0):
+    def __init__(self, client_id: int, task, dataset, fed: FedConfig,
+                 seed: int = 0):
         self.client_id = client_id
-        self.task = task
+        self.task = tasks.as_task(task)
         self.fed = fed
-        self.batcher = MiniBatcher(dataset, fed.local_batch_size,
-                                   seed=seed * 10_007 + client_id)
-        self.num_samples = len(dataset[0])
+        # seed derivation predates the substrate — byte-pinned streams
+        self.batcher = self.task.make_batcher(
+            dataset, fed.local_batch_size, seed * 10_007 + client_id)
+        self.num_samples = self.task.num_samples(dataset)
         self.round_idx = 0
         self._mu: Optional[PyTree] = None
 
@@ -95,13 +102,13 @@ class Client:
         """K local steps -> (ClientUpdate, mean local loss)."""
         if self._mu is None:
             self._mu = pt.tree_zeros_like(params)
-        batches = [self.batcher.next() for _ in range(k)]
-        xs = np.stack([b[0] for b in batches])
-        ys = np.stack([b[1] for b in batches])
+        # next_stacked(k) is RNG-state-identical to k next() calls (pinned
+        # by tests/test_cohort.py), so loop and cohort engines share streams
+        bx, by = self.batcher.next_stacked(k)
         delta, self._mu, loss = _local_k_steps(
-            self.task, params, self._mu, jnp.asarray(xs), jnp.asarray(ys),
-            jnp.float32(self._lr()), beta=self.fed.local_momentum,
-            prox_mu=prox_mu)
+            self.task, params, self._mu, jax.tree.map(jnp.asarray, bx),
+            jax.tree.map(jnp.asarray, by), jnp.float32(self._lr()),
+            beta=self.fed.local_momentum, prox_mu=prox_mu)
         self.round_idx += 1
         upd = ClientUpdate(self.client_id, snapshot_iter, k, delta,
                            self.num_samples)

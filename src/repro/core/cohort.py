@@ -1,4 +1,5 @@
-"""Vectorized client-cohort engine (DESIGN.md §7).
+"""Vectorized client-cohort engine (DESIGN.md §7), generic over the task
+substrate (repro.core.tasks).
 
 The reference client path trains one client per jitted call: every
 ``Client.run_local`` is its own dispatch, so a FedAvg round over C clients
@@ -7,6 +8,8 @@ client axis is never exposed to XLA. This module stacks per-client state
 along a leading client axis — params snapshot, momentum, learning rate,
 prox anchor, and the K mini-batches — and runs local training for the
 whole cohort as ONE jitted vmap-over-clients / scan-over-K computation.
+Batches are the substrate's ``(inputs, targets)`` pairs; inputs may be a
+pytree (token dicts for the arch tasks), stacked leafwise.
 
 Two jitted cores share the host-side orchestration:
 
@@ -33,17 +36,27 @@ host, exactly as in the unsharded engine. All host-side orchestration
 engines, so the simulator's event trace and every client's RNG state are
 engine-independent.
 
+**Memory-budgeted execution** (DESIGN.md §10): ``run_cohort`` accepts a
+:class:`repro.core.budget.CohortPlan`. A clamped ``plan.width`` splits the
+client axis into power-of-two chunks dispatched sequentially; a clamped
+``plan.k_chunk`` splits each chunk's K-scan into microbatch segments,
+threading the ``(params, momentum)`` carry between segments on device and
+summing the segment deltas (total delta and per-step loss mean are
+unchanged — the scan is merely cut, not reordered). All batcher draws
+still happen up front in client order, so a plan can never fork a
+client's RNG stream.
+
 Semantics match the per-client loop exactly: the same batcher index
-stream (``MiniBatcher.next_stacked`` is RNG-state-identical to k ``next``
-calls), the same momentum carry, the same per-round lr decay, the same
-FedProx anchor. Equivalence is pinned by ``tests/test_cohort.py`` and
+stream (``next_stacked`` is RNG-state-identical to k ``next`` calls), the
+same momentum carry, the same per-round lr decay, the same FedProx
+anchor. Equivalence is pinned by ``tests/test_cohort.py`` and
 ``tests/test_cohort_sharded.py`` on both server backends, including
 ragged K and client counts that don't divide the pod count.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, List, Sequence, Tuple, Union
+from typing import Any, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -51,7 +64,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import CLIENT_ENGINES
-from repro.configs.paper_tasks import PaperTaskConfig
+from repro.core import tasks as tasks_mod
 from repro.core.client import local_sgd_step
 from repro.core.server import ClientUpdate
 from repro.launch import mesh as mesh_lib
@@ -76,21 +89,22 @@ def bucket_size(n: int) -> int:
     return 1 << (int(n) - 1).bit_length()
 
 
-def _dense_body(task: PaperTaskConfig, params: PyTree, mu: PyTree,
-                xs: jax.Array, ys: jax.Array, lrs: jax.Array,
+def _dense_body(task, params: PyTree, mu: PyTree,
+                xs, ys, lrs: jax.Array,
                 beta: float, prox_mu: float):
     """Uniform-K core body: vmap over clients, scan over exactly K steps.
 
-    ``params``/``mu``: pytrees stacked ``(C, ...)``; ``xs``: ``(C, K, bs,
-    ...)``; ``lrs``: ``(C,)`` f32. Returns ``(deltas, new_mu,
-    mean_losses)`` stacked along the client axis. Shared by the jitted
-    single-device core and the per-pod shard of the sharded core — a
-    pod's shard is just a smaller C.
+    ``params``/``mu``: pytrees stacked ``(C, ...)``; ``xs``: the inputs
+    pytree stacked ``(C, K, bs, ...)`` leafwise; ``lrs``: ``(C,)`` f32.
+    Returns ``(deltas, new_mu, mean_losses)`` stacked along the client
+    axis. Shared by the jitted single-device core and the per-pod shard of
+    the sharded core — a pod's shard is just a smaller C.
     """
 
     def one_client(p0, m0, xs_c, ys_c, lr):
         def step(carry, batch):
-            return local_sgd_step(task, carry, batch[0], batch[1], lr,
+            bx, by = batch
+            return local_sgd_step(task, carry, bx, by, lr,
                                   beta, prox_mu, p0)
 
         (p_k, m_k), losses = jax.lax.scan(step, (p0, m0), (xs_c, ys_c))
@@ -99,8 +113,8 @@ def _dense_body(task: PaperTaskConfig, params: PyTree, mu: PyTree,
     return jax.vmap(one_client)(params, mu, xs, ys, lrs)
 
 
-def _masked_body(task: PaperTaskConfig, params: PyTree, mu: PyTree,
-                 xs: jax.Array, ys: jax.Array, lrs: jax.Array,
+def _masked_body(task, params: PyTree, mu: PyTree,
+                 xs, ys, lrs: jax.Array,
                  mask: jax.Array, beta: float, prox_mu: float):
     """Ragged-K core body: like :func:`_dense_body` plus a ``(C, K)`` f32
     step mask — a zero entry keeps that client's ``(params, momentum)``
@@ -131,32 +145,33 @@ def _masked_body(task: PaperTaskConfig, params: PyTree, mu: PyTree,
 
 
 @functools.partial(jax.jit, static_argnames=("task", "beta", "prox_mu"))
-def _cohort_dense(task: PaperTaskConfig, params: PyTree, mu: PyTree,
-                  xs: jax.Array, ys: jax.Array, lrs: jax.Array,
+def _cohort_dense(task, params: PyTree, mu: PyTree,
+                  xs, ys, lrs: jax.Array,
                   beta: float = 0.5, prox_mu: float = 0.0):
     return _dense_body(task, params, mu, xs, ys, lrs, beta, prox_mu)
 
 
 @functools.partial(jax.jit, static_argnames=("task", "beta", "prox_mu"))
-def _cohort_masked(task: PaperTaskConfig, params: PyTree, mu: PyTree,
-                   xs: jax.Array, ys: jax.Array, lrs: jax.Array,
+def _cohort_masked(task, params: PyTree, mu: PyTree,
+                   xs, ys, lrs: jax.Array,
                    mask: jax.Array, beta: float = 0.5,
                    prox_mu: float = 0.0):
     return _masked_body(task, params, mu, xs, ys, lrs, mask, beta, prox_mu)
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_core(task: PaperTaskConfig, n_pods: int, masked: bool,
+def _sharded_core(task, n_pods: int, masked: bool,
                   beta: float, prox_mu: float):
     """Jitted ``shard_map`` wrapper of the core bodies over a ``pod`` mesh.
 
     Every operand carries the stacked client axis in front, so one prefix
-    spec (`sharding.specs.COHORT_PREFIX_SPEC`) shards them all: each pod
-    receives ``C_pad / n_pods`` client rows — its own params/momentum
-    slices, mini-batches, lrs and step masks — and runs the exact
-    vmap-over-clients/scan-over-K body on them. There is NO collective
-    inside local training; the deltas come back pod-sharded and cross the
-    boundary only when the server aggregates them (DESIGN.md §8).
+    spec (`sharding.specs.COHORT_PREFIX_SPEC`) shards them all — each
+    pytree operand's leaves included: each pod receives ``C_pad /
+    n_pods`` client rows — its own params/momentum slices, mini-batches,
+    lrs and step masks — and runs the exact vmap-over-clients/scan-over-K
+    body on them. There is NO collective inside local training; the
+    deltas come back pod-sharded and cross the boundary only when the
+    server aggregates them (DESIGN.md §8).
 
     Cached per ``(task, n_pods, masked, beta, prox_mu)``: the mesh is
     process-global state, and jit caching below a shard_map closure is
@@ -180,33 +195,149 @@ def _sharded_core(task: PaperTaskConfig, n_pods: int, masked: bool,
     return jax.jit(fn)
 
 
-def _pad_steps(bx: np.ndarray, by: np.ndarray, k_pad: int):
-    """Pad a (k, bs, ...) batch stack to k_pad steps by repeating the last
-    real batch (valid data — masked out, never applied)."""
-    k = bx.shape[0]
+def _pad_steps(batch, k_pad: int):
+    """Pad a (k, bs, ...) batch pytree to k_pad steps, leafwise, by
+    repeating the last real batch (valid data — masked out, never
+    applied)."""
+    k = jax.tree.leaves(batch)[0].shape[0]
     if k == k_pad:
-        return bx, by
+        return batch
     reps = k_pad - k
-    return (np.concatenate([bx, np.repeat(bx[-1:], reps, axis=0)]),
-            np.concatenate([by, np.repeat(by[-1:], reps, axis=0)]))
+    return jax.tree.map(
+        lambda a: np.concatenate([a, np.repeat(a[-1:], reps, axis=0)]),
+        batch)
 
 
-def run_cohort(task: PaperTaskConfig, clients: Sequence,
+def _core_call(task, engine: str, fed, p_stacked, mu_stacked, xs, ys,
+               lrs, mask, prox_mu: float, c_pad: int):
+    """One core invocation: the engine/mask dispatch every chunk and every
+    K-segment funnels through."""
+    uniform = mask is None
+    if engine == "cohort_sharded":
+        # Per-pod client bucketing: c_pad and n_pods are both powers of
+        # two with n_pods <= c_pad, so every pod gets exactly
+        # c_pad / n_pods stacked rows — no per-pod raggedness, one
+        # compile per (bucket, pod-count) pair.
+        n_pods = mesh_lib.pod_count(max_pods=c_pad)
+        core = _sharded_core(task, n_pods, not uniform,
+                             fed.local_momentum, float(prox_mu))
+        if uniform:
+            return core(p_stacked, mu_stacked, xs, ys, jnp.asarray(lrs))
+        return core(p_stacked, mu_stacked, xs, ys, jnp.asarray(lrs),
+                    jnp.asarray(mask))
+    if uniform:
+        return _cohort_dense(task, p_stacked, mu_stacked, xs, ys,
+                             jnp.asarray(lrs), beta=fed.local_momentum,
+                             prox_mu=prox_mu)
+    return _cohort_masked(task, p_stacked, mu_stacked, xs, ys,
+                          jnp.asarray(lrs), jnp.asarray(mask),
+                          beta=fed.local_momentum, prox_mu=prox_mu)
+
+
+# stack per-client trees on the host: jnp.stack would dispatch
+# expand_dims+concat per client per leaf (hundreds of ops per round);
+# momentum rows come back as np views from the previous device_get,
+# so np.stack is a plain memcpy
+_np_stack = functools.partial(jax.tree.map,
+                              lambda *ls: np.stack([np.asarray(x)
+                                                    for x in ls]))
+
+
+def _run_chunk(task, fed, engine: str, p_src, mus, lrs_list, x_rows,
+               y_rows, ks: Sequence[int], prox_mu: float, template,
+               k_chunk: Optional[int]):
+    """Execute one client chunk: pad/stack, then run the core — in one
+    call, or in ``k_chunk``-step scan segments when the memory plan says
+    the full K-scan doesn't fit. Returns host-side (deltas, new_mu,
+    losses) stacked over the chunk's real clients (padding discarded by
+    the caller via row index)."""
+    c_real = len(mus)
+    c_pad = bucket_size(c_real)
+    uniform = len(set(ks)) == 1
+    k_pad = ks[0] if uniform else bucket_size(max(ks))
+
+    xs_rows, ys_rows = [], []
+    lrs = np.zeros((c_pad,), np.float32)
+    mask = None if uniform else np.zeros((c_pad, k_pad), np.float32)
+    for i, k in enumerate(ks):
+        bx, by = x_rows[i], y_rows[i]
+        if not uniform:
+            bx = _pad_steps(bx, k_pad)
+            by = _pad_steps(by, k_pad)
+            mask[i, :k] = 1.0
+        xs_rows.append(bx)
+        ys_rows.append(by)
+        lrs[i] = lrs_list[i]
+    zeros_mu = pt.tree_zeros_like(template)
+    mus = list(mus)
+    for _ in range(c_pad - c_real):    # padded client rows: discarded
+        xs_rows.append(xs_rows[0])
+        ys_rows.append(ys_rows[0])
+        mus.append(zeros_mu)
+
+    xs = _np_stack(*xs_rows)
+    ys = _np_stack(*ys_rows)
+    mu_stacked = _np_stack(*mus)
+    if isinstance(p_src, list):
+        p_stacked = _np_stack(*(p_src + [template] * (c_pad - c_real)))
+    else:                              # shared snapshot: broadcast on device
+        p_stacked = jax.tree.map(
+            lambda p: jnp.broadcast_to(p, (c_pad,) + p.shape), p_src)
+
+    if k_chunk is None or k_chunk >= k_pad:
+        res = _core_call(task, engine, fed, p_stacked, mu_stacked, xs, ys,
+                         lrs, mask, prox_mu, c_pad)
+        return jax.device_get(res)
+
+    # --- K-scan microbatches: thread the (params, momentum) carry through
+    # segments on device; total delta is the sum of segment deltas and the
+    # per-step loss mean is reassembled from segment sums. The FedProx
+    # anchor would differ per segment, so the planner never chunks K when
+    # prox_mu > 0.
+    assert prox_mu == 0.0, "K-microbatching is undefined under FedProx"
+    p_cur, mu_cur = p_stacked, mu_stacked
+    delta_acc = None
+    loss_sum = np.zeros((c_pad,), np.float64)
+    for s0 in range(0, k_pad, k_chunk):
+        s1 = min(s0 + k_chunk, k_pad)
+        xs_seg = jax.tree.map(lambda a: a[:, s0:s1], xs)
+        ys_seg = jax.tree.map(lambda a: a[:, s0:s1], ys)
+        mask_seg = None if uniform else mask[:, s0:s1]
+        d, mu_cur, l_seg = _core_call(task, engine, fed, p_cur, mu_cur,
+                                      xs_seg, ys_seg, lrs, mask_seg,
+                                      prox_mu, c_pad)
+        # segment means -> per-client loss sums (dense: mean * seg_len;
+        # masked: mean over active steps * active count)
+        act = (float(s1 - s0) if uniform
+               else mask_seg.sum(axis=1).astype(np.float64))
+        loss_sum += np.asarray(jax.device_get(l_seg), np.float64) * act
+        p_cur = pt.tree_add(p_cur, d)
+        delta_acc = d if delta_acc is None else pt.tree_add(delta_acc, d)
+    total_act = (np.full((c_pad,), float(k_pad))
+                 if uniform else np.maximum(mask.sum(axis=1), 1.0))
+    losses = (loss_sum / total_act).astype(np.float32)
+    deltas, new_mu = jax.device_get((delta_acc, mu_cur))
+    return deltas, new_mu, losses
+
+
+def run_cohort(task, clients: Sequence,
                params: Union[PyTree, Sequence[PyTree]], ks: Sequence[int],
                snapshot_iters: Sequence[int], prox_mu: float = 0.0,
-               per_client_params: bool = False, engine: str = "cohort"
-               ) -> List[Tuple[ClientUpdate, float]]:
+               per_client_params: bool = False, engine: str = "cohort",
+               plan=None) -> List[Tuple[ClientUpdate, float]]:
     """Train ``clients`` for ``ks`` local steps each in one jitted call.
 
     Drop-in replacement for ``[c.run_local(params, k, it, prox_mu) for
     ...]`` (same batcher streams, momentum carry, round_idx/lr schedule),
-    equivalent to float tolerance. ``params`` is one shared snapshot
-    pytree (every fan-out site — sync rounds, async seeding, burst
-    re-dispatch — hands the whole cohort the same downloaded model),
-    broadcast along the client axis. With ``per_client_params=True`` it is
-    instead a length-C sequence of snapshots, stacked leafwise. The flag
-    is explicit rather than inferred from ``isinstance`` so a future
-    list-rooted params pytree cannot be misread as a per-client sequence.
+    equivalent to float tolerance. ``task`` is any handle
+    ``tasks.as_task`` accepts (a LocalTask, a raw PaperTaskConfig, ...).
+    ``params`` is one shared snapshot pytree (every fan-out site — sync
+    rounds, async seeding, burst re-dispatch — hands the whole cohort the
+    same downloaded model), broadcast along the client axis. With
+    ``per_client_params=True`` it is instead a length-C sequence of
+    snapshots, stacked leafwise. The flag is explicit rather than
+    inferred from ``isinstance`` so a future list-rooted params pytree
+    cannot be misread as a per-client sequence.
 
     ``engine`` selects the execution core: ``"cohort"`` runs the whole
     stacked cohort on one device; ``"cohort_sharded"`` shards the client
@@ -214,6 +345,11 @@ def run_cohort(task: PaperTaskConfig, clients: Sequence,
     the padded client bucket so shards stay equal-sized). Host-side
     orchestration — and therefore every batcher's RNG state — is
     identical either way.
+
+    ``plan`` (a :class:`repro.core.budget.CohortPlan`) bounds the device
+    footprint: the client axis splits into ``plan.width``-sized chunks
+    and each chunk's K-scan into ``plan.k_chunk``-step segments. With no
+    plan (or a plan that fits) the dispatch is the single stacked call.
     """
     if engine not in COHORT_ENGINES:
         raise ValueError(f"run_cohort got engine {engine!r}: expected one "
@@ -223,6 +359,7 @@ def run_cohort(task: PaperTaskConfig, clients: Sequence,
         return []
     if not (len(ks) == len(snapshot_iters) == c_real):
         raise ValueError("clients / ks / snapshot_iters length mismatch")
+    task = tasks_mod.as_task(task)
 
     per_client = per_client_params
     if per_client:
@@ -233,74 +370,46 @@ def run_cohort(task: PaperTaskConfig, clients: Sequence,
             params, per_client = params[0], False
     template = params[0] if per_client else params
 
-    c_pad = bucket_size(c_real)
-    uniform = len(set(ks)) == 1
-    k_pad = ks[0] if uniform else bucket_size(max(ks))
-
-    xs_rows, ys_rows, mus = [], [], []
-    lrs = np.zeros((c_pad,), np.float32)
-    mask = None if uniform else np.zeros((c_pad, k_pad), np.float32)
-    for i, (c, k) in enumerate(zip(clients, ks)):
+    # --- stage every client up front, in client order: batcher draws and
+    # momentum staging happen identically under every plan/engine, so the
+    # RNG streams can never fork on a memory fallback
+    mus, lrs_list, x_rows, y_rows = [], [], [], []
+    for c, k in zip(clients, ks):
         mu, lr = c.stage_cohort(template)
         bx, by = c.batcher.next_stacked(k)
-        if not uniform:
-            bx, by = _pad_steps(bx, by, k_pad)
-            mask[i, :k] = 1.0
-        xs_rows.append(bx)
-        ys_rows.append(by)
         mus.append(mu)
-        lrs[i] = lr
-    zeros_mu = pt.tree_zeros_like(template)
-    for _ in range(c_pad - c_real):    # padded client rows: discarded
-        xs_rows.append(xs_rows[0])
-        ys_rows.append(ys_rows[0])
-        mus.append(zeros_mu)
-
-    xs = np.stack(xs_rows)
-    ys = np.stack(ys_rows)
-    # stack per-client trees on the host: jnp.stack would dispatch
-    # expand_dims+concat per client per leaf (hundreds of ops per round);
-    # momentum rows come back as np views from the previous device_get,
-    # so np.stack is a plain memcpy
-    np_stack = functools.partial(jax.tree.map,
-                                 lambda *ls: np.stack([np.asarray(x)
-                                                       for x in ls]))
-    mu_stacked = np_stack(*mus)
-    if per_client:
-        p_stacked = np_stack(*(list(params)
-                               + [template] * (c_pad - c_real)))
-    else:
-        p_stacked = jax.tree.map(
-            lambda p: jnp.broadcast_to(p, (c_pad,) + p.shape), params)
+        lrs_list.append(lr)
+        x_rows.append(bx)
+        y_rows.append(by)
 
     fed = clients[0].fed
-    if engine == "cohort_sharded":
-        # Per-pod client bucketing: c_pad and n_pods are both powers of
-        # two with n_pods <= c_pad, so every pod gets exactly
-        # c_pad / n_pods stacked rows — no per-pod raggedness, one
-        # compile per (bucket, pod-count) pair.
-        n_pods = mesh_lib.pod_count(max_pods=c_pad)
-        core = _sharded_core(task, n_pods, not uniform,
-                             fed.local_momentum, float(prox_mu))
-        if uniform:
-            res = core(p_stacked, mu_stacked, xs, ys, jnp.asarray(lrs))
+    width = c_real
+    k_chunk = None
+    if plan is not None:
+        width = max(1, min(int(plan.width), c_real))
+        if prox_mu == 0.0 and int(plan.k_chunk) < max(ks):
+            k_chunk = int(plan.k_chunk)
+
+    deltas_rows, mu_rows, loss_rows = [], [], []
+    for lo in range(0, c_real, width):
+        hi = min(lo + width, c_real)
+        if per_client:
+            p_src = list(params[lo:hi])
         else:
-            res = core(p_stacked, mu_stacked, xs, ys, jnp.asarray(lrs),
-                       jnp.asarray(mask))
-    elif uniform:
-        res = _cohort_dense(task, p_stacked, mu_stacked, xs, ys,
-                            jnp.asarray(lrs), beta=fed.local_momentum,
-                            prox_mu=prox_mu)
-    else:
-        res = _cohort_masked(task, p_stacked, mu_stacked, xs, ys,
-                             jnp.asarray(lrs), jnp.asarray(mask),
-                             beta=fed.local_momentum, prox_mu=prox_mu)
-    deltas, new_mu, losses = jax.device_get(res)
+            p_src = params
+        deltas, new_mu, losses = _run_chunk(
+            task, fed, engine, p_src, mus[lo:hi], lrs_list[lo:hi],
+            x_rows[lo:hi], y_rows[lo:hi], ks[lo:hi], prox_mu, template,
+            k_chunk)
+        for i in range(hi - lo):
+            deltas_rows.append(jax.tree.map(lambda l: l[i], deltas))
+            mu_rows.append(jax.tree.map(lambda l: l[i], new_mu))
+            loss_rows.append(float(losses[i]))
 
     out: List[Tuple[ClientUpdate, float]] = []
     for i, (c, k, it) in enumerate(zip(clients, ks, snapshot_iters)):
-        c.commit_cohort(jax.tree.map(lambda l: l[i], new_mu))
-        delta = jax.tree.map(lambda l: l[i], deltas)
-        upd = ClientUpdate(c.client_id, it, k, delta, c.num_samples)
-        out.append((upd, float(losses[i])))
+        c.commit_cohort(mu_rows[i])
+        upd = ClientUpdate(c.client_id, it, k, deltas_rows[i],
+                           c.num_samples)
+        out.append((upd, loss_rows[i]))
     return out

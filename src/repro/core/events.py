@@ -102,6 +102,11 @@ class WindowController:
     def observe(self, times: Sequence[float]) -> None:
         pass
 
+    def observe_gamma(self, gammas: Sequence[float]) -> None:
+        """Staleness feedback: the simulator feeds each drained batch's
+        ``gamma`` values (Eq. 6) back after aggregation. Default: ignored
+        — only gamma-aware policies react."""
+
     def stats(self) -> dict:
         return {}
 
@@ -133,12 +138,23 @@ class AutoWindow(WindowController):
     ``target_batch`` is clamped to the server's ``batch_limit()`` — the
     batched fedagg kernel's free-batch knee, beyond which the B-dependent
     VMEM row schedule starts halving rows per grid step (§4.3).
+
+    **Gamma-aware control** (``gamma_threshold``): a wide drain window is
+    itself a staleness source — every update in the window aggregates
+    against the window's final model. When the EWMA of observed staleness
+    ``gamma`` (fed back by the simulator after each drain via
+    :meth:`observe_gamma`) drifts above ``gamma_threshold``, the opened
+    window shrinks proportionally (``threshold / ewma``), trading kernel
+    batching back for freshness until gamma recovers. ``None`` (default)
+    disables the term — the pre-existing control law is unchanged.
     """
 
     def __init__(self, target_batch: int = 8, burstiness: float = 1.5,
                  alpha_fast: float = 0.4, alpha_slow: float = 0.05,
                  w_max: float = 1.0, warmup: int = 8,
-                 batch_limit: Optional[int] = None):
+                 batch_limit: Optional[int] = None,
+                 gamma_threshold: Optional[float] = None,
+                 gamma_alpha: float = 0.2):
         if batch_limit is not None:
             target_batch = max(1, min(target_batch, batch_limit))
         self.target_batch = int(target_batch)
@@ -147,11 +163,16 @@ class AutoWindow(WindowController):
         self.alpha_slow = float(alpha_slow)
         self.w_max = float(w_max)
         self.warmup = int(warmup)
+        self.gamma_threshold = (None if gamma_threshold is None
+                                else float(gamma_threshold))
+        self.gamma_alpha = float(gamma_alpha)
         self._fast: Optional[float] = None
         self._slow: Optional[float] = None
         self._last: Optional[float] = None
+        self._gamma: Optional[float] = None
         self._n = 0
         self._opened = 0
+        self._shrunk = 0
         self._decisions = 0
         self._last_window = 0.0
 
@@ -164,6 +185,11 @@ class AutoWindow(WindowController):
             self._last_window = min(self.target_batch * self._fast,
                                     self.w_max)
             self._opened += 1
+            if (self.gamma_threshold is not None
+                    and self._gamma is not None
+                    and self._gamma > self.gamma_threshold):
+                self._last_window *= self.gamma_threshold / self._gamma
+                self._shrunk += 1
         else:
             self._last_window = 0.0
         return self._last_window
@@ -180,11 +206,24 @@ class AutoWindow(WindowController):
             self._last = t
             self._n += 1
 
+    def observe_gamma(self, gammas: Sequence[float]) -> None:
+        for g in gammas:
+            g = float(g)
+            if g != g:                 # NaN: baselines without a gamma
+                continue
+            if self._gamma is None:
+                self._gamma = g
+            else:
+                self._gamma += self.gamma_alpha * (g - self._gamma)
+
     def stats(self) -> dict:
         return {"policy": "auto", "target_batch": self.target_batch,
                 "arrivals_seen": self._n, "decisions": self._decisions,
-                "opened": self._opened, "gap_fast": self._fast,
-                "gap_slow": self._slow, "last_window": self._last_window}
+                "opened": self._opened, "shrunk": self._shrunk,
+                "gap_fast": self._fast, "gap_slow": self._slow,
+                "gamma_ewma": self._gamma,
+                "gamma_threshold": self.gamma_threshold,
+                "last_window": self._last_window}
 
 
 def make_window_controller(batch_window: Union[float, str], *,
@@ -219,12 +258,20 @@ class EventLoop:
         self.queue = EventQueue()
         self.clock = VirtualClock()
         self.drains = 0
+        self._stopped = False
+
+    def stop(self) -> None:
+        """Request an early stop: the drain loop exits before popping the
+        next event (the current batch's handler completes). Used by the
+        simulator's ``max_updates`` cutoff."""
+        self._stopped = True
 
     def run(self, handle_batch: Callable[[float, List[Arrival]], None]
             ) -> float:
-        """Drain until the queue empties or virtual time runs out; returns
-        the final clock reading clamped to ``max_time``."""
-        while self.queue:
+        """Drain until the queue empties, virtual time runs out, or
+        :meth:`stop` is called; returns the final clock reading clamped
+        to ``max_time``."""
+        while self.queue and not self._stopped:
             ev = self.queue.pop()
             self.clock.advance_to(ev.time)
             if ev.time > self.max_time:

@@ -275,12 +275,20 @@ class AsyncFedEDServer(AsyncServer):
 
 
 class FedAsyncServer(AsyncServer):
-    """FedAsync (Xie et al. [43]): x <- (1-a) x + a x_local, with constant
-    alpha or hinge-adaptive alpha_t (Eq. 40/41)."""
+    """FedAsync (Xie et al. [43]): x <- (1-a) x + a x_local, with the
+    paper's three staleness-decay functions s(lag) scaling the mixing
+    weight alpha_t = alpha0 * s(t - tau):
+
+    * ``constant`` — s = 1 (no decay);
+    * ``poly``     — s = (lag + 1) ** -poly_a (polynomial decay);
+    * ``hinge``    — s = 1 for lag <= b, else 1 / (a (lag - b) + 1).
+    """
+
+    MODES = ("constant", "poly", "hinge")
 
     def __init__(self, params: PyTree, fed: FedConfig, mode: str = "constant"):
         super().__init__(params, fed)
-        assert mode in ("constant", "hinge")
+        assert mode in self.MODES, mode
         self.mode = mode
         self.name = f"fedasync+{mode}"
         self.gmis = RingGMIS(depth=fed.gmis_depth)
@@ -293,6 +301,8 @@ class FedAsyncServer(AsyncServer):
         a0 = self.fed.fedasync_alpha
         if self.mode == "constant":
             return a0
+        if self.mode == "poly":
+            return a0 * float(lag + 1) ** (-self.fed.poly_a)
         a, b = self.fed.hinge_a, self.fed.hinge_b
         s = 1.0 if lag <= b else 1.0 / (a * (lag - b) + 1.0)
         return a0 * s
@@ -401,6 +411,8 @@ def make_server(name: str, params: PyTree, fed: FedConfig, **kw):
         return AsyncFedEDServer(params, fed, gmis_mode="displacement", **kw)
     if name == "fedasync+constant":
         return FedAsyncServer(params, fed, mode="constant", **kw)
+    if name == "fedasync+poly":
+        return FedAsyncServer(params, fed, mode="poly", **kw)
     if name == "fedasync+hinge":
         return FedAsyncServer(params, fed, mode="hinge", **kw)
     if name == "fedbuff":

@@ -1,10 +1,15 @@
 """Layered discrete-event simulation of federated training (DESIGN.md §9).
 
-Three layers, composed here:
+Four layers, composed here:
 
+* **task substrate** (repro.core.tasks) — *what* the clients train: model
+  init, local loss, data samplers, eval metrics. ``PaperTask`` wraps the
+  paper's MLP/CNN/LSTM byte-identically; ``ArchTask`` wraps an assigned
+  ``ModelConfig`` architecture at reduced scale — the same runtime drives
+  both (DESIGN.md §10);
 * **event runtime** (repro.core.events) — virtual clock, typed arrival
   events, the burst-drain loop, and the batch-window policies (fixed or
-  the ``"auto"`` inter-arrival-density controller);
+  the ``"auto"`` inter-arrival-density controller, optionally gamma-aware);
 * **client behavior** (repro.core.behavior) — *when* updates land:
   ``paper`` reproduces the paper's §B.2 environment exactly (lognormal
   device heterogeneity, TCP transmission, random suspension), ``trace`` /
@@ -12,7 +17,9 @@ Three layers, composed here:
   dropout knobs;
 * **protocol** (repro.core.server / client / cohort) — what an arrival
   does: aggregation through either server backend, local training through
-  any client engine.
+  any client engine, with fan-outs planned against the memory budget
+  (repro.core.budget) — vmap-width clamping, K-scan microbatching, and
+  the cohort->loop fallback, reported in ``SimResult.summary()``.
 
 Every aggregator sees the same event trace for a given seed and behavior,
 so curves are comparable across algorithms. Burst-arrival batching
@@ -36,15 +43,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FedConfig
-from repro.configs.paper_tasks import PaperTaskConfig
+from repro.core import budget as budget_mod
 from repro.core import cohort
+from repro.core import tasks as tasks_mod
 from repro.core.behavior import make_behavior
 from repro.core.client import Client
 from repro.core.events import (EventLoop, VirtualClock,
                                make_window_controller)
 from repro.core.server import ClientUpdate, ServerReply, make_server
-from repro.data.pipeline import load_task_datasets
-from repro.models import small
 from repro.utils import pytree as pt
 
 PyTree = Any
@@ -67,6 +73,9 @@ class SimResult:
     #: server drain calls (== aggregations for window 0; < total_updates
     #: when burst windows batch arrivals; == rounds for sync servers)
     total_drains: int = 0
+    #: the memory-budget plan the last cohort fan-out ran under
+    #: (budget.CohortPlan.to_dict()); None when no cohort fan-out happened
+    plan: Optional[dict] = None
 
     def max_accuracy(self, within_time: Optional[float] = None) -> float:
         pts = [p for p in self.points
@@ -81,7 +90,7 @@ class SimResult:
 
     def summary(self) -> dict:
         """The scalar row every benchmark driver reports."""
-        return {
+        out = {
             "algorithm": self.algorithm,
             "final_acc": float(self.points[-1].accuracy),
             "max_acc": float(self.max_accuracy()),
@@ -89,6 +98,9 @@ class SimResult:
             "updates": self.total_updates,
             "drains": self.total_drains,
         }
+        if self.plan is not None:
+            out["plan"] = self.plan
+        return out
 
     def to_json(self) -> dict:
         """JSON-serializable record: the summary plus the accuracy curve
@@ -100,14 +112,16 @@ class SimResult:
 
 
 class FederatedSimulation:
-    def __init__(self, task: PaperTaskConfig, fed: FedConfig,
+    def __init__(self, task, fed: FedConfig,
                  algorithm: str = "asyncfeded", seed: int = 0,
                  heterogeneity: float = 0.6,
                  server_kwargs: Optional[dict] = None,
                  batch_window: Optional[Any] = None,
                  behavior: Optional[str] = None,
                  behavior_kwargs: Optional[dict] = None):
-        self.task = task
+        # any handle as_task accepts: a LocalTask, a raw PaperTaskConfig
+        # (every pre-substrate call site), a ModelConfig, a name
+        self.task = tasks_mod.as_task(task)
         self.fed = fed
         # engine-name validation lives in FedConfig.__post_init__ — a bad
         # name can't reach this constructor
@@ -115,9 +129,9 @@ class FederatedSimulation:
         # a float or "auto"; resolved to a window controller per run
         self.batch_window = (fed.batch_window if batch_window is None
                              else batch_window)
-        train_sets, (tx, ty) = load_task_datasets(task, seed=seed)
-        self.test_x, self.test_y = jnp.asarray(tx), jnp.asarray(ty)
-        params = small.init_task_model(jax.random.PRNGKey(seed), task)
+        train_sets, eval_batch = self.task.load_data(fed, seed=seed)
+        self.eval_batch = jax.tree.map(jnp.asarray, eval_batch)
+        params = self.task.init(jax.random.PRNGKey(seed))
         self.model_bytes = pt.tree_bytes(params)
         kw = dict(server_kwargs or {})
         if (algorithm.startswith("asyncfeded")
@@ -125,7 +139,7 @@ class FederatedSimulation:
             # per-leaf staleness only exists on the pytree backend
             kw.setdefault("backend", fed.backend)
         self.server = make_server(algorithm, params, fed, **kw)
-        self.clients = [Client(i, task, train_sets[i], fed, seed=seed)
+        self.clients = [Client(i, self.task, train_sets[i], fed, seed=seed)
                         for i in range(fed.num_clients)]
         # arrival dynamics: the behavior model owns the timing RNG and the
         # per-client device speeds (behavior-name validation lives in
@@ -137,18 +151,26 @@ class FederatedSimulation:
         self.behavior = make_behavior(
             behavior or fed.client_behavior, fed, seed=seed,
             model_bytes=self.model_bytes, heterogeneity=heterogeneity, **bkw)
-        self._eval = jax.jit(lambda p: (
-            small.task_accuracy(task, p, (self.test_x, self.test_y)),
-            small.task_loss(task, p, (self.test_x, self.test_y))))
+        self._eval = jax.jit(
+            lambda p: self.task.eval_metrics(p, self.eval_batch))
         self.prox_mu = fed.fedprox_mu if algorithm == "fedprox" else 0.0
         #: the last run's window controller (events.WindowController) —
         #: benchmarks read its .stats() for the autotune telemetry
         self.window_controller = None
+        #: the last cohort fan-out's memory plan (budget.CohortPlan)
+        self.cohort_plan = None
+        # optional early stop on update count (run(max_updates=...)) —
+        # an attribute, not a _run_async parameter, so frozen legacy loop
+        # copies keep their original signatures
+        self._max_updates: Optional[int] = None
 
     # --------------------------------------------------------------- eval --
     def _eval_point(self, time: float) -> EvalPoint:
         acc, loss = self._eval(self.server.params)
         return EvalPoint(time, self.server.t, float(acc), float(loss))
+
+    def _plan_dict(self) -> Optional[dict]:
+        return None if self.cohort_plan is None else self.cohort_plan.to_dict()
 
     # ------------------------------------------------------- local training --
     def _run_locals(self, jobs: List[Tuple[Client, ServerReply]]
@@ -162,18 +184,29 @@ class FederatedSimulation:
         each pod trains its own client shard (repro.core.cohort,
         DESIGN.md §7-8). All engines consume identical batcher/RNG
         streams, so the event trace is engine-independent up to float
-        tolerance.
+        tolerance. Cohort fan-outs are planned against
+        ``FedConfig.memory_budget_mb`` first (repro.core.budget): the
+        plan clamps the vmap width, microbatches the K-scan, or demotes
+        the fan-out to the loop engine when even a 2-client chunk
+        overflows.
         """
         if self.fed.client_engine in cohort.COHORT_ENGINES and len(jobs) > 1:
-            # run_cohort collapses identical snapshot objects to the
-            # broadcast fast path itself (every server path hands a burst
-            # one shared model object)
-            out = cohort.run_cohort(
-                self.task, [c for c, _ in jobs],
-                [r.params for _, r in jobs], [r.k_next for _, r in jobs],
-                [r.iteration for _, r in jobs], prox_mu=self.prox_mu,
-                per_client_params=True, engine=self.fed.client_engine)
-            return [u for u, _ in out]
+            ks = [r.k_next for _, r in jobs]
+            plan = budget_mod.plan_cohort(
+                self.task, self.fed, clients=len(jobs), k=max(ks),
+                param_bytes=self.model_bytes, prox_mu=self.prox_mu,
+                ragged=len(set(ks)) > 1)
+            self.cohort_plan = plan
+            if plan.engine != "loop":
+                # run_cohort collapses identical snapshot objects to the
+                # broadcast fast path itself (every server path hands a
+                # burst one shared model object)
+                out = cohort.run_cohort(
+                    self.task, [c for c, _ in jobs],
+                    [r.params for _, r in jobs], ks,
+                    [r.iteration for _, r in jobs], prox_mu=self.prox_mu,
+                    per_client_params=True, engine=plan.engine, plan=plan)
+                return [u for u, _ in out]
         return [c.run_local(r.params, r.k_next, r.iteration, self.prox_mu)[0]
                 for c, r in jobs]
 
@@ -191,15 +224,24 @@ class FederatedSimulation:
         return len(jobs)
 
     # ---------------------------------------------------------------- run --
-    def run(self, max_time: float = 300.0, eval_every: int = 5) -> SimResult:
+    def run(self, max_time: float = 300.0, eval_every: int = 5,
+            max_updates: Optional[int] = None) -> SimResult:
+        """Run until virtual ``max_time`` — or until ``max_updates``
+        aggregated updates, whichever comes first (the arch path's
+        ``--steps`` knob maps onto the event runtime this way)."""
+        self._max_updates = max_updates
         if self.server.is_async:
             return self._run_async(max_time, eval_every)
         return self._run_sync(max_time, eval_every)
 
     def _run_async(self, max_time: float, eval_every: int) -> SimResult:
         points = [self._eval_point(0.0)]
+        auto_kw = {}
+        if self.fed.window_gamma_threshold > 0:
+            auto_kw["gamma_threshold"] = self.fed.window_gamma_threshold
         self.window_controller = make_window_controller(
-            self.batch_window, batch_limit=self.server.batch_limit())
+            self.batch_window, batch_limit=self.server.batch_limit(),
+            **auto_kw)
         loop = EventLoop(self.window_controller, max_time)
         # initial seeding: every client fans out at once -> one cohort job
         self._dispatch(loop, 0.0, [(c, self.server.on_connect(c.client_id))
@@ -210,8 +252,13 @@ class FederatedSimulation:
             nonlocal updates
             # one aggregation sweep per drained batch (a batch of one is
             # exactly on_update) ...
+            n_hist = len(self.server.history)
             replies = self.server.on_update_batch(
                 [ev.payload for ev in batch])
+            # staleness feedback for gamma-aware window policies (no-op
+            # for fixed windows and plain auto controllers)
+            self.window_controller.observe_gamma(
+                [h.gamma for h in self.server.history[n_hist:]])
             # ... one eval per drained batch even when it spans several
             # eval_every boundaries — params and clock are identical for
             # every update in the window
@@ -222,12 +269,14 @@ class FederatedSimulation:
             updates += self._dispatch(
                 loop, now, [(self.clients[ev.client_id], reply)
                             for ev, reply in zip(batch, replies)])
+            if self._max_updates is not None and updates >= self._max_updates:
+                loop.stop()
 
         end = loop.run(handle)
         self.server.finalize(end)      # e.g. FedBuff flushes a partial buffer
         points.append(self._eval_point(end))
         return SimResult(self.algorithm, points, self.server.history,
-                         updates, loop.drains)
+                         updates, loop.drains, self._plan_dict())
 
     def _run_sync(self, max_time: float, eval_every: int) -> SimResult:
         points = [self._eval_point(0.0)]
@@ -255,12 +304,14 @@ class FederatedSimulation:
             rounds += 1
             if rounds % max(1, eval_every // 2) == 0 or clock.now >= max_time:
                 points.append(self._eval_point(min(clock.now, max_time)))
+            if self._max_updates is not None and rounds >= self._max_updates:
+                break
         self.server.finalize(min(clock.now, max_time))
         return SimResult(self.algorithm, points, self.server.history,
-                         rounds, rounds)
+                         rounds, rounds, self._plan_dict())
 
 
-def run_comparison(task: PaperTaskConfig, algorithms: List[str],
+def run_comparison(task, algorithms: List[str],
                    fed: Optional[FedConfig] = None, max_time: float = 300.0,
                    seeds: Tuple[int, ...] = (0,), eval_every: int = 5,
                    suspension_prob: Optional[float] = None, *,
@@ -271,11 +322,13 @@ def run_comparison(task: PaperTaskConfig, algorithms: List[str],
                    ) -> Dict[str, List[SimResult]]:
     """Fig. 2/3 driver: same task + clients + clock across algorithms.
 
+    ``task`` is any substrate handle (PaperTaskConfig, LocalTask, name).
     ``heterogeneity``, ``server_kwargs`` (e.g. ``{"backend": "pallas"}``),
     ``batch_window`` (a float or ``"auto"``), and ``behavior_kwargs`` are
     threaded straight into every :class:`FederatedSimulation`, so drivers
     can compare backends/engines/windows without hand-rolling the loop.
     """
+    task = tasks_mod.as_task(task)
     fed = fed or task.fed
     if suspension_prob is not None:
         fed = dataclasses.replace(fed, suspension_prob=suspension_prob)

@@ -1,0 +1,331 @@
+"""The task substrate: ONE local-training abstraction for every model the
+repo can federate (DESIGN.md §10).
+
+The paper's protocol is architecture-agnostic — staleness (Eq. 6) is a
+Euclidean distance over whatever parameter pytree the clients train — yet
+the repo used to have two disjoint federated paths: the layered simulator
+hardwired to ``small.task_loss`` (the paper's MLP/CNN/LSTM) and a
+hand-rolled loop in ``launch/train.py`` driving the assigned
+:class:`~repro.configs.base.ModelConfig` architectures while bypassing the
+event runtime, cohort engines, window autotuning, and ``SimResult``
+telemetry. A :class:`LocalTask` deletes the fork: it owns model init, the
+local loss, evaluation metrics, the per-client data sampler, and the
+footprint estimates the memory-budget planner (repro.core.budget) needs —
+and every layer above (client, cohort, simulator, launch) is generic over
+it.
+
+Two registered implementations:
+
+* :class:`PaperTask` — wraps a ``PaperTaskConfig`` + ``models.small``.
+  Byte-identical to the pre-substrate code paths: same init, same loss
+  jaxpr, same ``MiniBatcher`` streams (pinned by
+  tests/test_event_runtime.py and tests/test_cohort_sharded.py).
+* :class:`ArchTask` — wraps a ``ModelConfig`` forward/loss
+  (``models.model``) over synthetic Zipf token streams
+  (``data.pipeline.TokenBatcher``), reduced-scale by default exactly as
+  ``examples/federated_llm_pretraining.py`` always ran it.
+
+Tasks are frozen (hashable) dataclasses so jitted cores can close over
+them as static arguments — the cohort engine's compile cache is keyed per
+task. Batches are ``(inputs, targets)`` pairs where ``inputs`` may itself
+be a pytree (the arch tasks use ``{"tokens": ..., "patch_embeds": ...}``),
+so one stacked-batch layout serves a 60-float MLP row and a multimodal
+token batch alike.
+
+``as_task`` coerces legacy handles — a raw ``PaperTaskConfig``, a
+``ModelConfig``, or a registered name — so every pre-substrate call site
+(``run_cohort(SYNTHETIC_1_1, ...)``) keeps working unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig, ModelConfig, ShapeConfig, reduced
+from repro.configs.paper_tasks import PaperTaskConfig
+from repro.configs.shapes import TRAIN_4K
+from repro.data.pipeline import (MiniBatcher, TokenBatcher,
+                                 load_task_datasets)
+from repro.models import small
+from repro.utils.registry import Registry
+
+PyTree = Any
+Batch = Tuple[Any, Any]          # (inputs-pytree, targets)
+
+#: name -> LocalTask instances registered by the factories below
+TASKS: Registry = Registry("local task")
+
+
+def _prox_term(params: PyTree, prox: Optional[Tuple[float, PyTree]]):
+    """FedProx proximal penalty (Eq. 39), shared by every task's loss."""
+    if prox is None:
+        return 0.0
+    mu, anchor = prox
+    sq = sum(jnp.sum(jnp.square(a - b)) for a, b in zip(
+        jax.tree.leaves(params), jax.tree.leaves(anchor)))
+    return 0.5 * mu * sq
+
+
+class LocalTask:
+    """Protocol of the task substrate. All methods are pure w.r.t. the
+    task object (frozen dataclass); the only stateful collaborator is the
+    batcher each client owns.
+
+    * ``init(key)`` — fresh parameter pytree.
+    * ``loss(params, batch, prox=None)`` — scalar local loss (Eq. 2's
+      objective); ``prox=(mu, anchor)`` adds the FedProx term.
+    * ``eval_metrics(params, batch)`` — ``(accuracy, loss)`` on a held-out
+      batch, jitted once by the simulator.
+    * ``load_data(fed, seed)`` — ``(per-client datasets, eval batch)``.
+    * ``make_batcher(dataset, batch_size, seed)`` — the per-client sampler
+      (must expose ``next()`` / ``next_stacked(k)`` with RNG-state
+      equivalence between the two, so client engines can't fork streams).
+    * ``num_samples(dataset)`` — FedAvg weighting.
+    * ``batch_bytes(fed)`` / ``activation_bytes(fed)`` — per-step batch
+      footprint and per-client activation estimate for the memory-budget
+      planner (repro.core.budget).
+    """
+
+    kind = "task"
+
+    @property
+    def name(self) -> str:
+        raise NotImplementedError
+
+    @property
+    def fed(self) -> FedConfig:
+        raise NotImplementedError
+
+    def init(self, key) -> PyTree:
+        raise NotImplementedError
+
+    def loss(self, params: PyTree, batch: Batch, prox=None):
+        raise NotImplementedError
+
+    def eval_metrics(self, params: PyTree, batch: Batch):
+        raise NotImplementedError
+
+    def load_data(self, fed: FedConfig, seed: int):
+        raise NotImplementedError
+
+    def make_batcher(self, dataset, batch_size: int, seed: int):
+        raise NotImplementedError
+
+    def num_samples(self, dataset) -> int:
+        raise NotImplementedError
+
+    def batch_bytes(self, fed: FedConfig) -> int:
+        raise NotImplementedError
+
+    def activation_bytes(self, fed: FedConfig) -> int:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperTask(LocalTask):
+    """The paper's own tasks (Synthetic-1-1 / FEMNIST / Shakespeare)
+    behind the substrate. Every method delegates to exactly the call the
+    pre-substrate code made, so the equivalence pins — including float
+    summation order inside the loss — hold byte-for-byte."""
+
+    cfg: PaperTaskConfig
+
+    kind = "paper"
+
+    @property
+    def name(self) -> str:
+        return self.cfg.name
+
+    @property
+    def fed(self) -> FedConfig:
+        return self.cfg.fed
+
+    def init(self, key) -> PyTree:
+        return small.init_task_model(key, self.cfg)
+
+    def loss(self, params, batch, prox=None):
+        return small.task_loss(self.cfg, params, batch, prox=prox)
+
+    def eval_metrics(self, params, batch):
+        return (small.task_accuracy(self.cfg, params, batch),
+                small.task_loss(self.cfg, params, batch))
+
+    def load_data(self, fed: FedConfig, seed: int):
+        train_sets, eval_batch = load_task_datasets(self.cfg, seed=seed)
+        return train_sets, eval_batch
+
+    def make_batcher(self, dataset, batch_size: int, seed: int):
+        return MiniBatcher(dataset, batch_size, seed=seed)
+
+    def num_samples(self, dataset) -> int:
+        return len(dataset[0])
+
+    def batch_bytes(self, fed: FedConfig) -> int:
+        bs = fed.local_batch_size
+        feat = 1
+        for d in self.cfg.input_shape:
+            feat *= d
+        return bs * (feat * 4 + 8)       # f32 features + integer labels
+
+    def activation_bytes(self, fed: FedConfig) -> int:
+        bs = fed.local_batch_size
+        width = sum(self.cfg.hidden) + self.cfg.num_classes
+        # forward + backward intermediates, generous 8x fudge
+        return bs * width * 4 * 8
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchTask(LocalTask):
+    """An assigned :class:`ModelConfig` architecture behind the substrate:
+    real ``models.model.forward`` train steps over synthetic Zipf token
+    streams — the ``launch/train.py`` arch path, now first-class. Use
+    :func:`arch_task` to build the CPU-reduced smoke variant."""
+
+    cfg: ModelConfig
+    shape: ShapeConfig
+    q_chunk: int = 32
+    kv_chunk: int = 32
+    #: scenario-supplied FedConfig (configs.scenarios arch scenarios);
+    #: None -> the arch-path baseline below
+    fed_cfg: Optional[FedConfig] = None
+
+    kind = "arch"
+
+    @property
+    def name(self) -> str:
+        return f"arch:{self.cfg.arch_id}"
+
+    @property
+    def fed(self) -> FedConfig:
+        """The shared arch baseline (configs.scenarios.ARCH_FED_BASELINE)
+        unless a scenario supplied its own — one definition, no drift."""
+        if self.fed_cfg is not None:
+            return self.fed_cfg
+        from repro.configs.scenarios import ARCH_FED_BASELINE
+        return ARCH_FED_BASELINE
+
+    def init(self, key) -> PyTree:
+        from repro.models import model as M
+        return M.init_model(key, self.cfg)
+
+    def _logits_labels(self, params, batch):
+        from repro.models import model as M
+        inputs, labels = batch
+        logits, aux, _ = M.forward(
+            params, inputs["tokens"], self.cfg,
+            patch_embeds=inputs.get("patch_embeds"), remat=False,
+            q_chunk=self.q_chunk, kv_chunk=self.kv_chunk)
+        if self.cfg.family == "audio":
+            labels = labels.transpose(0, 2, 1)
+        return logits, aux, labels
+
+    def loss(self, params, batch, prox=None):
+        from repro.models.layers import cross_entropy
+        logits, aux, labels = self._logits_labels(params, batch)
+        return cross_entropy(logits, labels) + aux + _prox_term(params, prox)
+
+    def eval_metrics(self, params, batch):
+        from repro.models.layers import cross_entropy
+        logits, aux, labels = self._logits_labels(params, batch)
+        acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels)
+                       .astype(jnp.float32))
+        return acc, cross_entropy(logits, labels) + aux
+
+    def load_data(self, fed: FedConfig, seed: int):
+        # the "dataset" of client i is just its stream id — the sampler is
+        # generative, seeded per client by make_batcher
+        eval_batch = TokenBatcher(self.cfg, self.shape,
+                                  seed=seed + 131_071).next()
+        return list(range(fed.num_clients)), eval_batch
+
+    def make_batcher(self, dataset, batch_size: int, seed: int):
+        """Token-batch geometry is owned by this task's ShapeConfig
+        (``shape.global_batch x shape.seq_len``), NOT by
+        ``FedConfig.local_batch_size`` — ``batch_size`` is the paper-task
+        knob and is deliberately ignored here. Size arch batches via
+        ``arch_task(global_batch=..., seq_len=...)``."""
+        return TokenBatcher(self.cfg, self.shape, seed=seed)
+
+    def num_samples(self, dataset) -> int:
+        return self.shape.global_batch
+
+    def batch_bytes(self, fed: FedConfig) -> int:
+        b, s = self.shape.global_batch, self.shape.seq_len
+        ncb = self.cfg.num_codebooks if self.cfg.family == "audio" else 1
+        n = 2 * b * ncb * s * 4          # tokens + labels, int32
+        if self.cfg.family == "vlm" and self.cfg.max_patches:
+            n += (b * min(self.cfg.max_patches, s)
+                  * self.cfg.vision_embed_dim * 4)
+        return n
+
+    def activation_bytes(self, fed: FedConfig) -> int:
+        b, s = self.shape.global_batch, self.shape.seq_len
+        cfg = self.cfg
+        # residual-stream tensors per block (attn/ffn intermediates), f32,
+        # forward + backward; plus the (B, S, V) logits pair. An estimate
+        # — the budget law is order-of-magnitude, not an allocator.
+        per_layer = b * s * cfg.d_model * 4 * 12
+        logits = 2 * b * s * cfg.vocab_size * 4
+        return per_layer * cfg.num_layers + logits
+
+
+def arch_task(arch_id: str, *, seq_len: int = 64, global_batch: int = 4,
+              num_layers: int = 2, d_model: int = 256,
+              full_scale: bool = False,
+              fed: Optional[FedConfig] = None) -> ArchTask:
+    """Build an :class:`ArchTask` for a registered architecture.
+
+    Default is the CPU-reduced smoke scale ``launch/train.py`` always
+    used: ``configs.reduced`` (<=2 layers, d_model<=512), dense MoE
+    dispatch, f32 params, seq_len 64 x batch 4. ``full_scale=True`` keeps
+    the assigned config untouched (accelerator runs).
+    """
+    import repro.configs as C                  # triggers ARCHS registration
+    cfg = C.get_arch(arch_id)
+    if not full_scale:
+        cfg = reduced(cfg, num_layers=num_layers, d_model=d_model)
+        if cfg.moe is not None:
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, impl="dense"))
+        cfg = dataclasses.replace(cfg, dtype="float32")
+    shape = dataclasses.replace(TRAIN_4K, seq_len=seq_len,
+                                global_batch=global_batch)
+    return ArchTask(cfg=cfg, shape=shape, fed_cfg=fed)
+
+
+def as_task(obj) -> LocalTask:
+    """Coerce any task handle to a :class:`LocalTask`.
+
+    Accepts a ``LocalTask`` (returned as-is), a raw ``PaperTaskConfig``
+    (every pre-substrate call site), a ``ModelConfig`` (wrapped reduced),
+    or a registered task/scenario name.
+    """
+    if isinstance(obj, LocalTask):
+        return obj
+    if isinstance(obj, PaperTaskConfig):
+        return PaperTask(cfg=obj)
+    if isinstance(obj, ModelConfig):
+        return arch_task(obj.arch_id)
+    # declarative arch scenarios (configs.scenarios.ArchScenarioConfig) —
+    # imported lazily so the config layer never depends on core
+    from repro.configs.scenarios import ArchScenarioConfig
+    if isinstance(obj, ArchScenarioConfig):
+        return arch_task(obj.arch_id, seq_len=obj.seq_len,
+                         global_batch=obj.global_batch,
+                         num_layers=obj.num_layers, d_model=obj.d_model,
+                         fed=obj.fed)
+    if isinstance(obj, str):
+        if obj in TASKS:
+            return as_task(TASKS[obj])
+        import repro.configs as C
+        if obj in C.PAPER_TASKS:
+            return as_task(C.PAPER_TASKS[obj])
+        if obj in C.SCENARIOS:
+            return as_task(C.SCENARIOS[obj])
+        return arch_task(obj)                 # last resort: an arch id
+    raise TypeError(f"cannot interpret {type(obj).__name__} as a LocalTask "
+                    "(expected LocalTask, PaperTaskConfig, ModelConfig, or "
+                    "a registered name)")

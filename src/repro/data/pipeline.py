@@ -100,16 +100,20 @@ def dirichlet_partition(x: np.ndarray, y: np.ndarray, num_clients: int,
 # ---------------------------------------------------------------------------
 
 
+def _zipf_probs(vocab_size: int) -> np.ndarray:
+    """Zipf over the vocab — realistic skew for embedding-gather patterns."""
+    ranks = np.arange(1, vocab_size + 1, dtype=np.float64)
+    probs = ranks ** -1.1
+    return probs / probs.sum()
+
+
 def synthetic_token_stream(cfg: ModelConfig, shape: ShapeConfig, *,
                            num_batches: int = 1, seed: int = 0
                            ) -> Iterator[dict]:
     """Zipf-distributed synthetic token batches matching input_specs()."""
     rng = np.random.default_rng(seed)
     v = cfg.vocab_size
-    # Zipf over the vocab — realistic skew for embedding-gather patterns
-    ranks = np.arange(1, v + 1, dtype=np.float64)
-    probs = ranks ** -1.1
-    probs /= probs.sum()
+    probs = _zipf_probs(v)
     for _ in range(num_batches):
         if cfg.family == "audio":
             toks = rng.choice(v, p=probs,
@@ -126,3 +130,46 @@ def synthetic_token_stream(cfg: ModelConfig, shape: ShapeConfig, *,
                 0, 1, (shape.global_batch, npatch, cfg.vision_embed_dim)
             ).astype(np.float32)
         yield batch
+
+
+class TokenBatcher:
+    """Per-client token-stream sampler for the arch tasks, with the
+    :class:`MiniBatcher` interface the client engines rely on.
+
+    Batches are the substrate's ``(inputs, targets)`` pairs: ``inputs`` is
+    a dict (``tokens`` plus ``patch_embeds`` for VLM fronts) so stacked
+    cohort layouts treat paper rows and multimodal token batches alike.
+    ``next_stacked(k)`` draws exactly ``k`` successive :meth:`next`
+    batches, so the generator state afterwards is identical to k ``next``
+    calls — the loop / cohort / sharded engines cannot fork a client's
+    data stream (same contract MiniBatcher pins in tests/test_cohort.py).
+    """
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig, seed: int):
+        self.cfg = cfg
+        self.shape = shape
+        self.rng = np.random.default_rng(seed)
+        self._probs = _zipf_probs(cfg.vocab_size)
+
+    def next(self):
+        cfg, shape = self.cfg, self.shape
+        if cfg.family == "audio":
+            size = (shape.global_batch, cfg.num_codebooks, shape.seq_len)
+        else:
+            size = (shape.global_batch, shape.seq_len)
+        toks = self.rng.choice(cfg.vocab_size, p=self._probs,
+                               size=size).astype(np.int32)
+        inputs = {"tokens": toks}
+        if cfg.family == "vlm" and cfg.max_patches:
+            npatch = min(cfg.max_patches, shape.seq_len)
+            inputs["patch_embeds"] = self.rng.normal(
+                0, 1, (shape.global_batch, npatch, cfg.vision_embed_dim)
+            ).astype(np.float32)
+        return inputs, np.roll(toks, -1, axis=-1)
+
+    def next_stacked(self, k: int):
+        """k batches stacked along a leading step axis, leafwise."""
+        draws = [self.next() for _ in range(k)]
+        inputs = {key: np.stack([d[0][key] for d in draws])
+                  for key in draws[0][0]}
+        return inputs, np.stack([d[1] for d in draws])

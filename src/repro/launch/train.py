@@ -1,18 +1,21 @@
 """Federated training driver.
 
-Two modes:
+Two modes, ONE runtime (the task substrate, DESIGN.md §10):
 * ``paper``  — the faithful reproduction: discrete-event simulation of the
   paper's tasks (Synthetic-1-1 / FEMNIST / Shakespeare) with any aggregator.
-* ``arch``   — the production path at reduced scale: train one of the
-  assigned architectures federatedly on CPU (reduced config), with each
-  simulated client running real train steps and the server running
-  AsyncFedED over the full parameter pytree (optionally via the fused
-  Pallas fedagg kernel).
+* ``arch``   — the production path at reduced scale: one of the assigned
+  architectures behind an ``ArchTask``, driven through the SAME
+  ``FederatedSimulation`` — event runtime, behavior models, cohort engines
+  planned against the memory budget, burst-window autotuning,
+  ``server.finalize()``, and ``SimResult`` telemetry all apply. The
+  pre-substrate hand-rolled arch loop (round-robin arrivals, no finalize,
+  no engines) is gone.
 
 Usage:
   python -m repro.launch.train --mode paper --task synthetic-1-1 \
       --algorithm asyncfeded --max-time 60
-  python -m repro.launch.train --mode arch --arch mamba2-1.3b --steps 20
+  python -m repro.launch.train --mode arch --arch mamba2-1.3b --steps 20 \
+      --engine cohort --memory-budget-mb 256
 """
 from __future__ import annotations
 
@@ -21,22 +24,10 @@ import dataclasses
 import json
 import os
 import time
-from typing import Any
-
-import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
-from repro.configs.base import FedConfig
-from repro.core.server import ClientUpdate, make_server
+from repro.core import tasks
 from repro.core.simulator import FederatedSimulation
-from repro.data.pipeline import synthetic_token_stream
-from repro.models import model as M
-from repro.models.layers import cross_entropy
-from repro.optim import momentum
-from repro.optim.optimizers import apply_updates
-from repro.utils import pytree as pt
 
 
 def run_paper(task_name: str, algorithm: str, max_time: float, seed: int,
@@ -58,80 +49,58 @@ def run_paper(task_name: str, algorithm: str, max_time: float, seed: int,
     return out
 
 
-def run_arch_federated(arch: str, steps: int, num_clients: int, k_local: int,
-                       seed: int, use_pallas_agg: bool = False) -> dict:
-    """Reduced-scale federated pretraining of an assigned architecture:
-    every client runs real `train_step`s on its own token stream; the server
-    aggregates pseudo-gradients with AsyncFedED (round-robin arrival order
-    stands in for the async schedule — the protocol logic is identical)."""
-    cfg = configs.reduced(configs.get_arch(arch))
-    if cfg.moe is not None:
-        cfg = dataclasses.replace(
-            cfg, moe=dataclasses.replace(cfg.moe, impl="dense"))
-    cfg = dataclasses.replace(cfg, dtype="float32")
-    shape = dataclasses.replace(configs.TRAIN_4K, seq_len=64, global_batch=4)
-    fed = FedConfig(lam=1.0, eps=1.0, gamma_bar=2.0, kappa=1.0, k_initial=2,
-                    num_clients=num_clients)
-    params = M.init_model(jax.random.PRNGKey(seed), cfg)
-    server = make_server("asyncfeded", params, fed)
-    if use_pallas_agg:
-        from repro.kernels.fedagg.ops import asyncfeded_aggregate_pallas
-        # monkey-patch the fused kernel into the server's hot path
-        import repro.core.server as server_mod
-        server_mod.asyncfeded_aggregate = (
-            lambda x, s, d, lam, eps, cap=0.0:
-            asyncfeded_aggregate_pallas(x, s, d, lam=lam, eps=eps, cap=cap))
+def run_arch_federated(arch: str, steps: int = 20, num_clients: int = 4,
+                       k_local: int = 2, seed: int = 0,
+                       use_pallas_agg: bool = False, *,
+                       algorithm: str = "asyncfeded",
+                       client_engine: str = "cohort",
+                       batch_window="auto",
+                       behavior: str = "paper",
+                       memory_budget_mb: float = 0.0,
+                       seq_len: int = 64, global_batch: int = 4,
+                       num_layers: int = 2, d_model: int = 256,
+                       eval_every: int = 5) -> dict:
+    """Reduced-scale federated pretraining of an assigned architecture —
+    a thin wrapper over :class:`FederatedSimulation` on an ``ArchTask``.
 
-    opt = momentum(3e-3, beta=0.9)
-
-    def local_loss(p, batch):
-        logits, aux, _ = M.forward(p, batch["tokens"], cfg, remat=False,
-                                   q_chunk=32, kv_chunk=32)
-        labels = batch["labels"]
-        if cfg.family == "audio":
-            labels = labels.transpose(0, 2, 1)
-        return cross_entropy(logits, labels) + aux
-
-    @jax.jit
-    def local_step(p, opt_state, batch):
-        loss, g = jax.value_and_grad(local_loss)(p, batch)
-        ups, opt_state = opt.update(g, opt_state, p)
-        return apply_updates(p, ups), opt_state, loss
-
-    streams = [synthetic_token_stream(cfg, shape, num_batches=10_000,
-                                      seed=seed * 31 + c)
-               for c in range(num_clients)]
-    opt_states = [opt.init(params) for _ in range(num_clients)]
-
-    def train_local(cid: int, reply):
-        p = reply.params
-        for _ in range(reply.k_next):
-            batch = {k: jnp.asarray(v) for k, v in next(streams[cid]).items()}
-            p, opt_states[cid], loss = local_step(p, opt_states[cid], batch)
-        delta = pt.tree_sub(p, reply.params)
-        return ClientUpdate(cid, reply.iteration, reply.k_next, delta), loss
-
-    losses = []
+    Every client runs real ``models.model.forward`` train steps on its own
+    token stream; arrivals come from a pluggable behavior model; cohort
+    fan-outs are planned against ``memory_budget_mb``; the drain window
+    autotunes (``batch_window="auto"``); ``server.finalize()`` fires at
+    end of run (so e.g. a FedBuff comparison never drops its partial
+    buffer). ``steps`` bounds the number of aggregated updates.
+    ``use_pallas_agg`` routes aggregation through the flat-state fedagg
+    kernel backend (interpret mode on CPU).
+    """
+    task = tasks.arch_task(arch, seq_len=seq_len, global_batch=global_batch,
+                           num_layers=num_layers, d_model=d_model)
+    fed = dataclasses.replace(
+        task.fed, num_clients=num_clients, k_initial=k_local,
+        client_engine=client_engine, batch_window=batch_window,
+        memory_budget_mb=memory_budget_mb,
+        backend="pallas" if use_pallas_agg else "pytree")
+    sim = FederatedSimulation(task, fed, algorithm=algorithm, seed=seed,
+                              behavior=behavior)
     t0 = time.time()
-    # async interleave: every client trains from its own (stale) snapshot;
-    # deliveries round-robin, so each snapshot lags num_clients-1 iterations
-    pending = []
-    for cid in range(num_clients):
-        pending.append(train_local(cid, server.on_connect(cid)))
-    for step in range(steps):
-        cid = step % num_clients
-        upd, loss = pending[cid]
-        reply = server.on_update(upd)
-        pending[cid] = train_local(cid, reply)
-        losses.append(float(loss))
-        if step % 5 == 0 or step == steps - 1:
-            rec = server.history[-1]
-            print(f"[train:arch] step {step:3d} client {cid} "
-                  f"loss {float(loss):.4f} gamma {rec.gamma:.3f} "
-                  f"eta {rec.eta:.3f} K_next {rec.k_next}")
-    return {"arch": arch, "losses": losses, "wall_s": time.time() - t0,
-            "first_loss": losses[0], "last_loss": losses[-1],
-            "history": [dataclasses.asdict(h) for h in server.history]}
+    res = sim.run(max_time=float("inf"), eval_every=eval_every,
+                  max_updates=steps)
+    wall = time.time() - t0
+    for rec in res.history[:: max(1, len(res.history) // 8)]:
+        print(f"[train:arch] iter {rec.iteration:3d} client "
+              f"{rec.client_id} gamma {rec.gamma:.3f} eta {rec.eta:.3f} "
+              f"K_next {rec.k_next}")
+    losses = [p.loss for p in res.points]
+    out = {"arch": arch, "algorithm": algorithm, "losses": losses,
+           "wall_s": wall, "first_loss": losses[0], "last_loss": losses[-1],
+           "updates": res.total_updates, "drains": res.total_drains,
+           "summary": res.summary(),
+           "history": [dataclasses.asdict(h) for h in res.history]}
+    if res.plan is not None:
+        out["plan"] = res.plan
+    print(f"[train:arch] {arch} {algorithm}: {res.total_updates} updates "
+          f"in {res.total_drains} drains, eval loss "
+          f"{losses[0]:.4f} -> {losses[-1]:.4f} ({wall:.1f}s wall)")
+    return out
 
 
 def main() -> None:
@@ -147,14 +116,28 @@ def main() -> None:
     ap.add_argument("--k-local", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--pallas-agg", action="store_true")
+    ap.add_argument("--engine", default="cohort",
+                    choices=list(configs.CLIENT_ENGINES))
+    ap.add_argument("--behavior", default="paper")
+    ap.add_argument("--window", default="auto",
+                    help="drain window: a float or 'auto'")
+    ap.add_argument("--memory-budget-mb", type=float, default=0.0,
+                    help="per-dispatch cohort budget (0 = unlimited)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     if args.mode == "paper":
         out = run_paper(args.task, args.algorithm, args.max_time, args.seed,
                         args.suspension_prob)
     else:
+        window = (args.window if args.window == "auto"
+                  else float(args.window))
         out = run_arch_federated(args.arch, args.steps, args.clients,
-                                 args.k_local, args.seed, args.pallas_agg)
+                                 args.k_local, args.seed, args.pallas_agg,
+                                 algorithm=args.algorithm,
+                                 client_engine=args.engine,
+                                 behavior=args.behavior,
+                                 batch_window=window,
+                                 memory_budget_mb=args.memory_budget_mb)
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:

@@ -80,6 +80,78 @@ class TestWindowPolicies:
         assert make_window_controller("auto").target_batch == 8
 
 
+class TestGammaAwareWindow:
+    """AutoWindow's staleness feedback term: the window shrinks when the
+    EWMA of observed gamma drifts above the configured threshold."""
+
+    def _bursty(self, **kw):
+        ctl = AutoWindow(warmup=8, burstiness=1.5, target_batch=8,
+                         alpha_fast=0.5, w_max=10.0, **kw)
+        # long-run 1.0s gaps, then a dense 1ms cluster: the base law opens
+        times = [float(i) for i in range(20)]
+        times += [20.0 + 0.001 * i for i in range(20)]
+        ctl.observe(times)
+        return ctl
+
+    def test_without_threshold_gamma_is_ignored(self):
+        ctl = self._bursty()
+        base = ctl.window()
+        ctl.observe_gamma([50.0] * 10)
+        assert ctl.window() == pytest.approx(base)
+        assert ctl.stats()["shrunk"] == 0
+
+    def test_window_shrinks_when_gamma_drifts_above_threshold(self):
+        ref = self._bursty()
+        base = ref.window()
+        ctl = self._bursty(gamma_threshold=2.0, gamma_alpha=1.0)
+        ctl.observe_gamma([8.0])              # EWMA jumps to 8 > 2
+        w = ctl.window()
+        assert 0.0 < w < base
+        assert w == pytest.approx(base * 2.0 / 8.0)   # threshold / ewma
+        assert ctl.stats()["shrunk"] == 1
+        assert ctl.stats()["gamma_ewma"] == pytest.approx(8.0)
+
+    def test_window_unshrunk_while_gamma_below_threshold(self):
+        ref = self._bursty()
+        ctl = self._bursty(gamma_threshold=5.0, gamma_alpha=0.5)
+        ctl.observe_gamma([1.0, 2.0, 1.5])
+        assert ctl.window() == pytest.approx(ref.window())
+        assert ctl.stats()["shrunk"] == 0
+
+    def test_gamma_ewma_recovers_and_window_reopens(self):
+        ref = self._bursty()
+        base = ref.window()
+        ctl = self._bursty(gamma_threshold=2.0, gamma_alpha=0.9)
+        ctl.observe_gamma([20.0])
+        assert ctl.window() < base
+        ctl.observe_gamma([0.1] * 8)          # staleness recovered
+        assert ctl.stats()["gamma_ewma"] < 2.0
+        assert ctl.window() == pytest.approx(base)
+
+    def test_nan_gammas_ignored(self):
+        ctl = self._bursty(gamma_threshold=2.0)
+        ctl.observe_gamma([float("nan")] * 5)
+        assert ctl.stats()["gamma_ewma"] is None
+
+    def test_fixed_window_accepts_gamma_feedback(self):
+        ctl = make_window_controller(0.25)
+        ctl.observe_gamma([3.0])              # no-op, must not raise
+        assert ctl.window() == 0.25
+
+    def test_simulator_threads_threshold_from_config(self):
+        import dataclasses
+        from repro import configs
+        from repro.core.simulator import FederatedSimulation
+        fed = dataclasses.replace(configs.SYNTHETIC_1_1.fed,
+                                  batch_window="auto",
+                                  window_gamma_threshold=2.5)
+        sim = FederatedSimulation(configs.SYNTHETIC_1_1, fed, seed=0)
+        sim.run(max_time=1.0)
+        assert sim.window_controller.gamma_threshold == 2.5
+        # the run fed real gammas back into the controller
+        assert sim.window_controller.stats()["gamma_ewma"] is not None
+
+
 class TestEventLoop:
     def _loop(self, window, max_time=100.0):
         return EventLoop(FixedWindow(window), max_time)

@@ -122,6 +122,72 @@ class TestDisplacementBatchFallback:
         assert d2 > 0.0
 
 
+class TestFedAsyncAlphaDecay:
+    """FedAsync's three staleness-decay functions s(lag) and their use in
+    on_update: alpha_t = alpha0 * s(t - tau)."""
+
+    FED = dataclasses.replace(configs.SYNTHETIC_1_1.fed,
+                              fedasync_alpha=0.5, hinge_a=2.0, hinge_b=4.0,
+                              poly_a=0.5)
+
+    def _srv(self, mode):
+        return make_server(f"fedasync+{mode}", tiny_params(), self.FED)
+
+    def test_constant_ignores_lag(self):
+        srv = self._srv("constant")
+        assert [srv._alpha(lag) for lag in (0, 1, 10, 100)] == [0.5] * 4
+
+    def test_poly_decay_curve(self):
+        srv = self._srv("poly")
+        # s(lag) = (lag + 1) ** -poly_a
+        for lag in (0, 1, 3, 8, 24):
+            assert srv._alpha(lag) == pytest.approx(
+                0.5 * (lag + 1) ** -0.5)
+        assert srv._alpha(0) == 0.5               # fresh update undamped
+
+    def test_hinge_decay_curve(self):
+        srv = self._srv("hinge")
+        # flat at alpha0 through lag <= b, then 1/(a(lag-b)+1)
+        for lag in (0, 2, 4):
+            assert srv._alpha(lag) == pytest.approx(0.5)
+        for lag in (5, 8, 20):
+            assert srv._alpha(lag) == pytest.approx(
+                0.5 / (2.0 * (lag - 4.0) + 1.0))
+
+    def test_decays_are_monotone_nonincreasing(self):
+        for mode in ("constant", "poly", "hinge"):
+            srv = self._srv(mode)
+            alphas = [srv._alpha(lag) for lag in range(32)]
+            assert all(a >= b for a, b in zip(alphas, alphas[1:]))
+            assert all(0.0 < a <= 0.5 for a in alphas)
+
+    @pytest.mark.parametrize("mode", ["constant", "poly", "hinge"])
+    def test_on_update_mixes_with_alpha(self, mode):
+        """x <- (1-a) x + a (x_stale + delta), with a = _alpha(lag) —
+        verified against a hand-rolled mix at a stale snapshot."""
+        srv = self._srv(mode)
+        x1 = srv.params
+        srv.on_update(upd(0, snapshot_iter=1))    # t: 1 -> 2
+        srv.on_update(upd(1, snapshot_iter=2))    # t: 2 -> 3
+        before = srv.params
+        u = upd(2, snapshot_iter=1, seed=9)       # lag = 3 - 1 = 2
+        a = srv._alpha(2)
+        srv.on_update(u)
+        x_local = pt.tree_add(x1, u.delta)
+        expect = jax.tree.map(lambda xg, xl: (1 - a) * xg + a * xl,
+                              before, x_local)
+        for e, g in zip(jax.tree.leaves(expect), jax.tree.leaves(srv.params)):
+            np.testing.assert_allclose(e, g, rtol=1e-6)
+        assert srv.history[-1].eta == pytest.approx(a)
+        assert srv.history[-1].lag == 2
+
+    def test_make_server_knows_poly(self):
+        assert self._srv("poly").name == "fedasync+poly"
+        with pytest.raises(AssertionError):
+            from repro.core.server import FedAsyncServer
+            FedAsyncServer(tiny_params(), self.FED, mode="exponential")
+
+
 class TestBatchLimit:
     def test_pallas_ring_reports_kernel_knee(self):
         srv = make_server("asyncfeded", tiny_params(), FED,

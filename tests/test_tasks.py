@@ -1,0 +1,309 @@
+"""Unified task substrate (DESIGN.md §10): LocalTask coercion, the
+ArchTask path through the full event runtime on every client engine, the
+memory-budget planner's fallback ladder, and the plan-driven chunked
+cohort execution's equivalence to the per-client loop.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.shapes import cohort_footprint_bytes
+from repro.core import cohort
+from repro.core.budget import CohortPlan, plan_cohort
+from repro.core.client import Client
+from repro.core.simulator import FederatedSimulation
+from repro.core.tasks import (ArchTask, LocalTask, PaperTask, arch_task,
+                              as_task)
+from repro.data.pipeline import TokenBatcher, load_task_datasets
+from repro.models import small
+
+
+def trace(res):
+    return [(h.iteration, h.client_id, h.lag, h.k_next) for h in res.history]
+
+
+def assert_trees_close(a, b, rtol=2e-5, atol=1e-7):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+#: tiny reduced arch shared by the runtime tests (1 layer, d_model 64,
+#: 16-token sequences) — seconds, not minutes, on CPU
+@pytest.fixture(scope="module")
+def tiny_arch():
+    return arch_task("h2o-danube-1.8b", seq_len=16, global_batch=2,
+                     num_layers=1, d_model=64)
+
+
+class TestCoercion:
+    def test_paper_config_coerces_and_is_hashable(self):
+        t = as_task(configs.SYNTHETIC_1_1)
+        assert isinstance(t, PaperTask)
+        assert t.name == "synthetic-1-1"
+        assert t.fed is configs.SYNTHETIC_1_1.fed
+        assert hash(t) == hash(as_task(configs.SYNTHETIC_1_1))
+
+    def test_localtask_passthrough(self, tiny_arch):
+        assert as_task(tiny_arch) is tiny_arch
+
+    def test_name_lookup(self):
+        assert as_task("synthetic-1-1").name == "synthetic-1-1"
+        t = as_task("arch-danube-smoke")      # configs.SCENARIOS entry
+        assert isinstance(t, ArchTask)
+        assert t.fed.client_engine == "cohort"
+        assert t.fed.batch_window == "auto"
+
+    def test_arch_scenario_carries_fed(self):
+        t = as_task(configs.ARCH_DANUBE_BUDGETED)
+        assert t.fed.memory_budget_mb == 64
+        assert t.fed.num_clients == 8
+
+    def test_rejects_garbage(self):
+        with pytest.raises(TypeError):
+            as_task(42)
+
+    def test_paper_task_matches_legacy_init_and_loss(self):
+        """The substrate wrapper must produce byte-identical params and
+        loss values to the direct small.* calls it replaced."""
+        cfg = configs.SYNTHETIC_1_1
+        t = as_task(cfg)
+        key = jax.random.PRNGKey(0)
+        p1 = t.init(key)
+        p2 = small.init_task_model(key, cfg)
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        train, (tx, ty) = load_task_datasets(cfg, seed=0)
+        batch = (tx[:8], ty[:8])
+        assert float(t.loss(p1, batch)) == float(
+            small.task_loss(cfg, p2, batch))
+
+
+class TestTokenBatcher:
+    def test_next_stacked_matches_k_next_calls(self, tiny_arch):
+        a = TokenBatcher(tiny_arch.cfg, tiny_arch.shape, seed=11)
+        b = TokenBatcher(tiny_arch.cfg, tiny_arch.shape, seed=11)
+        sx, sy = a.next_stacked(3)
+        singles = [b.next() for _ in range(3)]
+        np.testing.assert_array_equal(
+            sx["tokens"], np.stack([s[0]["tokens"] for s in singles]))
+        np.testing.assert_array_equal(
+            sy, np.stack([s[1] for s in singles]))
+        # generator state converged: the NEXT draw still agrees
+        np.testing.assert_array_equal(a.next()[0]["tokens"],
+                                      b.next()[0]["tokens"])
+
+    def test_labels_are_shifted_tokens(self, tiny_arch):
+        inputs, labels = TokenBatcher(tiny_arch.cfg, tiny_arch.shape,
+                                      seed=0).next()
+        np.testing.assert_array_equal(labels,
+                                      np.roll(inputs["tokens"], -1, axis=-1))
+
+    def test_vlm_patch_embeds(self):
+        t = arch_task("qwen2-vl-72b", seq_len=16, global_batch=2,
+                      num_layers=1, d_model=64)
+        inputs, _ = TokenBatcher(t.cfg, t.shape, seed=0).next()
+        assert "patch_embeds" in inputs
+        assert inputs["patch_embeds"].shape[0] == 2
+
+
+class TestBudgetPlanner:
+    """The fallback ladder on synthetic byte counts: full -> width clamp
+    -> K microbatches -> loop."""
+
+    FED = dataclasses.replace(configs.SYNTHETIC_1_1.fed,
+                              client_engine="cohort")
+
+    class FakeTask(LocalTask):
+        """Substrate stub with fixed footprint estimators (a LocalTask, so
+        as_task passes it straight through)."""
+        kind = "fake"
+
+        def batch_bytes(self, fed):
+            return 1000
+
+        def activation_bytes(self, fed):
+            return 0
+
+    def _plan(self, budget, clients=8, k=8, param_bytes=1000, prox_mu=0.0):
+        return plan_cohort(self.FakeTask(), self.FED, clients=clients, k=k,
+                           param_bytes=param_bytes, prox_mu=prox_mu,
+                           budget_bytes=budget)
+
+    def test_unlimited_budget_full_plan(self):
+        p = self._plan(0)
+        assert p.engine == "cohort" and p.width == 8 and p.k_chunk == 8
+        assert not p.constrained
+
+    def test_fits_within_budget(self):
+        # full footprint: 8 * (4*1000 + 8*1000) = 96_000
+        p = self._plan(96_000)
+        assert not p.constrained and p.est_bytes == 96_000
+
+    def test_width_clamps_first(self):
+        p = self._plan(50_000)
+        assert p.engine == "cohort" and p.width == 4 and p.k_chunk == 8
+        assert "width" in p.reason
+
+    def test_k_chunks_after_width(self):
+        # 2 clients * (4000 + k*1000): k=8 -> 24_000; budget 17_000 needs
+        # k_chunk <= 4 at width 2 (2 * (4000 + 4*1000) = 16_000)
+        p = self._plan(17_000)
+        assert p.engine == "cohort" and p.width == 2 and p.k_chunk == 4
+        assert "microbatch" in p.reason
+
+    def test_loop_fallback_below_two_client_chunk(self):
+        # width 2, k_chunk 1 still needs 2 * 5000 = 10_000
+        p = self._plan(9_000)
+        assert p.engine == "loop"
+        assert "loop" in p.reason
+
+    def test_fedprox_never_chunks_k(self):
+        p = self._plan(17_000, prox_mu=0.1)
+        assert p.k_chunk == 8 and p.engine == "loop"
+
+    def test_ragged_k_certifies_padded_bucket(self):
+        """The masked core pads ragged K to the power-of-two bucket, so a
+        ragged plan must budget the PADDED staged batches: max(ks)=9
+        stages 16 steps per client row."""
+        ragged = plan_cohort(self.FakeTask(), self.FED, clients=8, k=9,
+                             param_bytes=1000, ragged=True, budget_bytes=0)
+        uniform = plan_cohort(self.FakeTask(), self.FED, clients=8, k=9,
+                              param_bytes=1000, ragged=False,
+                              budget_bytes=0)
+        assert ragged.k_chunk == 16 and uniform.k_chunk == 9
+        # 8 * (4*1000 + 16*1000) vs 8 * (4*1000 + 9*1000)
+        assert ragged.full_bytes == 160_000
+        assert uniform.full_bytes == 104_000
+
+    def test_footprint_law(self):
+        assert cohort_footprint_bytes(10, 2, 3, clients=4, k_steps=5) == \
+            4 * (4 * 10 + 5 * 2 + 3)
+
+
+class TestChunkedCohortEquivalence:
+    """A plan's width/K chunking must be invisible: same deltas, losses,
+    and batcher RNG state as the per-client loop."""
+
+    def _clients(self, n, seed=0):
+        task = configs.SYNTHETIC_1_1
+        train_sets, _ = load_task_datasets(task, seed=seed)
+        return [Client(i, task, train_sets[i], task.fed, seed=seed)
+                for i in range(n)]
+
+    @pytest.mark.parametrize("ks", [[3, 7, 5, 1, 4], [6] * 5])
+    def test_width_and_k_chunked_matches_loop(self, ks):
+        task = configs.SYNTHETIC_1_1
+        params = small.init_task_model(jax.random.PRNGKey(0), task)
+        loop_c = self._clients(5)
+        plan_c = self._clients(5)
+        loop = [c.run_local(params, k, 1, 0.0)
+                for c, k in zip(loop_c, ks)]
+        plan = CohortPlan("cohort", width=2, k_chunk=2, est_bytes=0,
+                          full_bytes=0, budget_bytes=1, reason="forced")
+        coh = cohort.run_cohort(task, plan_c, params, ks, [1] * 5,
+                                plan=plan)
+        for (u1, l1), (u2, l2) in zip(loop, coh):
+            assert_trees_close(u1.delta, u2.delta)
+            assert abs(l1 - l2) < 1e-5
+        for a, b in zip(loop_c, plan_c):
+            assert (a.batcher.rng.bit_generator.state
+                    == b.batcher.rng.bit_generator.state)
+
+    def test_momentum_carry_across_chunked_rounds(self):
+        task = configs.SYNTHETIC_1_1
+        params = small.init_task_model(jax.random.PRNGKey(0), task)
+        loop_c = self._clients(3, seed=5)
+        plan_c = self._clients(3, seed=5)
+        plan = CohortPlan("cohort", width=2, k_chunk=1, est_bytes=0,
+                          full_bytes=0, budget_bytes=1, reason="forced")
+        for rnd in (1, 2):
+            loop = [c.run_local(params, 3, rnd, 0.0) for c in loop_c]
+            coh = cohort.run_cohort(task, plan_c, params, [3] * 3,
+                                    [rnd] * 3, plan=plan)
+            for (u1, _), (u2, _) in zip(loop, coh):
+                assert_trees_close(u1.delta, u2.delta)
+        assert all(c.round_idx == 2 for c in plan_c)
+
+
+class TestArchRuntime:
+    """The acceptance path: a reduced ArchTask through FederatedSimulation
+    on loop, cohort, and cohort_sharded with matching event traces, plus
+    the forced-low-budget fallback."""
+
+    def _run(self, tiny_arch, engine, budget=0.0, algorithm="asyncfeded",
+             **fed_over):
+        fed = dataclasses.replace(tiny_arch.fed, num_clients=3,
+                                  k_initial=2, client_engine=engine,
+                                  memory_budget_mb=budget, **fed_over)
+        sim = FederatedSimulation(tiny_arch, fed, algorithm, seed=0)
+        return sim, sim.run(max_time=float("inf"), max_updates=6)
+
+    def test_engines_agree_on_event_trace(self, tiny_arch):
+        _, rl = self._run(tiny_arch, "loop")
+        _, rc = self._run(tiny_arch, "cohort")
+        _, rs = self._run(tiny_arch, "cohort_sharded")
+        assert rl.total_updates == rc.total_updates == rs.total_updates == 6
+        assert trace(rl) == trace(rc) == trace(rs)
+        for other in (rc, rs):
+            np.testing.assert_allclose([h.gamma for h in rl.history],
+                                       [h.gamma for h in other.history],
+                                       rtol=1e-4, atol=1e-5)
+            np.testing.assert_allclose([p.loss for p in rl.points],
+                                       [p.loss for p in other.points],
+                                       rtol=1e-4, atol=1e-5)
+
+    def test_forced_low_budget_triggers_fallback(self, tiny_arch):
+        """A 1 MiB budget is far below the tiny arch's ~8 MiB stacked
+        footprint: the planner must leave the full-width cohort, and the
+        run must still match the unconstrained one."""
+        _, rc = self._run(tiny_arch, "cohort")
+        sim, rb = self._run(tiny_arch, "cohort", budget=1.0)
+        plan = rb.plan
+        assert plan is not None
+        assert plan["engine"] == "loop" or plan["width"] < 4 \
+            or plan["k_chunk"] < 2
+        assert plan["budget_bytes"] == 2 ** 20
+        assert plan["est_bytes"] <= plan["full_bytes"]
+        assert rb.summary()["plan"] == plan        # reported to drivers
+        assert trace(rb) == trace(rc)
+        np.testing.assert_allclose([h.gamma for h in rb.history],
+                                   [h.gamma for h in rc.history],
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_finalize_fires_on_arch_path(self, tiny_arch):
+        """Regression (pre-substrate run_arch_federated never called
+        server.finalize): a FedBuff run whose buffer cannot fill must
+        still flush at end of run."""
+        sim, res = self._run(tiny_arch, "cohort", algorithm="fedbuff",
+                             fedbuff_size=64)
+        assert sim.server.buffer == []             # finalize flushed it
+        assert len(res.history) == 1
+        assert res.history[-1].client_id == -1
+
+    def test_eval_metrics_shapes(self, tiny_arch):
+        params = tiny_arch.init(jax.random.PRNGKey(0))
+        batch = TokenBatcher(tiny_arch.cfg, tiny_arch.shape, seed=3).next()
+        acc, loss = jax.jit(tiny_arch.eval_metrics)(params, batch)
+        assert 0.0 <= float(acc) <= 1.0
+        assert float(loss) > 0.0
+
+
+class TestArchWrapper:
+    """run_arch_federated is now a thin FederatedSimulation wrapper —
+    behavior models, auto window, finalize, SimResult all apply."""
+
+    def test_wrapper_smoke_and_keys(self):
+        from repro.launch.train import run_arch_federated
+        out = run_arch_federated("h2o-danube-1.8b", steps=2, num_clients=2,
+                                 k_local=1, seed=0, d_model=64, seq_len=16,
+                                 num_layers=1)
+        assert out["updates"] >= 2
+        assert {"losses", "wall_s", "first_loss", "last_loss", "history",
+                "summary"} <= set(out)
+        assert out["summary"]["algorithm"] == "asyncfeded"
+        ks = [h["k_next"] for h in out["history"]]
+        assert all(k >= 1 for k in ks)
