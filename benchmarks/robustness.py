@@ -1,11 +1,26 @@
-"""Paper Fig. 3: robustness against client suspension — max accuracy reached
-within a time budget, and time to 90% of max accuracy, vs suspension
-probability P."""
+"""Robustness benchmarks.
+
+``run()`` — paper Fig. 3: robustness against client suspension — max
+accuracy reached within a time budget, and time to 90% of max accuracy,
+vs suspension probability P.
+
+``run_matrix()`` — the adversarial scenario matrix (DESIGN.md §11):
+client-behavior models x attack models x norm-screen policies x server
+backends x client engines, every cell one seeded simulation. The three
+headline rows (clean / attacked-unscreened / attacked-norm-reject on the
+paper behavior) also land in the JSON under ``"recovery"`` with the
+recovered fraction of clean max accuracy per backend — the number the
+smoke test asserts. ``--smoke`` shrinks the matrix to exactly those
+rows (plus the pallas replicas) for CI.
+"""
 from __future__ import annotations
+
+import argparse
+import dataclasses
 
 from benchmarks.common import emit, save_json, summarize_runs
 from repro import configs
-from repro.core.simulator import run_comparison
+from repro.core.simulator import FederatedSimulation, run_comparison
 
 ALGORITHMS = ["asyncfeded", "fedavg", "fedasync+constant", "fedasync+hinge"]
 
@@ -31,5 +46,130 @@ def run(task_name: str = "synthetic-1-1",
     return out
 
 
+# ------------------------------------------------------ adversarial matrix --
+
+#: the acceptance scenario (ISSUE: 20% sign-flip cohort on the paper
+#: synthetic task): norm-reject AsyncFedED must recover >= this fraction
+#: of the clean run's max accuracy while the unscreened run degrades.
+RECOVERY_FLOOR = 0.9
+
+SMOKE = dict(behaviors=("paper",), attacks=("none", "sign-flip"),
+             screens=("off", "reject"), backends=("pytree", "pallas"),
+             engines=("loop",))
+
+
+def _cell_fed(fed, *, behavior, attack, screen, backend, engine,
+              attack_frac, suspension_prob):
+    kw = dict(client_behavior=behavior, attack=attack, screen=screen,
+              backend=backend, client_engine=engine,
+              suspension_prob=suspension_prob,
+              attack_frac=attack_frac if attack != "none" else 0.0)
+    if screen != "off":
+        kw["screen_warmup"] = 5
+    if engine != "loop":
+        # cohort fan-outs only form when drains batch; the autotuned
+        # window also routes screening through the batched Gram sweep
+        kw["batch_window"] = "auto"
+    return dataclasses.replace(fed, **kw)
+
+
+def run_matrix(task_name: str = "synthetic-1-1", *,
+               behaviors=("paper", "flash-crowd", "straggler-tail"),
+               attacks=("none", "sign-flip", "scale"),
+               screens=("off", "reject"),
+               backends=("pytree", "pallas"),
+               engines=("loop",),
+               attack_frac: float = 0.2, seed: int = 3,
+               max_time: float = 2.0, suspension_prob: float = 0.1,
+               smoke: bool = False) -> dict:
+    """One seeded simulation per (behavior, attack, screen, backend,
+    engine) cell; identical attacked streams across backends/engines by
+    construction (corruption happens at delta emission). Returns/saves
+    ``{"rows": {...}, "recovery": {...}}``."""
+    if smoke:
+        behaviors, attacks, screens, backends, engines = (
+            SMOKE["behaviors"], SMOKE["attacks"], SMOKE["screens"],
+            SMOKE["backends"], SMOKE["engines"])
+    task = configs.PAPER_TASKS[task_name]
+    rows = {}
+    for behavior in behaviors:
+        for attack in attacks:
+            for screen in screens:
+                if attack == "none" and screen != "off" and smoke:
+                    continue     # smoke needs only the 3 headline rows
+                for backend in backends:
+                    for engine in engines:
+                        fed = _cell_fed(
+                            task.fed, behavior=behavior, attack=attack,
+                            screen=screen, backend=backend, engine=engine,
+                            attack_frac=attack_frac,
+                            suspension_prob=suspension_prob)
+                        sim = FederatedSimulation(task, fed, "asyncfeded",
+                                                  seed=seed)
+                        res = sim.run(max_time=max_time)
+                        key = "/".join((behavior, attack, screen, backend,
+                                        engine))
+                        s = res.summary()
+                        rows[key] = {
+                            "max_acc": s["max_acc"],
+                            "final_acc": s["final_acc"],
+                            "updates": s["updates"],
+                            "screen": s.get("screen"),
+                            "attack": s.get("attack"),
+                        }
+                        emit(f"robustness-matrix/{key}", 0.0,
+                             f"max_acc={s['max_acc']:.4f}")
+    recovery = {}
+    for backend in backends:
+        clean = rows.get(f"paper/none/off/{backend}/{engines[0]}")
+        att = rows.get(f"paper/sign-flip/off/{backend}/{engines[0]}")
+        rej = rows.get(f"paper/sign-flip/reject/{backend}/{engines[0]}")
+        if clean and att and rej and clean["max_acc"] > 0:
+            recovery[backend] = {
+                "clean_max_acc": clean["max_acc"],
+                "attacked_max_acc": att["max_acc"],
+                "rejected_max_acc": rej["max_acc"],
+                "recovered_frac": rej["max_acc"] / clean["max_acc"],
+                "attacked_frac": att["max_acc"] / clean["max_acc"],
+                "floor": RECOVERY_FLOOR,
+            }
+            emit(f"robustness-matrix/recovery/{backend}", 0.0,
+                 f"recovered={recovery[backend]['recovered_frac']:.3f} "
+                 f"attacked={recovery[backend]['attacked_frac']:.3f}")
+    out = {"rows": rows, "recovery": recovery,
+           "config": {"task": task_name, "seed": seed,
+                      "max_time": max_time, "attack_frac": attack_frac,
+                      "suspension_prob": suspension_prob}}
+    save_json("robustness_matrix", out)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="headline rows only (CI subset)")
+    ap.add_argument("--suspension", action="store_true",
+                    help="run the Fig. 3 suspension sweep instead")
+    ap.add_argument("--behaviors", default=None)
+    ap.add_argument("--attacks", default=None)
+    ap.add_argument("--screens", default=None)
+    ap.add_argument("--backends", default=None)
+    ap.add_argument("--engines", default=None)
+    ap.add_argument("--max-time", type=float, default=2.0)
+    ap.add_argument("--seed", type=int, default=3)
+    args = ap.parse_args()
+    if args.suspension:
+        run()
+        return
+    kw = {}
+    for name in ("behaviors", "attacks", "screens", "backends", "engines"):
+        val = getattr(args, name)
+        if val:
+            kw[name] = tuple(val.split(","))
+    print("name,us_per_call,derived")
+    run_matrix(smoke=args.smoke, max_time=args.max_time, seed=args.seed,
+               **kw)
+
+
 if __name__ == "__main__":
-    run()
+    main()

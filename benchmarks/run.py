@@ -13,6 +13,8 @@ artifacts/bench/.
   §9      -> arrival_bench.run() (behavior models x drain-window policies)
   §10     -> arch_bench.run()   (loop vs cohort on a reduced assigned arch,
                                  plus the memory-budget fallback row)
+  §11     -> robustness.run_matrix() (behavior x attack x screen x backend
+                                 x engine adversarial matrix)
 
 ``--quick`` shrinks virtual-time budgets for CI-style runs; ``--full``
 reproduces the paper-scale sweep (all 3 tasks, longer horizon).
@@ -31,7 +33,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: convergence,robustness,"
                          "adaptive_k,theory,roofline,kernel,client,arrival,"
-                         "arch")
+                         "arch,adversarial")
     args = ap.parse_args()
 
     max_time = 20.0 if args.quick else (90.0 if args.full else 45.0)
@@ -76,6 +78,11 @@ def main() -> None:
         from benchmarks import arch_bench
         arch_bench.run(steps=4 if args.quick else 8,
                        clients=4 if args.quick else 8)
+    if want("adversarial"):
+        from benchmarks import robustness
+        # §11 adversarial matrix: headline rows under --quick, the wider
+        # behavior x attack x screen sweep otherwise
+        robustness.run_matrix(smoke=args.quick)
     print(f"# total benchmark wall time: {time.time() - t0:.1f}s",
           file=sys.stderr)
 

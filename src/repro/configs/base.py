@@ -189,7 +189,17 @@ CLIENT_ENGINES: Tuple[str, ...] = ("loop", "cohort", "cohort_sharded")
 #: Valid values of ``FedConfig.client_behavior`` (DESIGN.md §9) — mirrors
 #: ``repro.core.behavior.BEHAVIORS`` for the same fail-fast reason.
 CLIENT_BEHAVIORS: Tuple[str, ...] = ("paper", "trace", "poisson-burst",
-                                     "diurnal")
+                                     "diurnal", "flash-crowd",
+                                     "straggler-tail")
+
+#: Valid values of ``FedConfig.attack`` (DESIGN.md §11) — mirrors
+#: ``repro.core.adversary.ATTACK_FNS`` plus the benign default.
+ATTACKS: Tuple[str, ...] = ("none", "sign-flip", "gaussian-noise", "scale",
+                            "zero")
+
+#: Valid values of ``FedConfig.screen`` (DESIGN.md §11) — what the server
+#: does with an arriving delta whose norm exceeds k×EWMA.
+SCREEN_POLICIES: Tuple[str, ...] = ("off", "clip", "reject")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -265,6 +275,21 @@ class FedConfig:
     # window by threshold/ewma once the EWMA drifts above this threshold
     # (events.AutoWindow gamma_threshold). 0 disables the term.
     window_gamma_threshold: float = 0.0
+    # adversarial scenario layer (DESIGN.md §11). ``attack`` corrupts the
+    # deltas of round(attack_frac * num_clients) clients at emission time
+    # (repro.core.adversary); "none" builds no adversary and leaves every
+    # RNG stream untouched. attack_params is a hashable (name, value)
+    # tuple of attack-specific knobs (e.g. (("strength", 10.0),)).
+    attack: str = "none"
+    attack_frac: float = 0.0
+    attack_params: Tuple[Tuple[str, float], ...] = ()
+    # server-side norm screening (repro.core.screening): "off" (default,
+    # byte-identical traces), "clip" (scale oversized deltas down to
+    # k×EWMA), "reject" (drop them; the iteration counter does not move).
+    screen: str = "off"
+    screen_k: float = 3.0           # threshold multiple of the norm EWMA
+    screen_alpha: float = 0.2       # EWMA step on accepted norms
+    screen_warmup: int = 8          # arrivals before the median-seeded EWMA
     # device-memory budget for one cohort fan-out dispatch, in MiB
     # (DESIGN.md §10). 0 = unlimited. When the shapes-based footprint
     # estimate exceeds it, the planner (repro.core.budget) clamps the
@@ -296,6 +321,27 @@ class FedConfig:
             raise ValueError(
                 f"memory_budget_mb must be >= 0 (0 = unlimited), got "
                 f"{self.memory_budget_mb!r}")
+        if self.attack not in ATTACKS:
+            raise ValueError(
+                f"unknown attack {self.attack!r}: expected one of "
+                f"{ATTACKS} (see DESIGN.md §11)")
+        if not 0.0 <= self.attack_frac <= 1.0:
+            raise ValueError(
+                f"attack_frac must be in [0, 1], got {self.attack_frac!r}")
+        if self.screen not in SCREEN_POLICIES:
+            raise ValueError(
+                f"unknown screen policy {self.screen!r}: expected one of "
+                f"{SCREEN_POLICIES} (see DESIGN.md §11)")
+        if self.screen_k <= 0:
+            raise ValueError(
+                f"screen_k must be > 0, got {self.screen_k!r}")
+        if not 0.0 < self.screen_alpha <= 1.0:
+            raise ValueError(
+                f"screen_alpha must be in (0, 1], got "
+                f"{self.screen_alpha!r}")
+        if self.screen_warmup < 1:
+            raise ValueError(
+                f"screen_warmup must be >= 1, got {self.screen_warmup!r}")
 
 
 @dataclasses.dataclass(frozen=True)

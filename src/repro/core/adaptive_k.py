@@ -14,7 +14,12 @@ import math
 
 def update_k(k: int, gamma: float, gamma_bar: float, kappa: float,
              k_min: int = 1, k_max: int = 10_000) -> int:
-    """One controller step. E[.] is the floor function (paper notation)."""
+    """One controller step. E[.] is the floor function (paper notation).
+    A non-finite gamma (a diverged/corrupted model yields NaN or inf
+    Euclidean distances) leaves K unchanged instead of crashing the
+    controller — the integrator must survive adversarial runs."""
+    if not math.isfinite(gamma):
+        return int(min(max(k, k_min), k_max))
     delta = math.floor((gamma_bar - gamma) * kappa)
     return int(min(max(k + delta, k_min), k_max))
 

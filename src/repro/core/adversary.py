@@ -1,0 +1,122 @@
+"""Attack models for the adversarial scenario layer (DESIGN.md §11).
+
+A configurable fraction of clients is byzantine: every delta they emit is
+corrupted *at emission time*, in the simulator's dispatch path — after
+local training, before the event queue — so every client engine (loop /
+cohort / cohort_sharded) and both server backends see the identical
+attacked stream for a given seed. Honest clients' deltas pass through
+untouched, and with ``attack="none"`` (the default) no adversary object
+exists at all: the simulator's event traces replay byte-identically.
+
+Registry (names mirrored by ``configs.base.ATTACKS``):
+
+* ``sign-flip``      — Delta -> -strength * Delta (the scaled sign-flip /
+  reversed-gradient attack; strength > 1 makes the attack visible to norm
+  screening, strength = 1 is the classic norm-preserving flip);
+* ``gaussian-noise`` — Delta -> Delta + sigma * N(0, I) with sigma scaled
+  to ``noise_scale`` times the delta's RMS entry, so the attack tracks the
+  task's natural update magnitude;
+* ``scale``          — Delta -> boost * Delta (model-replacement style
+  amplification, Bagdasaryan et al.);
+* ``zero``           — Delta -> 0 (free-rider: participates, contributes
+  nothing, drags the norm EWMA downward).
+
+Attacks draw from their own PCG64 stream (derived from the run seed), so
+enabling a deterministic attack never perturbs the timing or data RNGs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ATTACKS, FedConfig
+from repro.utils import pytree as pt
+
+PyTree = Any
+
+#: offset folded into the run seed for the adversary's private RNG stream
+_SEED_SALT = 777_767
+
+
+def _sign_flip(delta: PyTree, rng: np.random.Generator, *,
+               strength: float = 10.0) -> PyTree:
+    return pt.tree_scale(delta, -float(strength))
+
+
+def _gaussian_noise(delta: PyTree, rng: np.random.Generator, *,
+                    noise_scale: float = 10.0) -> PyTree:
+    n = max(pt.tree_size(delta), 1)
+    rms = float(np.sqrt(float(pt.tree_sq_norm(delta)) / n))
+    sigma = float(noise_scale) * max(rms, 1e-8)
+
+    def noisy(leaf):
+        arr = np.asarray(leaf)
+        return arr + rng.normal(0.0, sigma, arr.shape).astype(arr.dtype)
+
+    return jax.tree.map(noisy, delta)
+
+
+def _scale(delta: PyTree, rng: np.random.Generator, *,
+           boost: float = 10.0) -> PyTree:
+    return pt.tree_scale(delta, float(boost))
+
+
+def _zero(delta: PyTree, rng: np.random.Generator) -> PyTree:
+    return pt.tree_zeros_like(delta)
+
+
+#: attack name -> corruption fn(delta, rng, **params). Keys mirror
+#: ``configs.base.ATTACKS`` minus "none" (checked by tests).
+ATTACK_FNS = {
+    "sign-flip": _sign_flip,
+    "gaussian-noise": _gaussian_noise,
+    "scale": _scale,
+    "zero": _zero,
+}
+
+
+class Adversary:
+    """The byzantine cohort for one run: a fixed set of corrupted client
+    ids (drawn once from the adversary's private stream) and the attack
+    applied to every delta they emit."""
+
+    def __init__(self, fed: FedConfig, *, seed: int):
+        if fed.attack not in ATTACK_FNS:
+            raise ValueError(f"unknown attack {fed.attack!r}: expected one "
+                             f"of {ATTACKS}")
+        self.attack = fed.attack
+        self.fn = ATTACK_FNS[fed.attack]
+        self.params = dict(fed.attack_params)
+        self.rng = np.random.default_rng(seed + _SEED_SALT)
+        n_adv = int(round(fed.attack_frac * fed.num_clients))
+        ids = self.rng.choice(fed.num_clients, size=n_adv, replace=False)
+        self.corrupt_ids = frozenset(int(i) for i in ids)
+        self.applied = 0
+
+    def corrupt(self, upd):
+        """Corrupt one emitted ClientUpdate (returns a new record; honest
+        clients' updates pass through untouched)."""
+        if upd.client_id not in self.corrupt_ids:
+            return upd
+        self.applied += 1
+        return dataclasses.replace(
+            upd, delta=self.fn(upd.delta, self.rng, **self.params))
+
+    def stats(self) -> dict:
+        return {"attack": self.attack,
+                "corrupt_clients": sorted(self.corrupt_ids),
+                "applied": self.applied}
+
+
+def make_adversary(fed: FedConfig, *, seed: int) -> Optional[Adversary]:
+    """Build the run's adversary, or None when the config is benign —
+    ``attack="none"``, a zero fraction, or a fraction that rounds to zero
+    clients all mean no adversary object and an untouched RNG universe."""
+    if fed.attack == "none" or fed.attack_frac <= 0.0:
+        return None
+    if int(round(fed.attack_frac * fed.num_clients)) == 0:
+        return None
+    return Adversary(fed, seed=seed)

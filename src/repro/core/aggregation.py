@@ -67,7 +67,7 @@ def gamma_eta_from_sq(dist_sq: jax.Array, dn_sq: jax.Array, lam: float,
 
 
 def sequential_batch_schedule(dist0_sq, dn_sq, cross, gram, *, lam: float,
-                              eps: float, cap: float = 0.0):
+                              eps: float, cap: float = 0.0, scales=None):
     """Host-side O(B^2) recursion that makes the batched kernel path
     *sequentially equivalent* to B one-at-a-time Eq.(5-7) steps.
 
@@ -82,13 +82,24 @@ def sequential_batch_schedule(dist0_sq, dn_sq, cross, gram, *, lam: float,
     in order from those B^2 scalars with no further passes over the
     parameter vector; accumulated in f64 to keep the expansion stable.
 
-    Returns (etas, gammas, dists, dnorms) as f32 numpy arrays of shape (B,).
+    ``scales`` (optional, shape (B,)) are norm-screening multipliers on the
+    raw deltas: update i effectively applies ``etas[i] * d_i`` with
+    ``etas[i]`` already folded with its scale — 0 for a rejected update
+    (it moves nothing, gamma reported NaN), ``thr/||d_i||`` for a clipped
+    one. Since ``||s d|| = s ||d||`` and every cross/Gram term is linear
+    per delta, screening is exact inside the same B^2 scalars.
+
+    Returns (etas, gammas, dists, dnorms) as f32 numpy arrays of shape (B,)
+    — etas are the effective multipliers on the RAW deltas (what the apply
+    sweep uses), dnorms the raw kernel-emitted norms.
     """
     d0 = np.asarray(dist0_sq, np.float64)
     dn = np.sqrt(np.maximum(np.asarray(dn_sq, np.float64), 0.0))
     c = np.asarray(cross, np.float64)
     g = np.asarray(gram, np.float64)
     b = d0.shape[0]
+    sc = (np.ones(b) if scales is None
+          else np.asarray(scales, np.float64))
     etas = np.zeros(b)
     gammas = np.zeros(b)
     dists = np.zeros(b)
@@ -97,10 +108,14 @@ def sequential_batch_schedule(dist0_sq, dn_sq, cross, gram, *, lam: float,
     s = 0.0                  # || sum_{k applied} eta_k d_k ||^2
     for i in range(b):
         dist = np.sqrt(max(d0[i] + 2.0 * cdot[i] + s, 0.0))
-        gamma = 0.0 if dist <= _TINY else dist / max(dn[i], _TINY)
+        if sc[i] == 0.0:     # rejected: contributes nothing to the model
+            etas[i], gammas[i], dists[i] = 0.0, float("nan"), dist
+            continue
+        dn_i = dn[i] * sc[i]             # staleness of the CLIPPED delta
+        gamma = 0.0 if dist <= _TINY else dist / max(dn_i, _TINY)
         if cap > 0.0:
             gamma = min(gamma, cap)
-        eta = lam / (gamma + eps)
+        eta = lam / (gamma + eps) * sc[i]     # effective, on the raw delta
         s += 2.0 * eta * gdot[i] + eta * eta * g[i, i]
         cdot += eta * c[:, i]
         gdot += eta * g[:, i]

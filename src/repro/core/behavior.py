@@ -88,10 +88,17 @@ class ClientBehavior:
     def dispatch(self, client_id: int, k: int, now: float) -> Optional[float]:
         """One fan-out: duration until arrival, or ``None`` if the client
         drops out permanently. Churn/dropout draw from the RNG only when
-        their knobs are nonzero (paper-stream preservation)."""
-        dur = self.duration(client_id, k, now)
+        their knobs are nonzero (paper-stream preservation).
+
+        The dropout draw happens BEFORE the duration draw: a permanently
+        departed client must not consume trace-cursor entries or
+        timing-RNG draws, or every surviving client's replay stream
+        desynchronizes from a dropout-free run of the same trace. With
+        default knobs (dropout = churn = 0) neither guard draws, so the
+        paper model's byte-identical stream is unaffected by the order."""
         if self.dropout_prob and self.rng.random() < self.dropout_prob:
             return None
+        dur = self.duration(client_id, k, now)
         if self.churn_prob and self.rng.random() < self.churn_prob:
             dur += self.rng.exponential(self.churn_scale * BASE_STEP_TIME * k)
         return dur
@@ -205,11 +212,63 @@ class DiurnalBehavior(ClientBehavior):
         return (down + compute / self.rate(now) + self._tx_time())
 
 
+class FlashCrowdBehavior(ClientBehavior):
+    """Synchronized arrival waves: clients compute at their natural §B.2
+    pace but their uploads all land within ``crowd_span`` seconds of the
+    next global wave boundary (period ``wave_period``) — think a push
+    notification waking a fleet at once. Inter-arrival density alternates
+    between near-zero gaps inside a crowd and a near-full period of
+    silence between crowds, the exact regime the auto-window controller's
+    inter-arrival EWMA is worst at tracking (DESIGN.md §11)."""
+
+    name = "flash-crowd"
+
+    def __init__(self, fed: FedConfig, *, wave_period: float = 0.5,
+                 crowd_span: float = 0.005, **kw):
+        super().__init__(fed, **kw)
+        assert wave_period > 0 and crowd_span >= 0, (wave_period, crowd_span)
+        self.wave_period = float(wave_period)
+        self.crowd_span = float(crowd_span)
+
+    def duration(self, client_id: int, k: int, now: float) -> float:
+        natural = (self._tx_time() + k * self.step_time[client_id]
+                   + self._tx_time())
+        ready = now + natural
+        wave = math.ceil(ready / self.wave_period) * self.wave_period
+        return (wave - now) + self.rng.uniform(0.0, self.crowd_span)
+
+
+class StragglerTailBehavior(ClientBehavior):
+    """Heavy-tailed stragglers: most rounds run at the natural §B.2 pace,
+    but with probability ``tail_prob`` a round's duration is multiplied by
+    ``1 + Pareto(tail_alpha)`` — an unbounded tail (infinite variance for
+    ``tail_alpha <= 2``). A handful of extreme stragglers keeps arriving
+    with enormous staleness long after the window controller's EWMA has
+    settled on the fast majority's cadence (DESIGN.md §11)."""
+
+    name = "straggler-tail"
+
+    def __init__(self, fed: FedConfig, *, tail_alpha: float = 1.5,
+                 tail_prob: float = 0.1, **kw):
+        super().__init__(fed, **kw)
+        assert tail_alpha > 0 and 0.0 <= tail_prob <= 1.0, (tail_alpha,
+                                                            tail_prob)
+        self.tail_alpha = float(tail_alpha)
+        self.tail_prob = float(tail_prob)
+
+    def duration(self, client_id: int, k: int, now: float) -> float:
+        base = (self._tx_time() + k * self.step_time[client_id]
+                + self._tx_time())
+        if self.rng.random() < self.tail_prob:
+            base *= 1.0 + self.rng.pareto(self.tail_alpha)
+        return base
+
+
 #: behavior name -> class; ``configs.base.CLIENT_BEHAVIORS`` mirrors the
 #: keys so FedConfig can fail fast without importing this module.
 BEHAVIORS = {cls.name: cls for cls in
              (PaperBehavior, TraceBehavior, PoissonBurstBehavior,
-              DiurnalBehavior)}
+              DiurnalBehavior, FlashCrowdBehavior, StragglerTailBehavior)}
 
 
 def make_behavior(name: str, fed: FedConfig, *, seed: int, model_bytes: int,

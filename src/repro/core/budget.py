@@ -62,9 +62,21 @@ class CohortPlan:
         return dataclasses.asdict(self)
 
 
+def _pod_count(fed: FedConfig, clients: int) -> int:
+    """Pods the sharded engine will actually split this fan-out over: 1
+    for the single-device engines; otherwise what the pod mesh yields for
+    the padded client bucket (lazy import — the planner stays usable with
+    no device backend in sight for the other engines)."""
+    if fed.client_engine != "cohort_sharded":
+        return 1
+    from repro.launch import mesh
+    return max(1, mesh.pod_count(max_pods=_bucket(max(clients, 1))))
+
+
 def plan_cohort(task, fed: FedConfig, *, clients: int, k: int,
                 param_bytes: int, prox_mu: float = 0.0, ragged: bool = False,
-                budget_bytes: Optional[int] = None) -> CohortPlan:
+                budget_bytes: Optional[int] = None,
+                pods: Optional[int] = None) -> CohortPlan:
     """Plan one fan-out of ``clients`` clients x ``k`` local steps.
 
     ``ragged`` means per-client K values differ: the executor then pads
@@ -73,15 +85,27 @@ def plan_cohort(task, fed: FedConfig, *, clients: int, k: int,
     raw maximum. ``budget_bytes`` overrides ``fed.memory_budget_mb``
     (tests); 0 means unlimited and always yields the full single-dispatch
     plan.
+
+    Under ``client_engine="cohort_sharded"`` the stacked width is split
+    across ``pods`` mesh pods by shard_map, so (a) the per-DEVICE budget
+    is only charged ``width / pods`` client rows, and (b) the
+    width-halving ladder must stop at the pod count — shard_map cannot
+    place a stack narrower than one row per pod. ``pods`` overrides the
+    mesh-derived count (tests plan for fake meshes without devices).
     """
     task = tasks.as_task(task)
     if budget_bytes is None:
         budget_bytes = int(fed.memory_budget_mb * 2 ** 20)
+    if pods is None:
+        pods = _pod_count(fed, clients)
+    pods = max(1, int(pods))
     bb = task.batch_bytes(fed)
     ab = task.activation_bytes(fed)
 
     def fp(width: int, k_chunk: int) -> int:
-        return cohort_footprint_bytes(param_bytes, bb, ab, width, k_chunk)
+        # per-device footprint: each pod holds width/pods client rows
+        per_pod = max(1, -(-int(width) // pods))     # ceil division
+        return cohort_footprint_bytes(param_bytes, bb, ab, per_pod, k_chunk)
 
     width = _bucket(max(clients, 1))
     k_chunk = max(int(k), 1)
@@ -92,8 +116,11 @@ def plan_cohort(task, fed: FedConfig, *, clients: int, k: int,
     if budget_bytes <= 0 or full <= budget_bytes:
         return CohortPlan(engine, width, k_chunk, full, full, budget_bytes)
 
+    # shard_map needs >= 1 client row per pod; the single-device engines
+    # keep the historical 2-client floor
+    width_floor = max(2, pods)
     reasons = []
-    while width > 2 and fp(width, k_chunk) > budget_bytes:
+    while width > width_floor and fp(width, k_chunk) > budget_bytes:
         width //= 2
     if fp(width, k_chunk) <= budget_bytes:
         reasons.append(f"vmap width clamped to {width}")
@@ -106,9 +133,10 @@ def plan_cohort(task, fed: FedConfig, *, clients: int, k: int,
             reasons.append(f"vmap width clamped to {width}, "
                            f"K-scan split into {k_chunk}-step microbatches")
     if fp(width, k_chunk) > budget_bytes:
-        # even a 2-client stacked chunk overflows: demote to the loop
+        # even the narrowest placeable stacked chunk overflows: demote to
+        # the loop
         engine = "loop"
-        reasons.append("budget below a 2-client cohort chunk: "
+        reasons.append(f"budget below a {width_floor}-client cohort chunk: "
                        "falling back to the per-client loop")
     return CohortPlan(engine, width, k_chunk, fp(width, k_chunk), full,
                       budget_bytes, reason="; ".join(reasons))

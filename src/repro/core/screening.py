@@ -1,0 +1,188 @@
+"""Server-side norm screening — the byzantine defense layer (DESIGN.md §11).
+
+AsyncFedED's adaptive weight eta_g (Eq. 5-7) trusts every arriving delta:
+a corrupted update with an exploded norm moves the global model by design
+(eta shrinks only like 1/gamma while the applied step grows like
+eta * ||Delta||, which is bounded below by dist-driven terms but unbounded
+above in ||Delta||). The natural screening statistic is the same ||Delta||
+the fedagg kernels already emit in their norms sweep, so the defense costs
+one scalar comparison per arrival.
+
+:class:`NormScreen` keeps a **per-client** EWMA of accepted update norms
+and flags any arrival whose norm exceeds ``k * ewma[client]``:
+
+* ``"clip"``   — scale the delta down to the threshold (norm-preserving
+  direction, bounded magnitude);
+* ``"reject"`` — drop the update entirely: the model and iteration counter
+  do not move, the client just resumes from the current model.
+
+The baseline is per-client rather than global because honest delta norms
+on the paper's non-IID tasks spread over ~two orders of magnitude across
+clients (power-law sample counts x adaptive K): no single global
+threshold separates "an amplified attack on a small client" from "a
+naturally large honest update", and a global EWMA dragged low by small
+clients permanently locks out the large honest ones (rejected norms never
+feed the EWMA, so lockout self-reinforces). Against each client's own
+history, a norm-amplified corruption is always an outlier.
+
+Robustness details that matter:
+
+* the bootstrap reference is the **median** of the first ``warmup``
+  arrivals, so a minority of adversarial norms in the warmup window
+  cannot poison the baseline;
+* the warmup window itself screens **provisionally** once two samples
+  exist, against ``k * median`` of the norms collected so far — otherwise
+  a single amplified update landing among the first arrivals (when
+  gamma is small and eta ~ lam/eps applies it at full strength) poisons
+  the model before any threshold exists. Provisionally flagged norms stay
+  out of the warmup buffer;
+* a client with no baseline yet (first contact after warmup) is screened
+  against ``k * max(known baselines, bootstrap)`` — the loosest honest
+  scale on record — so heterogeneous honest newcomers are never locked
+  out while grossly amplified first contacts are still caught;
+* only **accepted** norms update a baseline — if clipped/rejected norms
+  fed it, a sustained attack would ratchet the threshold upward until the
+  attack passes.
+
+Screening is decided in arrival order (the baselines are stateful), which
+is why the batched drain path hands this object the kernel-emitted norms
+of a burst plus the matching client ids and receives per-update scale
+factors back (:meth:`NormScreen.decide_batch`).
+"""
+from __future__ import annotations
+
+from typing import Dict, Hashable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import SCREEN_POLICIES, FedConfig
+
+#: verdict -> delta multiplier semantics: "accept" applies the delta as-is,
+#: "clip" applies scale * delta with scale = threshold / norm in (0, 1),
+#: "reject" applies nothing (scale 0).
+VERDICTS = ("accept", "clip", "reject")
+
+
+class NormScreen:
+    """k x EWMA delta-norm screen with per-client baselines. ``observe``
+    consumes one arriving ||Delta|| (in arrival order) and returns
+    ``(verdict, scale)``."""
+
+    def __init__(self, policy: str, *, k: float = 3.0, alpha: float = 0.2,
+                 warmup: int = 8):
+        if policy not in ("clip", "reject"):
+            raise ValueError(f"screen policy must be 'clip' or 'reject', "
+                             f"got {policy!r}")
+        if k <= 0 or not (0.0 < alpha <= 1.0) or warmup < 1:
+            raise ValueError(f"bad screen knobs k={k} alpha={alpha} "
+                             f"warmup={warmup}")
+        self.policy = policy
+        self.k = float(k)
+        self.alpha = float(alpha)
+        self.warmup = int(warmup)
+        #: global bootstrap reference — median of the warmup window; stays
+        #: fixed afterward (per-client EWMAs take over the tracking)
+        self.ewma: Optional[float] = None
+        self._baseline: Dict[Hashable, float] = {}
+        self._warm: List[float] = []
+        self.counts = {"accept": 0, "clip": 0, "reject": 0}
+
+    @property
+    def threshold(self) -> Optional[float]:
+        """Loosest current threshold (what a first-contact client is
+        screened against); None while still warming up."""
+        if self.ewma is None:
+            return None
+        return self.k * max(self._baseline.values(), default=self.ewma)
+
+    def _flag(self, norm: float, thr: float) -> Tuple[str, float]:
+        if self.policy == "clip":
+            self.counts["clip"] += 1
+            return "clip", thr / norm
+        self.counts["reject"] += 1
+        return "reject", 0.0
+
+    def _accept(self, norm: float, client_id: Hashable) -> Tuple[str, float]:
+        self.counts["accept"] += 1
+        base = self._baseline.get(client_id)
+        self._baseline[client_id] = (
+            norm if base is None else base + self.alpha * (norm - base))
+        return "accept", 1.0
+
+    def observe(self, norm: float,
+                client_id: Hashable = None) -> Tuple[str, float]:
+        norm = float(norm)
+        if self.ewma is None:
+            # median-initialized warmup; once two samples exist, screen
+            # provisionally against k * running-median so an early
+            # amplified update cannot land at full strength before any
+            # baseline exists
+            if len(self._warm) >= 2:
+                prov = self.k * float(np.median(self._warm))
+                if norm > prov:
+                    return self._flag(norm, prov)
+            self._warm.append(norm)
+            if len(self._warm) >= self.warmup:
+                self.ewma = float(np.median(self._warm))
+                # a corrupt client landing inside the warmup window would
+                # otherwise have seeded its own baseline at the amplified
+                # norm and passed its own screen forever: prune every
+                # warmup-seeded baseline the settled median disowns (the
+                # client re-bootstraps through the first-contact clip)
+                cut = self.k * self.ewma
+                self._baseline = {c: b for c, b in self._baseline.items()
+                                  if b <= cut}
+                self._warm = []
+            return self._accept(norm, client_id)
+        base = self._baseline.get(client_id)
+        # first contact after warmup screens against the loosest honest
+        # scale on record rather than any single global average — cross-
+        # client honest norms spread orders of magnitude, and a tighter
+        # bootstrap threshold would lock naturally-large clients out
+        # before they ever seed a baseline
+        ref = base if base is not None else max(
+            self._baseline.values(), default=self.ewma)
+        thr = self.k * max(ref, 0.0)
+        if thr <= 0.0 or norm <= thr:
+            return self._accept(norm, client_id)
+        return self._flag(norm, thr)
+
+    def decide_batch(self, norms, client_ids=None) -> np.ndarray:
+        """Screen a burst of kernel-emitted norms in arrival order; returns
+        the per-update scale factors (1 accept, (0,1) clip, 0 reject) that
+        the sequential-equivalence schedule folds into its recursion.
+        ``client_ids`` aligns with ``norms`` (None degrades every arrival
+        to one shared baseline)."""
+        if client_ids is None:
+            client_ids = [None] * len(norms)
+        return np.asarray(
+            [self.observe(float(n), cid)[1]
+             for n, cid in zip(norms, client_ids)], np.float32)
+
+    def stats(self) -> dict:
+        out = dict(self.counts)
+        out["policy"] = self.policy
+        out["ewma"] = self.ewma
+        out["threshold"] = self.threshold
+        out["clients"] = len(self._baseline)
+        return out
+
+
+def make_screen(fed: FedConfig) -> Optional[NormScreen]:
+    """Build the screen a server should run under ``fed`` — None when
+    screening is off (the default), so defense-off runs carry zero extra
+    state and replay existing traces byte-identically."""
+    if fed.screen == "off":
+        return None
+    if fed.screen not in SCREEN_POLICIES:
+        raise ValueError(f"unknown screen policy {fed.screen!r}: expected "
+                         f"one of {SCREEN_POLICIES}")
+    return NormScreen(fed.screen, k=fed.screen_k, alpha=fed.screen_alpha,
+                      warmup=fed.screen_warmup)
+
+
+def verdict_of_scale(scale: float) -> str:
+    """Invert a decide_batch scale factor back to its verdict string."""
+    if scale == 0.0:
+        return "reject"
+    return "accept" if scale >= 1.0 else "clip"

@@ -24,6 +24,7 @@ from repro.core.aggregation import (asyncfeded_aggregate,
                                     asyncfeded_aggregate_per_leaf,
                                     asyncfeded_aggregate_with_dist)
 from repro.core.gmis import DisplacementGMIS, RingGMIS
+from repro.core import screening
 from repro.kernels.fedagg import ops
 from repro.utils import pytree as pt
 
@@ -57,6 +58,12 @@ class UpdateRecord:
     k_next: int
     dist: float
     delta_norm: float
+    #: norm-screening verdict for this arrival (DESIGN.md §11): "accept"
+    #: (also the value whenever screening is off), "clip" (delta scaled
+    #: down to the k×EWMA threshold; ``eta`` is the effective multiplier
+    #: on the RAW delta), or "reject" (nothing applied, ``eta`` = 0 and
+    #: the iteration counter did not move).
+    screen: str = "accept"
 
 
 class AsyncServer:
@@ -69,6 +76,31 @@ class AsyncServer:
         self.fed = fed
         self.t = 1                       # global iteration (paper: x_1 initial)
         self.history: List[UpdateRecord] = []
+        # norm screening (DESIGN.md §11): None when fed.screen == "off",
+        # so defense-off runs carry zero extra state
+        self.screen = screening.make_screen(fed)
+
+    def _screen_delta(self, upd: ClientUpdate):
+        """Norm-screen one arriving delta. Returns ``(upd', verdict,
+        scale, raw_norm)``: ``upd'`` carries the clipped delta — or is
+        None when the update is rejected outright; ``raw_norm`` is None
+        when screening is off, so the off path builds records exactly as
+        before screening existed."""
+        if self.screen is None:
+            return upd, "accept", 1.0, None
+        raw = float(pt.tree_norm(upd.delta))
+        verdict, scale = self.screen.observe(raw, upd.client_id)
+        if verdict == "reject":
+            return None, verdict, 0.0, raw
+        if verdict == "clip":
+            upd = dataclasses.replace(
+                upd, delta=pt.tree_scale(upd.delta, scale))
+        return upd, verdict, scale, raw
+
+    def screen_stats(self) -> Optional[dict]:
+        """Accept/clip/reject counters + threshold state (None when
+        screening is off). Surfaced through ``SimResult.summary()``."""
+        return None if self.screen is None else self.screen.stats()
 
     def on_connect(self, client_id: int) -> ServerReply:
         raise NotImplementedError
@@ -204,20 +236,46 @@ class AsyncFedEDServer(AsyncServer):
         self._flat = self._flat.replace(new_vec)
         return gamma, eta, dist, dnorm, d
 
+    def _reject_reply(self, upd: ClientUpdate, raw_norm: float
+                      ) -> ServerReply:
+        """A screened-out arrival: the model and the iteration counter do
+        not move; the client simply resumes from the current model (its K
+        unchanged — no gamma was observed)."""
+        k_next = self.kctl.get(upd.client_id)
+        self.history.append(UpdateRecord(
+            self.t, upd.client_id, self.t - upd.snapshot_iter,
+            float("nan"), 0.0, upd.k_used, k_next, float("nan"), raw_norm,
+            "reject"))
+        self._register(upd.client_id)
+        return ServerReply(self.params, self.t, k_next)
+
     def on_update(self, upd: ClientUpdate) -> ServerReply:
+        upd2, verdict, scale, raw_norm = self._screen_delta(upd)
+        if upd2 is None:
+            return self._reject_reply(upd, raw_norm)
+        upd = upd2
         if self.backend == "pallas":
             gamma, eta, dist, dnorm, delta = self._aggregate_flat(upd)
         else:
             gamma, eta, dist, dnorm, _ = self._aggregate_pytree(upd)
             delta = upd.delta
+        # true staleness: tau = t - snapshot at APPLY time, before this
+        # update advances the iteration counter — matches FedAsync's lag
+        # telemetry so cross-server staleness records are comparable
+        lag = self.t - upd.snapshot_iter
         self.t += 1
         self.gmis.append(self.t, self._gmis_state())
         self.gmis.on_aggregate(eta, delta)
         gamma = float(gamma)
         k_next = self.kctl.observe(upd.client_id, gamma)
+        # history semantics under screening: eta is the effective
+        # multiplier on the RAW arriving delta (eta * clip scale),
+        # delta_norm the raw screening statistic; both collapse to the
+        # plain aggregation scalars when screening is off
         self.history.append(UpdateRecord(
-            self.t, upd.client_id, self.t - upd.snapshot_iter, gamma,
-            float(eta), upd.k_used, k_next, float(dist), float(dnorm)))
+            self.t, upd.client_id, lag, gamma,
+            float(eta) * scale, upd.k_used, k_next, float(dist),
+            float(dnorm) if raw_norm is None else raw_norm, verdict))
         self._register(upd.client_id)
         return ServerReply(self.params, self.t, k_next)
 
@@ -246,19 +304,40 @@ class AsyncFedEDServer(AsyncServer):
         spec = self._flat.spec
         deltas = jnp.stack([spec.flatten(u.delta) for u in upds])
         stales = jnp.stack([self.gmis.get(u.snapshot_iter)[0] for u in upds])
-        new_vec, etas, gammas, dists, dnorms = ops.flat_aggregate_batched(
-            self._flat.vec, stales, deltas, lam=fed.lam, eps=fed.eps,
-            cap=fed.staleness_cap, interpret=self._interpret)
+        # screening reuses the batched Gram sweep: the kernel-emitted raw
+        # delta norms feed NormScreen in arrival order, and the returned
+        # scale factors fold into the sequential-equivalence schedule
+        # (etas come back as effective multipliers on the raw deltas)
+        new_vec, etas, gammas, dists, dnorms, scales = (
+            ops.flat_aggregate_batched(
+                self._flat.vec, stales, deltas, lam=fed.lam, eps=fed.eps,
+                cap=fed.staleness_cap, interpret=self._interpret,
+                screen=(None if self.screen is None else
+                        lambda dns: self.screen.decide_batch(
+                            dns, [u.client_id for u in upds]))))
         self._flat = self._flat.replace(new_vec)
         k_nexts = []
         for i, upd in enumerate(upds):
-            self.t += 1
-            gamma = float(gammas[i])
-            k_next = self.kctl.observe(upd.client_id, gamma)
-            self.history.append(UpdateRecord(
-                self.t, upd.client_id, self.t - upd.snapshot_iter, gamma,
-                float(etas[i]), upd.k_used, k_next, float(dists[i]),
-                float(dnorms[i])))
+            verdict = ("accept" if scales is None
+                       else screening.verdict_of_scale(float(scales[i])))
+            # pre-increment staleness tau, exactly as in on_update: the
+            # server state at this update's turn in the sequential
+            # equivalence, before its own increment
+            lag = self.t - upd.snapshot_iter
+            if verdict == "reject":
+                k_next = self.kctl.get(upd.client_id)
+                self.history.append(UpdateRecord(
+                    self.t, upd.client_id, lag, float("nan"), 0.0,
+                    upd.k_used, k_next, float("nan"), float(dnorms[i]),
+                    "reject"))
+            else:
+                self.t += 1
+                gamma = float(gammas[i])
+                k_next = self.kctl.observe(upd.client_id, gamma)
+                self.history.append(UpdateRecord(
+                    self.t, upd.client_id, lag, gamma,
+                    float(etas[i]), upd.k_used, k_next, float(dists[i]),
+                    float(dnorms[i]), verdict))
             k_nexts.append(k_next)
         # Intermediate models x_{t+1}..x_{t+B-1} are never handed to any
         # client (every drained client resumes from the window's final
@@ -308,9 +387,23 @@ class FedAsyncServer(AsyncServer):
         return a0 * s
 
     def on_update(self, upd: ClientUpdate) -> ServerReply:
-        stale, _ = self.gmis.get(upd.snapshot_iter)
+        upd2, verdict, scale, raw_norm = self._screen_delta(upd)
+        if upd2 is None:
+            # rejected: nothing mixes, the counter does not move, the
+            # client just resumes from the current model
+            self.history.append(UpdateRecord(
+                self.t, upd.client_id, self.t - upd.snapshot_iter,
+                float("nan"), 0.0, upd.k_used, self.fed.k_initial,
+                float("nan"), raw_norm, "reject"))
+            return ServerReply(self.params, self.t, self.fed.k_initial)
+        upd = upd2
+        stale, actual = self.gmis.get(upd.snapshot_iter)
         x_local = pt.tree_add(stale, upd.delta)
-        lag = self.t - upd.snapshot_iter
+        # the ring may have aged the requested snapshot out and clamped to
+        # its oldest retained version: x_local above is rebuilt from that
+        # clamped snapshot, so the staleness decay s(lag) must be
+        # evaluated at the clamped lag too — not the un-clamped request
+        lag = self.t - actual
         alpha = self._alpha(lag)
         self.params = jax.tree.map(
             lambda xg, xl: ((1.0 - alpha) * xg.astype(np.float32)
@@ -320,7 +413,8 @@ class FedAsyncServer(AsyncServer):
         self.gmis.append(self.t, self.params)
         self.history.append(UpdateRecord(
             self.t, upd.client_id, lag, float("nan"), alpha, upd.k_used,
-            self.fed.k_initial, float("nan"), float("nan")))
+            self.fed.k_initial, float("nan"),
+            float("nan") if raw_norm is None else raw_norm, verdict))
         return ServerReply(self.params, self.t, self.fed.k_initial)
 
 
@@ -331,25 +425,38 @@ class FedBuffServer(AsyncServer):
 
     def __init__(self, params: PyTree, fed: FedConfig):
         super().__init__(params, fed)
-        self.buffer: List[PyTree] = []
+        #: buffered (delta, snapshot_iter) pairs — snapshots kept so the
+        #: flush can report the true staleness of its oldest contribution
+        self.buffer: List[tuple] = []
 
     def on_connect(self, client_id: int) -> ServerReply:
         return ServerReply(self.params, self.t, self.fed.k_initial)
 
     def _flush(self, client_id: int, k_used: int) -> None:
         scale = self.fed.lam / len(self.buffer)
-        mean = self.buffer[0]
-        for d in self.buffer[1:]:
+        mean = self.buffer[0][0]
+        for d, _ in self.buffer[1:]:
             mean = pt.tree_add(mean, d)
+        # staleness of the flush: its oldest buffered snapshot, measured
+        # against the pre-increment iteration like every other server
+        lag = self.t - min(snap for _, snap in self.buffer)
         self.params = pt.tree_axpy(scale, mean, self.params)
         self.buffer = []
         self.t += 1
         self.history.append(UpdateRecord(
-            self.t, client_id, 0, float("nan"), scale, k_used,
+            self.t, client_id, lag, float("nan"), scale, k_used,
             self.fed.k_initial, float("nan"), float("nan")))
 
     def on_update(self, upd: ClientUpdate) -> ServerReply:
-        self.buffer.append(upd.delta)
+        upd2, verdict, scale, raw_norm = self._screen_delta(upd)
+        if upd2 is None:
+            # rejected before buffering: the flush never sees this delta
+            self.history.append(UpdateRecord(
+                self.t, upd.client_id, self.t - upd.snapshot_iter,
+                float("nan"), 0.0, upd.k_used, self.fed.k_initial,
+                float("nan"), raw_norm, "reject"))
+            return ServerReply(self.params, self.t, self.fed.k_initial)
+        self.buffer.append((upd2.delta, upd2.snapshot_iter))
         if len(self.buffer) >= self.fed.fedbuff_size:
             self._flush(upd.client_id, upd.k_used)
         return ServerReply(self.params, self.t, self.fed.k_initial)
@@ -368,6 +475,9 @@ class SyncServer:
     difference is the client-side proximal term)."""
 
     is_async = False
+    #: synchronous rounds aggregate a full cohort at once; norm screening
+    #: is an async-arrival defense and stays off here
+    screen = None
 
     def __init__(self, params: PyTree, fed: FedConfig, name: str = "fedavg"):
         self.params = params
@@ -375,6 +485,9 @@ class SyncServer:
         self.name = name
         self.t = 1
         self.history: List[UpdateRecord] = []
+
+    def screen_stats(self) -> Optional[dict]:
+        return None
 
     def on_connect(self, client_id: int) -> ServerReply:
         return ServerReply(self.params, self.t, self.fed.k_initial)

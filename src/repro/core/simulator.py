@@ -46,6 +46,7 @@ from repro.configs.base import FedConfig
 from repro.core import budget as budget_mod
 from repro.core import cohort
 from repro.core import tasks as tasks_mod
+from repro.core.adversary import make_adversary
 from repro.core.behavior import make_behavior
 from repro.core.client import Client
 from repro.core.events import (EventLoop, VirtualClock,
@@ -76,6 +77,12 @@ class SimResult:
     #: the memory-budget plan the last cohort fan-out ran under
     #: (budget.CohortPlan.to_dict()); None when no cohort fan-out happened
     plan: Optional[dict] = None
+    #: norm-screening counters (server.screen_stats(): accept/clip/reject
+    #: + threshold state); None when screening is off
+    screen: Optional[dict] = None
+    #: adversary stats (attack name, corrupted client ids, applications);
+    #: None for benign runs
+    attack: Optional[dict] = None
 
     def max_accuracy(self, within_time: Optional[float] = None) -> float:
         pts = [p for p in self.points
@@ -100,6 +107,10 @@ class SimResult:
         }
         if self.plan is not None:
             out["plan"] = self.plan
+        if self.screen is not None:
+            out["screen"] = self.screen
+        if self.attack is not None:
+            out["attack"] = self.attack
         return out
 
     def to_json(self) -> dict:
@@ -151,6 +162,9 @@ class FederatedSimulation:
         self.behavior = make_behavior(
             behavior or fed.client_behavior, fed, seed=seed,
             model_bytes=self.model_bytes, heterogeneity=heterogeneity, **bkw)
+        # byzantine cohort (DESIGN.md §11): None for benign configs, so no
+        # extra RNG stream exists and traces replay byte-identically
+        self.adversary = make_adversary(fed, seed=seed)
         self._eval = jax.jit(
             lambda p: self.task.eval_metrics(p, self.eval_batch))
         self.prox_mu = fed.fedprox_mu if algorithm == "fedprox" else 0.0
@@ -171,6 +185,9 @@ class FederatedSimulation:
 
     def _plan_dict(self) -> Optional[dict]:
         return None if self.cohort_plan is None else self.cohort_plan.to_dict()
+
+    def _attack_dict(self) -> Optional[dict]:
+        return None if self.adversary is None else self.adversary.stats()
 
     # ------------------------------------------------------- local training --
     def _run_locals(self, jobs: List[Tuple[Client, ServerReply]]
@@ -216,8 +233,13 @@ class FederatedSimulation:
         client. Behavior draws happen after training, in job order, so the
         event trace is engine-independent. Returns the number of updates
         dispatched (dropped-out clients still count — their aggregation
-        happened; they just never come back)."""
+        happened; they just never come back). Byzantine clients' deltas
+        are corrupted here, at emission time — after local training,
+        before the event queue — so every client engine and both server
+        backends see the identical attacked stream."""
         for (c, reply), upd in zip(jobs, self._run_locals(jobs)):
+            if self.adversary is not None:
+                upd = self.adversary.corrupt(upd)
             delay = self.behavior.dispatch(c.client_id, reply.k_next, now)
             if delay is not None:
                 loop.queue.push(now + delay, c.client_id, upd)
@@ -276,7 +298,8 @@ class FederatedSimulation:
         self.server.finalize(end)      # e.g. FedBuff flushes a partial buffer
         points.append(self._eval_point(end))
         return SimResult(self.algorithm, points, self.server.history,
-                         updates, loop.drains, self._plan_dict())
+                         updates, loop.drains, self._plan_dict(),
+                         self.server.screen_stats(), self._attack_dict())
 
     def _run_sync(self, max_time: float, eval_every: int) -> SimResult:
         points = [self._eval_point(0.0)]
@@ -288,6 +311,8 @@ class FederatedSimulation:
             # synchronous round: the whole (surviving) client set is one
             # cohort job
             updates = self._run_locals([(c, reply0) for c in roster])
+            if self.adversary is not None:
+                updates = [self.adversary.corrupt(u) for u in updates]
             durations = [self.behavior.dispatch(c.client_id, reply0.k_next,
                                                 clock.now)
                          for c in roster]
@@ -308,7 +333,8 @@ class FederatedSimulation:
                 break
         self.server.finalize(min(clock.now, max_time))
         return SimResult(self.algorithm, points, self.server.history,
-                         rounds, rounds, self._plan_dict())
+                         rounds, rounds, self._plan_dict(),
+                         self.server.screen_stats(), self._attack_dict())
 
 
 def run_comparison(task, algorithms: List[str],

@@ -18,6 +18,7 @@ from typing import Any, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.aggregation import (AggregationResult, gamma_eta_from_sq,
                                     sequential_batch_schedule)
@@ -82,23 +83,36 @@ _apply_batched = jax.jit(fedagg.fedagg_apply_batched,
 
 def flat_aggregate_batched(x_t: jax.Array, x_stales: jax.Array,
                            deltas: jax.Array, *, lam: float, eps: float,
-                           cap: float = 0.0, interpret: bool = True):
+                           cap: float = 0.0, interpret: bool = True,
+                           screen=None):
     """B concurrent arrivals in two grid sweeps, sequential-equivalent to B
     one-at-a-time ``flat_aggregate`` calls (see
     ``aggregation.sequential_batch_schedule``).
 
     x_t (n,), x_stales (B, n), deltas (B, n), n a BLOCK multiple.
-    Returns (new_vec, etas, gammas, dists, dnorms) — the per-update scalars
-    as f32 numpy arrays in arrival order. Not jitted end-to-end: the
+    Returns (new_vec, etas, gammas, dists, dnorms, scales) — the per-update
+    scalars as f32 numpy arrays in arrival order; etas are the effective
+    multipliers on the raw deltas. Not jitted end-to-end: the
     sequential-equivalence schedule resolves on the host between sweeps.
+
+    ``screen`` (optional) is a norm-screening decider — typically
+    ``NormScreen.decide_batch`` — called with the kernel-emitted raw delta
+    norms in arrival order; it returns per-update scale factors (1 accept,
+    (0,1) clip, 0 reject) folded into the schedule. This is where the
+    defense reuses the batched Gram sweep: no extra pass over the
+    parameter vector happens. ``scales`` is None when ``screen`` is.
     """
     d0, dn_sq, cross, gram = _norms_batched(x_t, x_stales, deltas,
                                             interpret=interpret)
+    scales = None
+    if screen is not None:
+        dns = np.sqrt(np.maximum(np.asarray(dn_sq, np.float64), 0.0))
+        scales = screen(dns.astype(np.float32))
     etas, gammas, dists, dnorms = sequential_batch_schedule(
-        d0, dn_sq, cross, gram, lam=lam, eps=eps, cap=cap)
+        d0, dn_sq, cross, gram, lam=lam, eps=eps, cap=cap, scales=scales)
     new = _apply_batched(x_t, deltas, jnp.asarray(etas),
                          interpret=interpret)
-    return new, etas, gammas, dists, dnorms
+    return new, etas, gammas, dists, dnorms, scales
 
 
 # -------------------------------------------------------------- pytree API --
@@ -129,6 +143,6 @@ def asyncfeded_aggregate_batched_pallas(
     xt = spec.flatten(x_t)
     xs = jnp.stack([spec.flatten(t) for t in x_stales])
     d = jnp.stack([spec.flatten(t) for t in deltas])
-    new_flat, etas, gammas, dists, dnorms = flat_aggregate_batched(
+    new_flat, etas, gammas, dists, dnorms, _ = flat_aggregate_batched(
         xt, xs, d, lam=lam, eps=eps, cap=cap, interpret=interpret)
     return spec.unflatten(new_flat), etas, gammas, dists, dnorms

@@ -1,0 +1,324 @@
+"""Adversarial scenario layer (DESIGN.md §11): the attack registry, the
+per-client norm screen, screened server semantics on both backends, the
+defense-off identity guarantee, and the end-to-end recovery criterion
+(20% sign-flip cohort on the paper synthetic task)."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import ATTACKS, SCREEN_POLICIES
+from repro.core import screening
+from repro.core.adversary import ATTACK_FNS, make_adversary
+from repro.core.screening import NormScreen, make_screen, verdict_of_scale
+from repro.core.server import ClientUpdate, make_server
+from repro.core.simulator import FederatedSimulation
+from repro.utils import pytree as pt
+
+FED = configs.SYNTHETIC_1_1.fed
+
+
+def tiny_params(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (4, 3)), "b": jnp.zeros((3,))}
+
+
+def upd(cid, snapshot_iter=1, k_used=5, seed=0, scale=0.1):
+    p = tiny_params(seed + 100 + cid)
+    delta = jax.tree.map(lambda x: scale * x, p)
+    return ClientUpdate(cid, snapshot_iter, k_used, delta)
+
+
+def leaves_allclose(a, b, **kw):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), **kw)
+
+
+class TestAttackRegistry:
+    def test_registry_mirrors_config(self):
+        assert set(ATTACK_FNS) == set(ATTACKS) - {"none"}
+
+    def test_sign_flip_is_scaled_negation(self):
+        d = upd(0).delta
+        rng = np.random.default_rng(0)
+        leaves_allclose(ATTACK_FNS["sign-flip"](d, rng),
+                        pt.tree_scale(d, -10.0), rtol=1e-6)
+        leaves_allclose(ATTACK_FNS["sign-flip"](d, rng, strength=1.0),
+                        pt.tree_scale(d, -1.0), rtol=1e-6)
+
+    def test_scale_and_zero(self):
+        d = upd(0).delta
+        rng = np.random.default_rng(0)
+        leaves_allclose(ATTACK_FNS["scale"](d, rng, boost=3.0),
+                        pt.tree_scale(d, 3.0), rtol=1e-6)
+        for leaf in jax.tree.leaves(ATTACK_FNS["zero"](d, rng)):
+            np.testing.assert_array_equal(np.asarray(leaf),
+                                          np.zeros_like(leaf))
+
+    def test_gaussian_noise_perturbs_at_rms_scale(self):
+        d = upd(0).delta
+        rng = np.random.default_rng(0)
+        out = ATTACK_FNS["gaussian-noise"](d, rng, noise_scale=10.0)
+        assert jax.tree.structure(out) == jax.tree.structure(d)
+        diff = float(pt.tree_norm(jax.tree.map(
+            lambda a, b: np.asarray(a) - np.asarray(b), out, d)))
+        base = float(pt.tree_norm(d))
+        assert math.isfinite(diff) and diff > base  # noise dominates
+
+    def test_cohort_draw_is_deterministic_and_sized(self):
+        fed = dataclasses.replace(FED, attack="sign-flip", attack_frac=0.2)
+        a1 = make_adversary(fed, seed=3)
+        a2 = make_adversary(fed, seed=3)
+        assert a1.corrupt_ids == a2.corrupt_ids
+        assert len(a1.corrupt_ids) == round(0.2 * fed.num_clients) == 2
+        assert make_adversary(fed, seed=4).corrupt_ids != a1.corrupt_ids \
+            or True   # different seed MAY coincide; only determinism is law
+
+    def test_honest_clients_pass_through_untouched(self):
+        fed = dataclasses.replace(FED, attack="sign-flip", attack_frac=0.2)
+        adv = make_adversary(fed, seed=3)
+        honest = next(i for i in range(fed.num_clients)
+                      if i not in adv.corrupt_ids)
+        corrupt = next(iter(adv.corrupt_ids))
+        u = upd(honest)
+        assert adv.corrupt(u) is u and adv.applied == 0
+        v = upd(corrupt)
+        out = adv.corrupt(v)
+        assert adv.applied == 1
+        leaves_allclose(out.delta, pt.tree_scale(v.delta, -10.0), rtol=1e-6)
+
+    def test_attack_params_reach_the_attack_fn(self):
+        fed = dataclasses.replace(FED, attack="scale", attack_frac=0.2,
+                                  attack_params=(("boost", 2.0),))
+        adv = make_adversary(fed, seed=3)
+        u = upd(next(iter(adv.corrupt_ids)))
+        leaves_allclose(adv.corrupt(u).delta, pt.tree_scale(u.delta, 2.0),
+                        rtol=1e-6)
+
+    def test_benign_configs_build_no_adversary(self):
+        assert make_adversary(FED, seed=0) is None
+        assert make_adversary(dataclasses.replace(
+            FED, attack="sign-flip", attack_frac=0.0), seed=0) is None
+        # fraction rounding to zero clients: also benign
+        assert make_adversary(dataclasses.replace(
+            FED, attack="sign-flip", attack_frac=0.04), seed=0) is None
+
+    def test_config_validates_names(self):
+        with pytest.raises(ValueError):
+            dataclasses.replace(FED, attack="fgsm")
+        with pytest.raises(ValueError):
+            dataclasses.replace(FED, screen="median")
+        with pytest.raises(ValueError):
+            dataclasses.replace(FED, attack_frac=1.5)
+
+
+class TestNormScreen:
+    def test_warmup_seeds_ewma_from_median(self):
+        s = NormScreen("reject", k=3.0, warmup=4)
+        for n in (1.0, 1.0, 2.0, 100.0):   # 100 > 3*median(1,1,2) -> out
+            s.observe(n, 0)
+        assert s.ewma is None and s.counts["reject"] == 1
+        s.observe(1.0, 0)                   # 4th accepted warmup sample
+        assert s.ewma == pytest.approx(1.0)  # median(1,1,2,1)
+
+    def test_per_client_baselines_separate_scales(self):
+        s = NormScreen("reject", k=3.0, warmup=2)
+        s.observe(1.0, "small")
+        s.observe(1.0, "small")             # warmup closes, ewma=1
+        assert s.observe(2.5, "big")[0] == "accept"   # first contact, <3*1
+        # big's own baseline (2.5) admits what small's would reject
+        assert s.observe(7.0, "big")[0] == "accept"   # 7 <= 3*2.5
+        assert s.observe(7.0, "small")[0] == "reject"  # 7 > 3*~1
+
+    def test_rejected_norms_never_feed_the_baseline(self):
+        s = NormScreen("reject", k=3.0, warmup=2)
+        s.observe(1.0, 0)
+        s.observe(1.0, 0)
+        thr_before = s.threshold
+        for _ in range(5):
+            assert s.observe(50.0, 0)[0] == "reject"
+        assert s.threshold == pytest.approx(thr_before)   # no ratcheting
+
+    def test_clip_policy_scales_to_threshold(self):
+        s = NormScreen("clip", k=2.0, warmup=2)
+        s.observe(1.0, 0)
+        s.observe(1.0, 0)
+        verdict, scale = s.observe(8.0, 0)
+        assert verdict == "clip"
+        assert 8.0 * scale == pytest.approx(2.0)   # clipped to k*ewma
+
+    def test_warmup_poisoned_baseline_is_pruned_at_close(self):
+        # a corrupt norm landing before the provisional screen can see it
+        # (first two warmup arrivals) must not leave that client a
+        # self-consistent amplified baseline
+        s = NormScreen("reject", k=3.0, warmup=3)
+        s.observe(1.0, "honest")
+        s.observe(50.0, "corrupt")     # slips in: only 1 prior sample
+        s.observe(1.0, "honest")       # closes warmup, median(1,50,1)=1
+        assert s.ewma == pytest.approx(1.0)
+        # corrupt's baseline was pruned: screened as first contact again
+        assert s.observe(50.0, "corrupt")[0] == "reject"
+
+    def test_decide_batch_matches_sequential_observe(self):
+        norms = [1.0, 1.1, 0.9, 1.0, 12.0, 1.05, 30.0]
+        ids = [0, 1, 2, 3, 0, 1, 2]
+        a = NormScreen("reject", k=3.0, warmup=4)
+        b = NormScreen("reject", k=3.0, warmup=4)
+        scales = a.decide_batch(np.asarray(norms, np.float32), ids)
+        expect = [b.observe(n, i)[1] for n, i in zip(norms, ids)]
+        np.testing.assert_allclose(scales, np.asarray(expect, np.float32))
+        assert a.counts == b.counts
+
+    def test_verdict_of_scale_roundtrip(self):
+        assert verdict_of_scale(1.0) == "accept"
+        assert verdict_of_scale(0.25) == "clip"
+        assert verdict_of_scale(0.0) == "reject"
+        assert all(v in screening.VERDICTS
+                   for v in ("accept", "clip", "reject"))
+
+    def test_make_screen_off_is_none(self):
+        assert make_screen(FED) is None
+        on = dataclasses.replace(FED, screen="reject")
+        assert make_screen(on).policy == "reject"
+        assert set(SCREEN_POLICIES) == {"off", "clip", "reject"}
+
+
+class ScreenedServerMixin:
+    """Shared scenario: warm a reject-screened server with small honest
+    deltas, then land one amplified delta."""
+
+    def _fed(self, policy="reject"):
+        return dataclasses.replace(FED, screen=policy, screen_warmup=2,
+                                   screen_k=3.0)
+
+    def _warm(self, srv):
+        for cid in (0, 1):
+            srv.on_connect(cid)
+            srv.on_update(upd(cid, snapshot_iter=srv.t, scale=0.1))
+
+
+class TestScreenedServers(ScreenedServerMixin):
+    @pytest.mark.parametrize("name,kw", [
+        ("asyncfeded", {"backend": "pytree"}),
+        ("asyncfeded", {"backend": "pallas"}),
+        ("fedasync+constant", {}),
+        ("fedbuff", {}),
+    ])
+    def test_reject_freezes_model_and_counter(self, name, kw):
+        srv = make_server(name, tiny_params(), self._fed(), **kw)
+        self._warm(srv)
+        t0, params0 = srv.t, srv.params
+        bad = upd(2, snapshot_iter=srv.t, scale=5.0)   # 50x honest norm
+        reply = srv.on_update(bad)
+        rec = srv.history[-1]
+        assert rec.screen == "reject" and rec.eta == 0.0
+        assert srv.t == t0 and reply.iteration == t0
+        leaves_allclose(srv.params, params0)
+        assert rec.delta_norm == pytest.approx(
+            float(pt.tree_norm(bad.delta)), rel=1e-5)
+        assert srv.screen_stats()["reject"] == 1
+
+    def test_clip_applies_bounded_step(self):
+        srv = make_server("asyncfeded", tiny_params(), self._fed("clip"),
+                          backend="pytree")
+        self._warm(srv)
+        t0, params0 = srv.t, srv.params
+        bad = upd(2, snapshot_iter=srv.t, scale=5.0)
+        srv.on_update(bad)
+        rec = srv.history[-1]
+        assert rec.screen == "clip" and srv.t == t0 + 1
+        # the applied step is bounded by the clipped norm, far below raw
+        moved = float(pt.tree_norm(jax.tree.map(
+            lambda a, b: np.asarray(a) - np.asarray(b),
+            srv.params, params0)))
+        assert 0.0 < moved < 0.2 * float(pt.tree_norm(bad.delta))
+        # history keeps the RAW screening statistic
+        assert rec.delta_norm == pytest.approx(
+            float(pt.tree_norm(bad.delta)), rel=1e-5)
+
+    def test_screen_off_records_plain_accepts(self):
+        srv = make_server("asyncfeded", tiny_params(), FED,
+                          backend="pytree")
+        srv.on_connect(0)
+        srv.on_update(upd(0, snapshot_iter=1))
+        rec = srv.history[-1]
+        assert srv.screen is None and srv.screen_stats() is None
+        assert rec.screen == "accept" and math.isfinite(rec.delta_norm)
+
+    def test_batched_drain_screens_in_arrival_order(self):
+        fed = self._fed()
+        pal = make_server("asyncfeded", tiny_params(), fed,
+                          backend="pallas")
+        seq = make_server("asyncfeded", tiny_params(), fed,
+                          backend="pytree")
+        for srv in (pal, seq):
+            self._warm(srv)
+        batch = [upd(2, snapshot_iter=pal.t, scale=0.1),
+                 upd(3, snapshot_iter=pal.t, scale=5.0),
+                 upd(4, snapshot_iter=pal.t, scale=0.1)]
+        pal.on_update_batch(batch)
+        for u in batch:
+            seq.on_update(u)
+        assert [r.screen for r in pal.history[-3:]] == \
+               [r.screen for r in seq.history[-3:]] == \
+               ["accept", "reject", "accept"]
+        assert pal.t == seq.t
+        assert [r.lag for r in pal.history[-3:]] == \
+               [r.lag for r in seq.history[-3:]]
+        leaves_allclose(pal.params, seq.params, rtol=1e-4, atol=1e-5)
+
+
+class TestDefenseOffIdentity:
+    def test_explicit_benign_config_is_the_default_path(self):
+        """attack='none' + screen='off' must add zero state, zero RNG
+        draws, and zero summary keys — the trace replays the defense-off
+        stream byte-identically."""
+        t = configs.SYNTHETIC_1_1
+        implicit = FederatedSimulation(t, t.fed, "asyncfeded", seed=0)
+        explicit = FederatedSimulation(
+            t, dataclasses.replace(t.fed, attack="none", screen="off"),
+            "asyncfeded", seed=0)
+        assert implicit.adversary is None and explicit.adversary is None
+        assert implicit.server.screen is None
+        r1 = implicit.run(max_time=1.0)
+        r2 = explicit.run(max_time=1.0)
+        assert [dataclasses.astuple(a) for a in r1.history] == \
+               [dataclasses.astuple(b) for b in r2.history]
+        assert [(p.time, p.accuracy) for p in r1.points] == \
+               [(p.time, p.accuracy) for p in r2.points]
+        s = r1.summary()
+        assert "screen" not in s and "attack" not in s
+
+
+class TestRecoverySmoke:
+    """The ISSUE acceptance criterion, exactly the headline rows of
+    ``benchmarks.robustness.run_matrix(smoke=True)``: on the paper
+    synthetic task with a 20% sign-flip cohort, norm-reject AsyncFedED
+    recovers >= 90% of the clean run's max accuracy while the unscreened
+    run measurably degrades."""
+
+    SEED, MAX_TIME, FLOOR = 3, 2.0, 0.9
+
+    def _run(self, **fed_kw):
+        t = configs.SYNTHETIC_1_1
+        fed = dataclasses.replace(t.fed, suspension_prob=0.1, **fed_kw)
+        sim = FederatedSimulation(t, fed, "asyncfeded", seed=self.SEED)
+        return sim.run(max_time=self.MAX_TIME)
+
+    def test_norm_reject_recovers_while_unscreened_degrades(self):
+        clean = self._run()
+        att = self._run(attack="sign-flip", attack_frac=0.2)
+        rej = self._run(attack="sign-flip", attack_frac=0.2,
+                        screen="reject", screen_warmup=5)
+        c = clean.max_accuracy()
+        assert att.max_accuracy() < 0.95 * c          # measurable damage
+        assert rej.max_accuracy() >= self.FLOOR * c   # screened recovery
+        # the screen actually fired, and the adversary actually attacked
+        s = rej.summary()
+        assert s["screen"]["reject"] > 0
+        assert s["attack"]["applied"] > 0
+        assert len(s["attack"]["corrupt_clients"]) == 2

@@ -133,7 +133,7 @@ class TestFedAggBatched:
         """Batched path == B one-at-a-time aggregations against the moving
         server state (the whole point of the Gram-matrix schedule)."""
         xt, xs, d = self._inputs(b, 2, seed=7)
-        new, etas, gammas, dists, _ = flat_aggregate_batched(
+        new, etas, gammas, dists, _, _ = flat_aggregate_batched(
             xt, xs, d, lam=2.0, eps=1.0)
         rnew, retas, rgammas, rdists = fedagg_ref.aggregate_batched_seq_ref(
             xt, xs, d, 2.0, 1.0)
@@ -145,7 +145,7 @@ class TestFedAggBatched:
     def test_sequential_equivalence_with_cap(self):
         xt, xs, d = self._inputs(3, 1, seed=11)
         d = d * 0.001                       # large gammas -> cap active
-        new, etas, gammas, _, _ = flat_aggregate_batched(
+        new, etas, gammas, _, _, _ = flat_aggregate_batched(
             xt, xs, d, lam=1.0, eps=1.0, cap=2.0)
         rnew, retas, rgammas, _ = fedagg_ref.aggregate_batched_seq_ref(
             xt, xs, d, 1.0, 1.0, cap=2.0)

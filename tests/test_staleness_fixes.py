@@ -1,0 +1,267 @@
+"""Regression coverage for the staleness-accounting bugfix sweep:
+
+1. every server records lag against the PRE-increment iteration
+   (tau = t_at_arrival - snapshot_iter), including the batched drain;
+2. FedAsync evaluates its decay s(lag) at the ring-clamped actual
+   snapshot iteration — the one x_local is actually rebuilt from;
+3. ``plan_cohort`` charges the per-POD footprint and floors the width
+   ladder at the pod count under ``cohort_sharded``;
+4. a dropped-out client consumes no duration draw (trace-cursor
+   stability under dropout).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.shapes import cohort_footprint_bytes
+from repro.core import budget as budget_mod
+from repro.core import tasks as tasks_mod
+from repro.core.behavior import make_behavior
+from repro.core.server import ClientUpdate, make_server
+from repro.utils import pytree as pt
+
+FED = configs.SYNTHETIC_1_1.fed
+
+
+def tiny_params(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (4, 3)), "b": jnp.zeros((3,))}
+
+
+def upd(cid, snapshot_iter=1, k_used=5, seed=0, scale=0.1):
+    p = tiny_params(seed + 100 + cid)
+    delta = jax.tree.map(lambda x: scale * x, p)
+    return ClientUpdate(cid, snapshot_iter, k_used, delta)
+
+
+class TestLagParity:
+    """One arrival script, same recorded lags everywhere: lag is the
+    pre-increment tau = t_at_arrival - snapshot_iter."""
+
+    SCRIPT = [(0, 1), (1, 1), (2, 2), (0, 2)]   # (client, snapshot_iter)
+    #: at arrival n the server sits at t = n + 1, so tau = (n+1) - snap
+    EXPECT = [0, 1, 1, 2]
+
+    @pytest.mark.parametrize("name,kw", [
+        ("asyncfeded", {"backend": "pytree"}),
+        ("asyncfeded", {"backend": "pallas"}),
+        ("asyncfeded-displacement", {"backend": "pytree"}),
+        ("fedasync+constant", {}),
+        ("fedasync+hinge", {}),
+    ])
+    def test_sequential_lag_is_pre_increment(self, name, kw):
+        srv = make_server(name, tiny_params(), FED, **kw)
+        for cid, snap in self.SCRIPT:
+            srv.on_connect(cid)
+            srv.on_update(upd(cid, snapshot_iter=snap))
+        assert [r.lag for r in srv.history] == self.EXPECT
+
+    def test_batched_drain_lag_matches_sequential(self):
+        batched = make_server("asyncfeded", tiny_params(), FED,
+                              backend="pallas")
+        seq = make_server("asyncfeded", tiny_params(), FED,
+                          backend="pallas")
+        for cid, _ in self.SCRIPT:
+            batched.on_connect(cid)
+            seq.on_connect(cid)
+        batch = [upd(cid, snapshot_iter=snap) for cid, snap in self.SCRIPT]
+        batched.on_update_batch(batch)
+        for u in batch:
+            seq.on_update(u)
+        assert [r.lag for r in batched.history] == \
+               [r.lag for r in seq.history] == self.EXPECT
+
+    def test_fedbuff_flush_lag_is_oldest_snapshot_pre_increment(self):
+        fed = dataclasses.replace(FED, fedbuff_size=2)
+        srv = make_server("fedbuff", tiny_params(), fed)
+        srv.on_update(upd(0, snapshot_iter=1))
+        srv.on_update(upd(1, snapshot_iter=1))     # flush at t=1
+        assert srv.history[-1].lag == 0            # 1 - min(1, 1)
+        srv.on_update(upd(2, snapshot_iter=1))     # stale survivor
+        srv.on_update(upd(3, snapshot_iter=2))     # flush at t=2
+        assert srv.history[-1].lag == 1            # 2 - min(1, 2)
+
+    def test_fresh_update_has_zero_lag(self):
+        """A client training on the current model must never be charged
+        staleness (the old post-increment accounting charged tau=1)."""
+        srv = make_server("asyncfeded", tiny_params(), FED,
+                          backend="pytree")
+        srv.on_connect(0)
+        srv.on_update(upd(0, snapshot_iter=srv.t))
+        assert srv.history[-1].lag == 0
+
+
+class TestClampedRingDecay:
+    """When the ring has aged the requested snapshot out, x_local is
+    rebuilt from the clamped oldest retained snapshot — so FedAsync's
+    staleness decay must be evaluated at the clamped lag too."""
+
+    def _srv(self, mode="poly", depth=2):
+        fed = dataclasses.replace(FED, gmis_depth=depth, fedasync_alpha=0.5,
+                                  poly_a=1.0, hinge_a=2.0, hinge_b=1.0)
+        return make_server(f"fedasync+{mode}", tiny_params(), fed)
+
+    def _advance(self, srv, rounds=4):
+        for i in range(rounds):
+            srv.on_update(upd(i, snapshot_iter=srv.t))
+
+    @pytest.mark.parametrize("mode", ["poly", "hinge"])
+    def test_decay_uses_clamped_lag(self, mode):
+        srv = self._srv(mode)
+        self._advance(srv)                    # t = 5; depth-2 ring: {4, 5}
+        stale, actual = srv.gmis.get(1)       # aged out -> clamped
+        assert actual == 4
+        before = srv.params
+        u = upd(9, snapshot_iter=1, seed=7)
+        srv.on_update(u)
+        rec = srv.history[-1]
+        assert rec.lag == 5 - actual == 1     # clamped, NOT 5 - 1 = 4
+        a = srv._alpha(1)
+        assert rec.eta == pytest.approx(a)
+        # and the mix really used the clamped snapshot as x_local's base
+        x_local = pt.tree_add(stale, u.delta)
+        expect = jax.tree.map(lambda xg, xl: (1 - a) * xg + a * xl,
+                              before, x_local)
+        for e, g in zip(jax.tree.leaves(expect),
+                        jax.tree.leaves(srv.params)):
+            np.testing.assert_allclose(np.asarray(e), np.asarray(g),
+                                       rtol=1e-5)
+
+    def test_unclamped_request_unchanged(self):
+        srv = self._srv("poly", depth=16)
+        self._advance(srv)
+        srv.on_update(upd(9, snapshot_iter=2, seed=7))
+        assert srv.history[-1].lag == 5 - 2   # deep ring: no clamp
+
+
+class TestShardedPlanPods:
+    """plan_cohort under cohort_sharded: the budget is charged per POD
+    (each pod holds width/pods client rows) and the width-halving ladder
+    floors at the pod count."""
+
+    def _args(self, engine="cohort_sharded"):
+        task = tasks_mod.as_task(configs.SYNTHETIC_1_1)
+        fed = dataclasses.replace(FED, client_engine=engine)
+        return task, fed
+
+    def test_per_pod_footprint_law(self):
+        task, fed = self._args()
+        plan = budget_mod.plan_cohort(task, fed, clients=16, k=4,
+                                      param_bytes=10_000, pods=4)
+        bb, ab = task.batch_bytes(fed), task.activation_bytes(fed)
+        # 16 clients over 4 pods: each pod holds 4 rows
+        assert plan.est_bytes == cohort_footprint_bytes(
+            10_000, bb, ab, 4, plan.k_chunk)
+        solo = budget_mod.plan_cohort(task, fed, clients=16, k=4,
+                                      param_bytes=10_000, pods=1)
+        assert solo.est_bytes == cohort_footprint_bytes(
+            10_000, bb, ab, 16, solo.k_chunk)
+        assert plan.est_bytes < solo.est_bytes
+
+    def test_width_ladder_floors_at_pod_count(self):
+        task, fed = self._args()
+        # a budget that forces halving well below 8: with 8 pods the
+        # ladder must stop at width 8 (one row per pod), then demote
+        tight = budget_mod.plan_cohort(task, fed, clients=64, k=4,
+                                       param_bytes=1 << 20, pods=8,
+                                       budget_bytes=1)
+        assert tight.engine == "loop"
+        assert tight.width >= 8
+        assert "8-client cohort chunk" in tight.reason
+
+    def test_single_device_engines_keep_two_client_floor(self):
+        task, fed = self._args(engine="cohort")
+        tight = budget_mod.plan_cohort(task, fed, clients=64, k=4,
+                                       param_bytes=1 << 20,
+                                       budget_bytes=1)
+        assert tight.engine == "loop"
+        assert "2-client cohort chunk" in tight.reason
+
+    def test_mesh_derived_pods(self, multidevice):
+        """Under 8 fake devices the planner derives the pod count from
+        the mesh instead of silently planning single-device footprints."""
+        task, fed = self._args()
+        auto = budget_mod.plan_cohort(task, fed, clients=16, k=4,
+                                      param_bytes=10_000)
+        from repro.launch import mesh
+        pods = mesh.pod_count(max_pods=16)
+        assert pods > 1
+        explicit = budget_mod.plan_cohort(task, fed, clients=16, k=4,
+                                          param_bytes=10_000, pods=pods)
+        assert auto.est_bytes == explicit.est_bytes < budget_mod.plan_cohort(
+            task, fed, clients=16, k=4, param_bytes=10_000, pods=1).est_bytes
+
+
+class TestDispatchDropoutOrder:
+    """The dropout draw precedes the duration draw: a permanently
+    departed client must not consume timing draws or trace-cursor
+    entries, or every survivor's stream desynchronizes."""
+
+    def _behavior(self, name="paper", **kw):
+        return make_behavior(name, FED, seed=0, model_bytes=1000,
+                             heterogeneity=0.6, **kw)
+
+    def _count_duration_calls(self, beh):
+        calls = []
+        orig = beh.duration
+
+        def counting(cid, k, now):
+            calls.append(cid)
+            return orig(cid, k, now)
+
+        beh.duration = counting
+        return calls
+
+    def test_dropped_dispatch_never_draws_duration(self):
+        beh = self._behavior(dropout_prob=1.0)
+        calls = self._count_duration_calls(beh)
+        for cid in range(5):
+            assert beh.dispatch(cid, 5, 0.0) is None
+        assert calls == []
+
+    def test_surviving_dispatch_draws_exactly_once(self):
+        beh = self._behavior(dropout_prob=0.0)
+        calls = self._count_duration_calls(beh)
+        for cid in range(5):
+            assert beh.dispatch(cid, 5, 0.0) > 0.0
+        assert calls == list(range(5))
+
+    def test_trace_cursor_stable_under_dropout(self):
+        """Trace behavior: survivors replay the SAME cursor entries as a
+        dropout-free run — dropped clients advance nothing."""
+        trace = {i: [1.0 + i, 2.0 + i, 3.0 + i] for i in range(4)}
+        free = self._behavior("trace", trace=trace)
+        drop = self._behavior("trace", trace=trace, dropout_prob=1.0)
+        drop.dropout_prob = 1.0
+        for cid in range(4):
+            assert drop.dispatch(cid, 5, 0.0) is None
+        drop.dropout_prob = 0.0
+        for cid in range(4):
+            assert drop.dispatch(cid, 5, 0.0) == free.dispatch(cid, 5, 0.0)
+
+    def test_default_knobs_draw_nothing_extra(self):
+        """dispatch == duration at default knobs: no hidden RNG draws,
+        the paper model's byte-identical stream is preserved."""
+        a = self._behavior()
+        b = self._behavior()
+        for cid in range(6):
+            assert a.dispatch(cid, 5, 0.0) == b.duration(cid, 5, 0.0)
+
+
+class TestAdaptiveKNonFinite:
+    """A diverged adversarial run yields NaN/inf gamma: the K controller
+    must clamp-and-hold instead of crashing on floor(NaN)."""
+
+    def test_nan_and_inf_gamma_leave_k_unchanged(self):
+        from repro.core.adaptive_k import update_k
+        for bad in (float("nan"), float("inf"), -float("inf")):
+            assert update_k(7, bad, gamma_bar=1.0, kappa=2.0) == 7
+        assert update_k(0, float("nan"), 1.0, 2.0, k_min=3) == 3
+
+    def test_finite_gamma_still_integrates(self):
+        from repro.core.adaptive_k import update_k
+        assert update_k(7, 0.0, gamma_bar=1.0, kappa=2.0) == 9
