@@ -1,0 +1,183 @@
+"""CI perf-regression gate: diff run bench JSONs against committed
+baselines (``benchmarks/baselines/*.json``).
+
+The bench jobs have always uploaded their JSONs as artifacts, but nothing
+ever compared them — the perf wins the benches exist to demonstrate
+(batched-kernel speedup, cohort-vs-loop, budgeted arch cohorts,
+auto-window drain reduction) were unguarded against regression. This
+module closes the loop:
+
+* every committed baseline file is matched against the same-named JSON in
+  the run's ``artifacts/bench/``;
+* a fixed set of PINNED ROWS per bench is extracted — dimensionless
+  ratios and event counts (speedups, drain counts, the population
+  flat-scaling ratio), deliberately NOT raw microseconds, so the gate is
+  robust to runner hardware drift while still catching structural
+  regressions (a speedup ratio collapsing means the optimized path got
+  slower relative to its own reference ON THE SAME MACHINE);
+* any pinned row regressing by more than ``--tolerance`` (default 25%)
+  in its bad direction fails the job with exit 1;
+* a markdown delta table is printed — and appended to the file named by
+  ``--summary`` (CI passes ``$GITHUB_STEP_SUMMARY``).
+
+Regenerating baselines deliberately: see benchmarks/baselines/README.md.
+
+CLI:
+    python -m benchmarks.compare --tolerance 0.25 \
+        --summary "$GITHUB_STEP_SUMMARY"
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Tuple
+
+#: direction semantics: "higher" — the metric is good when large (a
+#: speedup); a regression is current << baseline. "lower" — good when
+#: small (drain counts, wall-clock ratios); a regression is current >>
+#: baseline.
+_HIGHER, _LOWER = "higher", "lower"
+
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+CURRENT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                           "bench")
+
+
+def pinned_rows(bench: str, data: dict) -> Dict[str, Tuple[float, str]]:
+    """Extract the pinned rows of one bench JSON: name -> (value,
+    direction). Unknown bench names pin nothing (their JSONs still ride
+    along as artifacts, ungated)."""
+    rows: Dict[str, Tuple[float, str]] = {}
+    if bench == "kernel_bench":
+        # flat-fused vs tree aggregation, and the multi-delta batched
+        # kernel vs B sequential fused calls
+        for key in ("speedup", "batched_speedup"):
+            if key in data:
+                rows[f"kernel/{key}"] = (float(data[key]), _HIGHER)
+    elif bench == "client_bench":
+        for r in data.get("rounds", []):
+            c = r.get("clients")
+            if "speedup" in r:      # cohort engine vs per-client loop
+                rows[f"client/speedup_c{c}"] = (float(r["speedup"]),
+                                                _HIGHER)
+            if "sharded_vs_cohort" in r:
+                rows[f"client/sharded_vs_cohort_c{c}"] = (
+                    float(r["sharded_vs_cohort"]), _HIGHER)
+    elif bench == "arrival_bench":
+        burst = data.get("auto_vs_fixed0_burst")
+        if burst:
+            # auto-window drain batching: fewer drains than arrivals on
+            # bursty traffic; the fixed-0 count pins the event trace
+            rows["arrival/drains_auto"] = (float(burst["drains_auto"]),
+                                           _LOWER)
+            rows["arrival/drains_fixed0"] = (float(burst["drains_fixed0"]),
+                                             _LOWER)
+        scaling = data.get("population_scaling")
+        if scaling and "flat_ratio" in scaling:
+            # population-engine flat scaling: 1M wall / 10k wall
+            rows["arrival/population_flat_ratio"] = (
+                float(scaling["flat_ratio"]), _LOWER)
+    return rows
+
+
+def compare_row(name: str, base: float, cur: float, direction: str,
+                tolerance: float) -> dict:
+    """One pinned row's delta. ``delta`` is the relative change in the
+    GOOD direction (positive = improved), so the gate is simply
+    ``delta < -tolerance``."""
+    if direction == _HIGHER:
+        delta = (cur - base) / abs(base) if base else 0.0
+    else:
+        delta = (base - cur) / abs(base) if base else 0.0
+    return {"row": name, "baseline": base, "current": cur,
+            "direction": direction, "delta": delta,
+            "regressed": delta < -tolerance}
+
+
+def compare_all(baseline_dir: str = BASELINE_DIR,
+                current_dir: str = CURRENT_DIR,
+                tolerance: float = 0.25) -> Tuple[List[dict], List[str]]:
+    """Compare every committed baseline against the run's artifacts.
+    Returns (rows, notes); a baseline whose bench did not run this job is
+    a note, not a failure — the bench jobs each run a subset."""
+    rows: List[dict] = []
+    notes: List[str] = []
+    if not os.path.isdir(baseline_dir):
+        notes.append(f"no baseline directory at {baseline_dir}")
+        return rows, notes
+    for fname in sorted(os.listdir(baseline_dir)):
+        if not fname.endswith(".json"):
+            continue
+        bench = fname[:-len(".json")]
+        cur_path = os.path.join(current_dir, fname)
+        if not os.path.exists(cur_path):
+            notes.append(f"{bench}: not produced by this run (skipped)")
+            continue
+        with open(os.path.join(baseline_dir, fname)) as f:
+            base_data = json.load(f)
+        with open(cur_path) as f:
+            cur_data = json.load(f)
+        base_rows = pinned_rows(bench, base_data)
+        cur_rows = pinned_rows(bench, cur_data)
+        for name, (base_val, direction) in base_rows.items():
+            if name not in cur_rows:
+                notes.append(f"{name}: pinned in baseline but missing "
+                             f"from this run (skipped)")
+                continue
+            rows.append(compare_row(name, base_val, cur_rows[name][0],
+                                    direction, tolerance))
+    return rows, notes
+
+
+def markdown_table(rows: List[dict], notes: List[str],
+                   tolerance: float) -> str:
+    lines = ["### Bench delta vs committed baselines", "",
+             f"Gate: pinned rows failing on >{tolerance:.0%} regression.",
+             ""]
+    if rows:
+        lines += ["| pinned row | baseline | current | delta | status |",
+                  "|---|---:|---:|---:|---|"]
+        for r in rows:
+            status = "**REGRESSED**" if r["regressed"] else (
+                "improved" if r["delta"] > tolerance else "ok")
+            arrow = "higher=better" if r["direction"] == _HIGHER \
+                else "lower=better"
+            lines.append(
+                f"| {r['row']} ({arrow}) | {r['baseline']:.4g} "
+                f"| {r['current']:.4g} | {r['delta']:+.1%} | {status} |")
+    else:
+        lines.append("_no pinned rows compared_")
+    if notes:
+        lines += [""] + [f"- {n}" for n in notes]
+    return "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR)
+    ap.add_argument("--current-dir", default=CURRENT_DIR)
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="max allowed relative regression per pinned row")
+    ap.add_argument("--summary", default="",
+                    help="file to append the markdown delta table to "
+                         "(CI: $GITHUB_STEP_SUMMARY)")
+    args = ap.parse_args()
+    rows, notes = compare_all(args.baseline_dir, args.current_dir,
+                              args.tolerance)
+    table = markdown_table(rows, notes, args.tolerance)
+    print(table)
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(table)
+    bad = [r for r in rows if r["regressed"]]
+    if bad:
+        raise SystemExit(
+            "bench regression gate FAILED: "
+            + "; ".join(f"{r['row']} {r['delta']:+.1%} "
+                        f"(baseline {r['baseline']:.4g} -> "
+                        f"current {r['current']:.4g})" for r in bad))
+
+
+if __name__ == "__main__":
+    main()

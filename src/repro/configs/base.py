@@ -201,6 +201,14 @@ ATTACKS: Tuple[str, ...] = ("none", "sign-flip", "gaussian-noise", "scale",
 #: does with an arriving delta whose norm exceeds k×EWMA.
 SCREEN_POLICIES: Tuple[str, ...] = ("off", "clip", "reject")
 
+#: Valid values of ``FedConfig.population`` (DESIGN.md §12). "off" keeps
+#: the roster semantics (every client materialized and seeded at t=0);
+#: "table" runs the population engine — clients check in from a sampled
+#: arrival process and state is allocated lazily in the compact active-set
+#: table; "materialized" runs the identical arrival process with every
+#: client eagerly materialized (the small-N equivalence reference).
+POPULATION_MODES: Tuple[str, ...] = ("off", "table", "materialized")
+
 
 @dataclasses.dataclass(frozen=True)
 class FedConfig:
@@ -290,6 +298,22 @@ class FedConfig:
     screen_k: float = 3.0           # threshold multiple of the norm EWMA
     screen_alpha: float = 0.2       # EWMA step on accepted norms
     screen_warmup: int = 8          # arrivals before the median-seeded EWMA
+    # population engine (DESIGN.md §12): "off" = roster semantics (all
+    # num_clients materialized and fanned out at t=0); "table" = the
+    # population is a distribution — clients check in at arrival_rate
+    # (modulated by the behavior model), per-client state lives in the
+    # compact active-set table and is allocated on first contact, so
+    # num_clients can be 10**6 while per-drain cost tracks the arrival
+    # rate; "materialized" = same arrival process with every client
+    # eagerly materialized (the N<=256 equivalence reference).
+    population: str = "off"
+    # mean client check-ins per unit virtual time across the whole
+    # population (population != "off" only). The behavior model modulates
+    # it (diurnal phase, burst epochs) and samples the arriving indices.
+    arrival_rate: float = 0.0
+    # probability a drained client immediately starts another local round
+    # (a multi-round session) instead of returning to the population pool.
+    session_stay_prob: float = 0.0
     # device-memory budget for one cohort fan-out dispatch, in MiB
     # (DESIGN.md §10). 0 = unlimited. When the shapes-based footprint
     # estimate exceeds it, the planner (repro.core.budget) clamps the
@@ -342,6 +366,19 @@ class FedConfig:
         if self.screen_warmup < 1:
             raise ValueError(
                 f"screen_warmup must be >= 1, got {self.screen_warmup!r}")
+        if self.population not in POPULATION_MODES:
+            raise ValueError(
+                f"unknown population mode {self.population!r}: expected "
+                f"one of {POPULATION_MODES} (see DESIGN.md §12)")
+        if self.population != "off" and self.arrival_rate <= 0:
+            raise ValueError(
+                f"population={self.population!r} needs arrival_rate > 0 "
+                f"(check-ins per unit virtual time), got "
+                f"{self.arrival_rate!r}")
+        if not 0.0 <= self.session_stay_prob < 1.0:
+            raise ValueError(
+                f"session_stay_prob must be in [0, 1), got "
+                f"{self.session_stay_prob!r}")
 
 
 @dataclasses.dataclass(frozen=True)

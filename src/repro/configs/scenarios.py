@@ -75,6 +75,21 @@ SYNTHETIC_TRACE = _scaled(
     SYNTHETIC_1_1, "synthetic-trace", num_clients=16, samples_per_client=64,
     client_behavior="trace")
 
+#: ONE MILLION clients under the population engine (DESIGN.md §12): a
+#: diurnal check-in process at ~40 arrivals per unit virtual time over a
+#: 1M-strong population, lazily materialized on first contact. Per-drain
+#: cost scales with the arrival rate — the wall-clock is flat in
+#: population size (benchmarks/arrival_bench.py --populations pins
+#: 1M <= 1.5x of 10k). Sessions are one-shot (stay_prob 0.3 keeps a
+#: minority training back-to-back rounds), and auto-window draining
+#: batches the diurnal peaks through the multi-delta kernel.
+SYNTHETIC_1M = _scaled(
+    SYNTHETIC_1_1, "synthetic-1m", num_clients=1_000_000,
+    samples_per_client=64, backend="pallas", batch_window="auto",
+    gmis_depth=256, client_behavior="diurnal",
+    population="table", arrival_rate=40.0, session_stay_prob=0.3,
+    behavior_params=(("period", 20.0), ("amplitude", 0.8)))
+
 #: THE baseline FedConfig for arch tasks — the old ``run_arch_federated``
 #: loop's knobs (gentle lr/momentum for real transformers, small K) plus
 #: the cohort engine and auto window. ``core.tasks.ArchTask.fed`` returns
@@ -118,6 +133,6 @@ ARCH_DANUBE_BUDGETED = ArchScenarioConfig(
                             memory_budget_mb=64))
 
 for _s in (SYNTHETIC_256, FEMNIST_64, SYNTHETIC_BURST, SYNTHETIC_DIURNAL,
-           SYNTHETIC_TRACE, ARCH_DANUBE_SMOKE, ARCH_MAMBA2_SMOKE,
-           ARCH_DANUBE_BUDGETED):
+           SYNTHETIC_TRACE, SYNTHETIC_1M, ARCH_DANUBE_SMOKE,
+           ARCH_MAMBA2_SMOKE, ARCH_DANUBE_BUDGETED):
     SCENARIOS.register(_s.name)(_s)

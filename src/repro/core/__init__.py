@@ -2,9 +2,10 @@
 from repro.core.adaptive_k import AdaptiveK, update_k
 from repro.core.behavior import BEHAVIORS, ClientBehavior, make_behavior
 from repro.core.budget import CohortPlan, plan_cohort
-from repro.core.events import (AutoWindow, EventLoop, EventQueue,
+from repro.core.events import (CHECKIN, AutoWindow, EventLoop, EventQueue,
                                FixedWindow, VirtualClock,
                                make_window_controller)
+from repro.core.population import EwmaStore, PopulationState
 from repro.core.aggregation import (AggregationResult, adaptive_lr,
                                     asyncfeded_aggregate,
                                     asyncfeded_aggregate_per_leaf,
@@ -23,8 +24,9 @@ from repro.core.tasks import (TASKS, ArchTask, LocalTask, PaperTask,
 __all__ = [
     "AdaptiveK", "update_k", "BEHAVIORS", "ClientBehavior", "make_behavior",
     "CohortPlan", "plan_cohort",
-    "AutoWindow", "EventLoop", "EventQueue", "FixedWindow", "VirtualClock",
-    "make_window_controller",
+    "CHECKIN", "AutoWindow", "EventLoop", "EventQueue", "FixedWindow",
+    "VirtualClock", "make_window_controller",
+    "EwmaStore", "PopulationState",
     "AggregationResult", "adaptive_lr", "staleness",
     "asyncfeded_aggregate", "asyncfeded_aggregate_per_leaf",
     "asyncfeded_aggregate_with_dist", "Client", "bucket_size", "run_cohort",

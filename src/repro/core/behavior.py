@@ -22,6 +22,18 @@ Models:
 * ``trace``         — replayable per-client round-duration traces.
 * ``poisson-burst`` — arrivals cluster on a global Poisson burst process.
 * ``diurnal``       — sinusoidal time-of-day rate modulation.
+
+**Population mode** (DESIGN.md §12): with ``population=True`` the model
+additionally owns the *check-in process* — WHO arrives from a population
+of ``fed.num_clients`` potential clients, at what rate. ``next_checkin``
+samples the next check-in time (a Poisson process at ``arrival_rate``,
+modulated per model: diurnal thinning, burst-epoch snapping),
+``sample_index`` draws the arriving population index, and
+``session_continue`` decides whether a drained client starts another
+round or returns to the pool. Per-client quantities (device step time,
+trace rows) derive lazily from ``(seed, index)`` instead of eager
+``num_clients``-sized draws, so a million-client population allocates
+nothing for clients that never check in.
 """
 from __future__ import annotations
 
@@ -39,6 +51,16 @@ BASE_STEP_TIME = 0.05
 #: max suspension hang ~ U(0, HANG_SCALE * step_time * K) (pre-refactor
 #: ``FederatedSimulation.HANG_SCALE``)
 HANG_SCALE = 30.0
+#: salt for the population sampler's private stream (check-in gaps, index
+#: draws, session draws) — disjoint from the timing RNG
+_POP_SALT = 424_243
+#: salt for per-index lazy step-time derivation in population mode
+_STEP_SALT = 0x57E9_71AE
+#: salt for per-index lazy trace synthesis in population mode
+_TRACE_SALT = 0x7124_CE5A
+#: rejection-sampling cap for ``sample_index`` — only reachable when
+#: nearly the whole population is dropped out or in flight (tiny N)
+_SAMPLE_TRIES = 1000
 
 
 class ClientBehavior:
@@ -49,22 +71,53 @@ class ClientBehavior:
 
     def __init__(self, fed: FedConfig, *, seed: int, model_bytes: int,
                  heterogeneity: float = 0.6, churn_prob: float = 0.0,
-                 dropout_prob: float = 0.0, churn_scale: float = 10.0):
+                 dropout_prob: float = 0.0, churn_scale: float = 10.0,
+                 population: bool = False, arrival_rate: float = 0.0,
+                 session_stay_prob: float = 0.0):
         self.fed = fed
         self.model_bytes = model_bytes
         self.heterogeneity = heterogeneity
         self.churn_prob = float(churn_prob)
         self.dropout_prob = float(dropout_prob)
         self.churn_scale = float(churn_scale)
+        self.population = bool(population)
+        self.arrival_rate = float(arrival_rate)
+        self.session_stay_prob = float(session_stay_prob)
+        self._seed = seed
         # Same seed derivation as the pre-refactor simulator, so the paper
         # model's generator stream is byte-identical to the old
         # ``FederatedSimulation.rng``.
         self.rng = np.random.default_rng(seed + 99_991)
-        # heterogeneity: per-client step time, fixed for the run (the old
-        # simulator drew this vector first, before any per-dispatch draw)
-        self.step_time = (BASE_STEP_TIME
-                          * self.rng.lognormal(0.0, heterogeneity,
-                                               fed.num_clients))
+        if self.population:
+            # population mode: NO O(num_clients) eager draws. Step times
+            # derive lazily per index (pure in (seed, index), so clients
+            # materializing in any arrival order see the same speed), and
+            # the check-in process runs on its own stream.
+            if self.arrival_rate <= 0:
+                raise ValueError("population mode needs arrival_rate > 0")
+            self.step_time = None
+            self._lazy_step: Dict[int, float] = {}
+            self.pop_rng = np.random.default_rng(seed + _POP_SALT)
+        else:
+            # heterogeneity: per-client step time, fixed for the run (the
+            # old simulator drew this vector first, before any
+            # per-dispatch draw)
+            self.step_time = (BASE_STEP_TIME
+                              * self.rng.lognormal(0.0, heterogeneity,
+                                                   fed.num_clients))
+
+    def _step(self, client_id: int) -> float:
+        """Per-client device step time: eager array in roster mode, lazy
+        memoized per-index draw in population mode."""
+        if self.step_time is not None:
+            return self.step_time[client_id]
+        st = self._lazy_step.get(client_id)
+        if st is None:
+            r = np.random.default_rng([self._seed, _STEP_SALT,
+                                       int(client_id)])
+            st = BASE_STEP_TIME * r.lognormal(0.0, self.heterogeneity)
+            self._lazy_step[client_id] = st
+        return st
 
     # --- §B.2 primitives shared by several models -------------------------
     def _tx_time(self) -> float:
@@ -103,6 +156,57 @@ class ClientBehavior:
             dur += self.rng.exponential(self.churn_scale * BASE_STEP_TIME * k)
         return dur
 
+    # --- population check-in process (population mode only) ---------------
+    def checkin_rate(self, t: float) -> float:
+        """Instantaneous check-in rate (clients per unit virtual time) at
+        time ``t``. Constant by default; models override to modulate."""
+        return self.arrival_rate
+
+    def peak_checkin_rate(self) -> float:
+        """Upper bound on :meth:`checkin_rate` over all ``t`` — the
+        thinning envelope for :meth:`next_checkin`."""
+        return self.arrival_rate
+
+    def next_checkin(self, now: float) -> float:
+        """Sample the next check-in time strictly after ``now``.
+
+        Inhomogeneous Poisson process via thinning (Lewis & Shedler):
+        candidate gaps are exponential at the peak rate; a candidate at
+        ``t`` is accepted with probability ``checkin_rate(t) / peak``.
+        For constant-rate models the acceptance test always passes (one
+        uniform draw per event, kept so every model shares one draw
+        discipline — table and materialized modes replay identically)."""
+        peak = self.peak_checkin_rate()
+        t = now
+        while True:
+            t += self.pop_rng.exponential(1.0 / peak)
+            if self.pop_rng.random() * peak <= self.checkin_rate(t):
+                return t
+
+    def sample_index(self, excluded) -> Optional[int]:
+        """Draw the arriving population index uniformly from indices not
+        in ``excluded`` (permanently dropped out, or already in flight).
+
+        Rejection sampling: O(1) expected work while the excluded fraction
+        is small — the population regime, where the in-flight cohort is a
+        vanishing fraction of ``num_clients``. Returns ``None`` after
+        ``_SAMPLE_TRIES`` consecutive rejections (pool effectively
+        exhausted at tiny N); the caller skips that check-in."""
+        n = self.fed.num_clients
+        for _ in range(_SAMPLE_TRIES):
+            idx = int(self.pop_rng.integers(n))
+            if idx not in excluded:
+                return idx
+        return None
+
+    def session_continue(self, client_id: int) -> bool:
+        """After a client's upload drains: ``True`` to immediately start
+        another round, ``False`` to return to the anonymous pool. Makes
+        zero draws when ``session_stay_prob`` is 0."""
+        if not self.session_stay_prob:
+            return False
+        return bool(self.pop_rng.random() < self.session_stay_prob)
+
 
 class PaperBehavior(ClientBehavior):
     """Exact §B.2 semantics — download tx + suspension hang + K local steps
@@ -116,7 +220,7 @@ class PaperBehavior(ClientBehavior):
         # tx + (hang + k*step + tx), and float addition isn't associative —
         # byte-equivalence includes the sum order
         down = self._tx_time()
-        return down + (self._hang_time(k) + k * self.step_time[client_id]
+        return down + (self._hang_time(k) + k * self._step(client_id)
                        + self._tx_time())
 
 
@@ -137,22 +241,47 @@ class TraceBehavior(ClientBehavior):
                  trace_len: int = 64, trace_scale: float = 1.0, **kw):
         super().__init__(fed, **kw)
         self.trace_scale = float(trace_scale)
+        self._trace_len = int(trace_len)
+        self._shared: Optional[list] = None
+        self._synth = trace is None
         if trace is None:
-            base = self.fed.k_initial * self.step_time  # (C,) nominal rounds
-            noise = self.rng.lognormal(0.0, 0.5,
-                                       (fed.num_clients, int(trace_len)))
-            self._trace = {i: (base[i] * noise[i]).tolist()
-                           for i in range(fed.num_clients)}
+            if self.population:
+                # lazy: per-index traces synthesized on first contact from
+                # (seed, index) — no O(num_clients * trace_len) table
+                self._trace = {}
+            else:
+                base = self.fed.k_initial * self.step_time  # (C,) nominal
+                noise = self.rng.lognormal(0.0, 0.5,
+                                           (fed.num_clients, self._trace_len))
+                self._trace = {i: (base[i] * noise[i]).tolist()
+                               for i in range(fed.num_clients)}
         elif isinstance(trace, dict):
             self._trace = {int(c): list(map(float, t))
                            for c, t in trace.items()}
         else:
-            shared = list(map(float, trace))
-            self._trace = {i: shared for i in range(fed.num_clients)}
+            self._shared = list(map(float, trace))
+            self._trace = ({} if self.population
+                           else {i: self._shared
+                                 for i in range(fed.num_clients)})
         self._pos: Dict[int, int] = {}
 
+    def _trace_for(self, client_id: int) -> Sequence[float]:
+        t = self._trace.get(client_id)
+        if t is None:
+            if self._shared is not None:
+                t = self._shared
+            elif self.population and self._synth:
+                r = np.random.default_rng([self._seed, _TRACE_SALT,
+                                           int(client_id)])
+                t = (self.fed.k_initial * self._step(client_id)
+                     * r.lognormal(0.0, 0.5, self._trace_len)).tolist()
+            else:
+                raise KeyError(client_id)
+            self._trace[client_id] = t
+        return t
+
     def duration(self, client_id: int, k: int, now: float) -> float:
-        t = self._trace[client_id]
+        t = self._trace_for(client_id)
         i = self._pos.get(client_id, 0)
         self._pos[client_id] = i + 1
         return t[i % len(t)] * self.trace_scale
@@ -181,9 +310,17 @@ class PoissonBurstBehavior(ClientBehavior):
         return self._epochs[bisect.bisect_left(self._epochs, t)]
 
     def duration(self, client_id: int, k: int, now: float) -> float:
-        ready = now + k * self.step_time[client_id] + self._tx_time()
+        ready = now + k * self._step(client_id) + self._tx_time()
         epoch = self._next_epoch_after(ready)
         return (epoch - now) + self.rng.exponential(self.jitter)
+
+    def next_checkin(self, now: float) -> float:
+        """Check-ins cluster on the same global burst epochs as uploads: a
+        homogeneous Poisson candidate snaps forward to the next burst
+        epoch plus a small exponential jitter."""
+        cand = now + self.pop_rng.exponential(1.0 / self.arrival_rate)
+        epoch = self._next_epoch_after(cand)
+        return epoch + self.pop_rng.exponential(self.jitter)
 
 
 class DiurnalBehavior(ClientBehavior):
@@ -208,8 +345,15 @@ class DiurnalBehavior(ClientBehavior):
 
     def duration(self, client_id: int, k: int, now: float) -> float:
         down = self._tx_time()
-        compute = (self._hang_time(k) + k * self.step_time[client_id])
+        compute = (self._hang_time(k) + k * self._step(client_id))
         return (down + compute / self.rate(now) + self._tx_time())
+
+    def checkin_rate(self, t: float) -> float:
+        """Check-in density follows the same day profile as throughput."""
+        return self.arrival_rate * self.rate(t)
+
+    def peak_checkin_rate(self) -> float:
+        return self.arrival_rate * (1.0 + self.amplitude)
 
 
 class FlashCrowdBehavior(ClientBehavior):
@@ -231,7 +375,7 @@ class FlashCrowdBehavior(ClientBehavior):
         self.crowd_span = float(crowd_span)
 
     def duration(self, client_id: int, k: int, now: float) -> float:
-        natural = (self._tx_time() + k * self.step_time[client_id]
+        natural = (self._tx_time() + k * self._step(client_id)
                    + self._tx_time())
         ready = now + natural
         wave = math.ceil(ready / self.wave_period) * self.wave_period
@@ -257,7 +401,7 @@ class StragglerTailBehavior(ClientBehavior):
         self.tail_prob = float(tail_prob)
 
     def duration(self, client_id: int, k: int, now: float) -> float:
-        base = (self._tx_time() + k * self.step_time[client_id]
+        base = (self._tx_time() + k * self._step(client_id)
                 + self._tx_time())
         if self.rng.random() < self.tail_prob:
             base *= 1.0 + self.rng.pareto(self.tail_alpha)

@@ -29,6 +29,15 @@ import heapq
 from typing import Any, Callable, List, Optional, Sequence, Union
 
 
+#: payload sentinel marking a population *check-in* event (DESIGN.md §12):
+#: an anonymous client from the population contacts the server to start a
+#: round. The arriving population index is drawn at fire time by the
+#: population engine — scheduled check-ins carry no client identity, so
+#: their ``client_id`` is -1. The event loop treats them like any other
+#: arrival; only the simulator's population handler interprets the payload.
+CHECKIN = object()
+
+
 @dataclasses.dataclass(order=True)
 class Arrival:
     """A client update landing at the server at virtual ``time``.

@@ -51,7 +51,7 @@ factors back (:meth:`NormScreen.decide_batch`).
 """
 from __future__ import annotations
 
-from typing import Dict, Hashable, List, Optional, Tuple
+from typing import Hashable, List, MutableMapping, Optional, Tuple
 
 import numpy as np
 
@@ -69,7 +69,8 @@ class NormScreen:
     ``(verdict, scale)``."""
 
     def __init__(self, policy: str, *, k: float = 3.0, alpha: float = 0.2,
-                 warmup: int = 8):
+                 warmup: int = 8,
+                 store: Optional[MutableMapping[Hashable, float]] = None):
         if policy not in ("clip", "reject"):
             raise ValueError(f"screen policy must be 'clip' or 'reject', "
                              f"got {policy!r}")
@@ -83,7 +84,12 @@ class NormScreen:
         #: global bootstrap reference — median of the warmup window; stays
         #: fixed afterward (per-client EWMAs take over the tracking)
         self.ewma: Optional[float] = None
-        self._baseline: Dict[Hashable, float] = {}
+        # per-client EWMA baselines. ``store`` injects an external backing
+        # map — the population engine passes its stacked-array-backed view
+        # (core.population.EwmaStore) so baselines live in the active-set
+        # table instead of an unbounded dict; mutated only in place.
+        self._baseline: MutableMapping[Hashable, float] = (
+            {} if store is None else store)
         self._warm: List[float] = []
         self.counts = {"accept": 0, "clip": 0, "reject": 0}
 
@@ -130,8 +136,11 @@ class NormScreen:
                 # warmup-seeded baseline the settled median disowns (the
                 # client re-bootstraps through the first-contact clip)
                 cut = self.k * self.ewma
-                self._baseline = {c: b for c, b in self._baseline.items()
-                                  if b <= cut}
+                # prune IN PLACE: ``_baseline`` may be an injected
+                # array-backed store (population mode) that rebinding
+                # would silently disconnect from the active-set table
+                for c in [c for c, b in self._baseline.items() if b > cut]:
+                    del self._baseline[c]
                 self._warm = []
             return self._accept(norm, client_id)
         base = self._baseline.get(client_id)
@@ -168,17 +177,20 @@ class NormScreen:
         return out
 
 
-def make_screen(fed: FedConfig) -> Optional[NormScreen]:
+def make_screen(fed: FedConfig, *,
+                store: Optional[MutableMapping] = None
+                ) -> Optional[NormScreen]:
     """Build the screen a server should run under ``fed`` — None when
     screening is off (the default), so defense-off runs carry zero extra
-    state and replay existing traces byte-identically."""
+    state and replay existing traces byte-identically. ``store`` injects
+    an external per-client baseline map (population mode)."""
     if fed.screen == "off":
         return None
     if fed.screen not in SCREEN_POLICIES:
         raise ValueError(f"unknown screen policy {fed.screen!r}: expected "
                          f"one of {SCREEN_POLICIES}")
     return NormScreen(fed.screen, k=fed.screen_k, alpha=fed.screen_alpha,
-                      warmup=fed.screen_warmup)
+                      warmup=fed.screen_warmup, store=store)
 
 
 def verdict_of_scale(scale: float) -> str:

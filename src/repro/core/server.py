@@ -124,6 +124,13 @@ class AsyncServer:
         (events.AutoWindow) clamps its target batch to this."""
         return None
 
+    def on_disconnect(self, client_id: int) -> None:
+        """Population-mode hook: the client's session ended and it is NOT
+        coming back for another round right now — drop any per-client
+        server state registered at its last reply, so state scales with
+        the in-flight cohort instead of every client ever contacted.
+        Default: nothing registered."""
+
     def finalize(self, now: float) -> None:
         """Runtime end-of-run hook, called once when virtual time runs out.
         Default: nothing pending."""
@@ -351,6 +358,14 @@ class AsyncFedEDServer(AsyncServer):
         if self.backend == "pallas" and self.gmis_mode == "ring":
             return ops.fedagg.batched_b_max()
         return None
+
+    def on_disconnect(self, client_id: int) -> None:
+        """Release the snapshot registration made when this client's final
+        reply was issued. Matters most in displacement mode, where a
+        registration accumulates a displacement pytree on EVERY aggregation
+        until released — a leak proportional to all contacted clients if
+        pool-returning clients stayed registered."""
+        self.gmis.release(client_id)
 
 
 class FedAsyncServer(AsyncServer):

@@ -45,11 +45,13 @@ import jax.numpy as jnp
 from repro.configs.base import FedConfig
 from repro.core import budget as budget_mod
 from repro.core import cohort
+from repro.core import population as population_mod
+from repro.core import screening
 from repro.core import tasks as tasks_mod
 from repro.core.adversary import make_adversary
 from repro.core.behavior import make_behavior
 from repro.core.client import Client
-from repro.core.events import (EventLoop, VirtualClock,
+from repro.core.events import (CHECKIN, EventLoop, VirtualClock,
                                make_window_controller)
 from repro.core.server import ClientUpdate, ServerReply, make_server
 from repro.utils import pytree as pt
@@ -83,6 +85,10 @@ class SimResult:
     #: adversary stats (attack name, corrupted client ids, applications);
     #: None for benign runs
     attack: Optional[dict] = None
+    #: population-engine telemetry (population.PopulationState.stats():
+    #: contacted/materialized counts, check-ins, max in-flight); None for
+    #: roster runs
+    population: Optional[dict] = None
 
     def max_accuracy(self, within_time: Optional[float] = None) -> float:
         pts = [p for p in self.points
@@ -111,6 +117,8 @@ class SimResult:
             out["screen"] = self.screen
         if self.attack is not None:
             out["attack"] = self.attack
+        if self.population is not None:
+            out["population"] = self.population
         return out
 
     def to_json(self) -> dict:
@@ -140,7 +148,16 @@ class FederatedSimulation:
         # a float or "auto"; resolved to a window controller per run
         self.batch_window = (fed.batch_window if batch_window is None
                              else batch_window)
-        train_sets, eval_batch = self.task.load_data(fed, seed=seed)
+        # population engine (DESIGN.md §12): no roster, no O(num_clients)
+        # work anywhere in this constructor — clients materialize lazily
+        # on first contact from (seed, index)
+        self._population: Optional[population_mod.PopulationState] = None
+        if fed.population != "off":
+            self._population = population_mod.PopulationState(
+                self.task, fed, seed=seed)
+            eval_batch = self._population.eval_batch
+        else:
+            train_sets, eval_batch = self.task.load_data(fed, seed=seed)
         self.eval_batch = jax.tree.map(jnp.asarray, eval_batch)
         params = self.task.init(jax.random.PRNGKey(seed))
         self.model_bytes = pt.tree_bytes(params)
@@ -150,8 +167,19 @@ class FederatedSimulation:
             # per-leaf staleness only exists on the pytree backend
             kw.setdefault("backend", fed.backend)
         self.server = make_server(algorithm, params, fed, **kw)
-        self.clients = [Client(i, self.task, train_sets[i], fed, seed=seed)
-                        for i in range(fed.num_clients)]
+        if self._population is not None:
+            self.clients = []
+            if self.server.screen is not None and fed.population == "table":
+                # re-home the norm screen's per-client EWMA baselines into
+                # the active-set table's stacked array (the materialized
+                # reference keeps the default dict — same mapping
+                # semantics, different backing, identical traces)
+                self.server.screen = screening.make_screen(
+                    fed, store=self._population.screen_store())
+        else:
+            self.clients = [Client(i, self.task, train_sets[i], fed,
+                                   seed=seed)
+                            for i in range(fed.num_clients)]
         # arrival dynamics: the behavior model owns the timing RNG and the
         # per-client device speeds (behavior-name validation lives in
         # FedConfig.__post_init__; kwargs: config tuple < explicit dict)
@@ -159,9 +187,15 @@ class FederatedSimulation:
         bkw.setdefault("churn_prob", fed.churn_prob)
         bkw.setdefault("dropout_prob", fed.dropout_prob)
         bkw.update(behavior_kwargs or {})
+        if self._population is not None:
+            bkw.setdefault("population", True)
+            bkw.setdefault("arrival_rate", fed.arrival_rate)
+            bkw.setdefault("session_stay_prob", fed.session_stay_prob)
         self.behavior = make_behavior(
             behavior or fed.client_behavior, fed, seed=seed,
             model_bytes=self.model_bytes, heterogeneity=heterogeneity, **bkw)
+        if self._population is not None and fed.population == "materialized":
+            self._population.materialize_all(self.behavior)
         # byzantine cohort (DESIGN.md §11): None for benign configs, so no
         # extra RNG stream exists and traces replay byte-identically
         self.adversary = make_adversary(fed, seed=seed)
@@ -252,6 +286,12 @@ class FederatedSimulation:
         aggregated updates, whichever comes first (the arch path's
         ``--steps`` knob maps onto the event runtime this way)."""
         self._max_updates = max_updates
+        if self._population is not None:
+            if not self.server.is_async:
+                raise ValueError(
+                    "population mode drives the async drain loop; "
+                    "synchronous aggregators need population='off'")
+            return self._run_population(max_time, eval_every)
         if self.server.is_async:
             return self._run_async(max_time, eval_every)
         return self._run_sync(max_time, eval_every)
@@ -300,6 +340,107 @@ class FederatedSimulation:
         return SimResult(self.algorithm, points, self.server.history,
                          updates, loop.drains, self._plan_dict(),
                          self.server.screen_stats(), self._attack_dict())
+
+    def _dispatch_population(self, loop: EventLoop, now: float,
+                             jobs: List[Tuple[Client, ServerReply]]) -> None:
+        """Population-mode fan-out: identical to :meth:`_dispatch` plus
+        active-set bookkeeping — a dropout is permanent (the arrival
+        sampler never re-admits the index), a live dispatch marks the
+        index in flight so a check-in cannot start a second concurrent
+        session for it."""
+        pop = self._population
+        for (c, reply), upd in zip(jobs, self._run_locals(jobs)):
+            if self.adversary is not None:
+                upd = self.adversary.corrupt(upd)
+            delay = self.behavior.dispatch(c.client_id, reply.k_next, now)
+            if delay is None:
+                pop.mark_dropped(c.client_id)
+                self.server.on_disconnect(c.client_id)
+            else:
+                pop.mark_dispatch(c.client_id, reply.iteration)
+                loop.queue.push(now + delay, c.client_id, upd)
+
+    def _run_population(self, max_time: float, eval_every: int) -> SimResult:
+        """The population drain loop (DESIGN.md §12).
+
+        Two event species share one queue: *uploads* (a dispatched
+        client's update landing, exactly as in :meth:`_run_async`) and
+        *check-ins* (the ``events.CHECKIN`` sentinel — an anonymous client
+        from the population contacting the server). The check-in process
+        self-chains: each drained check-in schedules the next one, so
+        exactly one pending check-in event exists at any time and queue
+        size stays O(in-flight cohort), never O(num_clients).
+
+        Per drained batch, in event order: uploads aggregate through
+        ``on_update_batch`` (burst semantics identical to the roster
+        loop), each drained client draws ``session_continue`` (stay for
+        another round, or return to the pool); then each drained check-in
+        draws its population index (rejection-sampled over dropped and
+        in-flight indices) and connects. Both groups fan out as ONE cohort
+        job, so the batched client engines serve check-in admissions and
+        session continuations together. All per-index randomness derives
+        from (seed, index), so the lazy table and the eager materialized
+        reference replay identical traces.
+        """
+        pop = self._population
+        beh = self.behavior
+        points = [self._eval_point(0.0)]
+        auto_kw = {}
+        if self.fed.window_gamma_threshold > 0:
+            auto_kw["gamma_threshold"] = self.fed.window_gamma_threshold
+        self.window_controller = make_window_controller(
+            self.batch_window, batch_limit=self.server.batch_limit(),
+            **auto_kw)
+        loop = EventLoop(self.window_controller, max_time)
+        loop.queue.push(beh.next_checkin(0.0), -1, CHECKIN)
+        updates = 0
+
+        def handle(now: float, batch) -> None:
+            nonlocal updates
+            uploads = [ev for ev in batch if ev.payload is not CHECKIN]
+            checkins = [ev for ev in batch if ev.payload is CHECKIN]
+            # chain the check-in process first: follow-ups exist before
+            # any training happens, so an empty drain cannot stall the run
+            for ev in checkins:
+                loop.queue.push(beh.next_checkin(ev.time), -1, CHECKIN)
+            jobs: List[Tuple[Client, ServerReply]] = []
+            if uploads:
+                n_hist = len(self.server.history)
+                replies = self.server.on_update_batch(
+                    [ev.payload for ev in uploads])
+                self.window_controller.observe_gamma(
+                    [h.gamma for h in self.server.history[n_hist:]])
+                before = updates
+                updates += len(uploads)
+                if before // eval_every != updates // eval_every:
+                    points.append(self._eval_point(now))
+                for ev, reply in zip(uploads, replies):
+                    if beh.session_continue(ev.client_id):
+                        # stays in flight: a same-batch check-in cannot
+                        # draw this index into a second concurrent session
+                        jobs.append((pop.client(ev.client_id), reply))
+                    else:
+                        pop.mark_returned(ev.client_id)
+                        self.server.on_disconnect(ev.client_id)
+            for ev in checkins:
+                pop.checkins += 1
+                idx = beh.sample_index(pop.excluded)
+                if idx is None:          # pool exhausted (tiny N only)
+                    pop.skipped_checkins += 1
+                    continue
+                jobs.append((pop.client(idx), self.server.on_connect(idx)))
+            if jobs:
+                self._dispatch_population(loop, now, jobs)
+            if self._max_updates is not None and updates >= self._max_updates:
+                loop.stop()
+
+        end = loop.run(handle)
+        self.server.finalize(end)    # e.g. FedBuff flushes a partial buffer
+        points.append(self._eval_point(end))
+        return SimResult(self.algorithm, points, self.server.history,
+                         updates, loop.drains, self._plan_dict(),
+                         self.server.screen_stats(), self._attack_dict(),
+                         pop.stats())
 
     def _run_sync(self, max_time: float, eval_every: int) -> SimResult:
         points = [self._eval_point(0.0)]

@@ -43,6 +43,7 @@ from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import FedConfig, ModelConfig, ShapeConfig, reduced
 from repro.configs.paper_tasks import PaperTaskConfig
@@ -111,6 +112,18 @@ class LocalTask:
     def load_data(self, fed: FedConfig, seed: int):
         raise NotImplementedError
 
+    def load_population_data(self, fed: FedConfig, seed: int):
+        """Population-engine data hook (DESIGN.md §12): returns
+        ``(client_data_fn, eval_batch)`` where ``client_data_fn(idx)``
+        generates client ``idx``'s dataset on demand as a pure function of
+        ``(seed, idx)`` — the engine materializes clients lazily on first
+        contact, so no per-client list of ``fed.num_clients`` datasets may
+        ever exist. Tasks whose generators are inherently whole-population
+        (eager) may leave this unimplemented; the simulator fails fast."""
+        raise NotImplementedError(
+            f"task {self.name!r} has no lazy per-client data generator; "
+            f"population mode needs load_population_data")
+
     def make_batcher(self, dataset, batch_size: int, seed: int):
         raise NotImplementedError
 
@@ -156,6 +169,35 @@ class PaperTask(LocalTask):
     def load_data(self, fed: FedConfig, seed: int):
         train_sets, eval_batch = load_task_datasets(self.cfg, seed=seed)
         return train_sets, eval_batch
+
+    def load_population_data(self, fed: FedConfig, seed: int):
+        """Lazy per-client data for the population engine — synthetic
+        tasks only: each client's rows derive from ``(seed, client_id)``
+        (data.synthetic.generate_synthetic_client), so a million-client
+        population allocates nothing until a client first checks in. The
+        eval batch comes from a handful of held-out pseudo-clients drawn
+        with a salted seed (indices the arrival sampler can never emit),
+        O(1) in the population size."""
+        if not self.cfg.name.startswith("synthetic"):
+            return super().load_population_data(fed, seed)
+        from repro.data.pipeline import _synthetic_alpha_beta
+        from repro.data.synthetic import (generate_synthetic,
+                                          generate_synthetic_client)
+        alpha, beta = _synthetic_alpha_beta(self.cfg.name)
+        cfg = self.cfg
+
+        def client_data(idx: int):
+            return generate_synthetic_client(
+                idx, alpha, beta, cfg.input_shape[0], cfg.num_classes,
+                cfg.samples_per_client, seed)
+
+        held_out = generate_synthetic(
+            alpha, beta, num_clients=8, dim=cfg.input_shape[0],
+            num_classes=cfg.num_classes,
+            base_samples=cfg.samples_per_client, seed=seed + 61_981)
+        eval_batch = (np.concatenate([x for x, _ in held_out]),
+                      np.concatenate([y for _, y in held_out]))
+        return client_data, eval_batch
 
     def make_batcher(self, dataset, batch_size: int, seed: int):
         return MiniBatcher(dataset, batch_size, seed=seed)
@@ -240,6 +282,13 @@ class ArchTask(LocalTask):
         eval_batch = TokenBatcher(self.cfg, self.shape,
                                   seed=seed + 131_071).next()
         return list(range(fed.num_clients)), eval_batch
+
+    def load_population_data(self, fed: FedConfig, seed: int):
+        # generative streams are lazy by construction: a client's
+        # "dataset" is its stream id, so the population hook is free
+        _, eval_batch = self.load_data(
+            dataclasses.replace(fed, num_clients=1), seed)
+        return (lambda idx: idx), eval_batch
 
     def make_batcher(self, dataset, batch_size: int, seed: int):
         """Token-batch geometry is owned by this task's ShapeConfig

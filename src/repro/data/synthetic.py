@@ -39,6 +39,43 @@ def generate_synthetic(alpha: float = 1.0, beta: float = 1.0,
     return datasets
 
 
+#: seed-sequence salt for the per-client lazy generator below — keeps the
+#: per-index streams disjoint from every other derived stream in the repo
+_CLIENT_SALT = 0x5EED_C11E
+
+
+def generate_synthetic_client(client_id: int, alpha: float = 1.0,
+                              beta: float = 1.0, dim: int = 60,
+                              num_classes: int = 10,
+                              base_samples: int = 256,
+                              seed: int = 0) -> Dataset:
+    """One client's Synthetic-alpha-beta dataset, derived from
+    ``(seed, client_id)`` alone.
+
+    The population engine (DESIGN.md §12) materializes clients lazily on
+    first contact, in arrival order — so a client's data cannot come from
+    a shared sequential stream (as :func:`generate_synthetic` draws it) or
+    the draws would depend on *which other* clients happened to arrive
+    first. Deriving each client's generator from ``(seed, client_id)``
+    makes the dataset a pure function of the index: any subset of a
+    million-client population can materialize in any order and always see
+    the same rows.
+    """
+    rng = np.random.default_rng([seed, _CLIENT_SALT, int(client_id)])
+    raw = rng.lognormal(mean=np.log(base_samples), sigma=0.7)
+    count = max(64, int(raw))
+    sigma = np.diag(np.arange(1, dim + 1, dtype=np.float64) ** -1.2)
+    u = rng.normal(0.0, alpha)
+    b_loc = rng.normal(0.0, beta)
+    w = rng.normal(u, 1.0, size=(dim, num_classes))
+    b = rng.normal(u, 1.0, size=(num_classes,))
+    v = rng.normal(b_loc, 1.0, size=(dim,))
+    x = rng.multivariate_normal(v, sigma, size=count)
+    logits = x @ w + b
+    y = np.argmax(logits, axis=-1)
+    return x.astype(np.float32), y.astype(np.int32)
+
+
 def train_test_split(datasets: List[Dataset], test_frac: float = 0.1,
                      seed: int = 0):
     """Paper 6.1: 'sample 10% of each dataset randomly for testing'."""

@@ -1,0 +1,300 @@
+"""Population engine (DESIGN.md §12).
+
+Four invariants pin the million-client path:
+
+* **table == materialized** — the lazy active-set engine and the eagerly
+  materialized reference share every RNG draw and every code path, so at
+  N <= 256 their event traces, eval curves, and per-client tables must
+  match EXACTLY (float equality, not tolerance) on both server backends.
+* **engine invariance** — identical (seed, drain schedule) must produce
+  identical active-set tables and identical PCG64 batcher states whether
+  clients train through the ``loop``, ``cohort``, or ``cohort_sharded``
+  engine (the sharded case needs the 8-fake-device ``multidevice``
+  fixture, i.e. the tier1-multidevice CI job).
+* **dropout permanence at population scale** — once the behavior model
+  drops a client, no later check-in may re-admit it, even across a
+  100k-strong population where the sampler never sees a roster.
+* **first-contact regressions** — the norm screen's EWMA store and
+  ``FedBuffServer.finalize`` must handle population indices that were
+  never materialized (first contact in the final window, the flush's
+  synthetic ``client_id=-1``) without KeyError.
+"""
+import dataclasses
+
+import pytest
+
+from repro import configs
+from repro.configs.scenarios import SYNTHETIC_1M
+from repro.core import tasks as tasks_mod
+from repro.core.behavior import ClientBehavior
+from repro.core.population import EwmaStore, PopulationState
+from repro.core.screening import NormScreen
+from repro.core.simulator import FederatedSimulation
+
+MODEL_BYTES = 10_000
+
+
+def pop_setup(n, *, population="table", arrival_rate=30.0,
+              backend="pytree", engine="cohort", behavior="diurnal",
+              stay=0.25, samples=32, **fed_kw):
+    """A SYNTHETIC_1_1 clone at population scale ``n``."""
+    base = configs.SYNTHETIC_1_1
+    fed = dataclasses.replace(
+        base.fed, num_clients=n, population=population,
+        arrival_rate=arrival_rate, session_stay_prob=stay,
+        backend=backend, client_engine=engine, client_behavior=behavior,
+        batch_window="auto", **fed_kw)
+    task = dataclasses.replace(base, num_clients=n,
+                               samples_per_client=samples, fed=fed)
+    return task, fed
+
+
+def trace(res):
+    """The full event trace as comparable tuples (nan-free under
+    asyncfeded, so ``==`` is byte-match)."""
+    return [dataclasses.astuple(r) for r in res.history]
+
+
+def evals(res):
+    return [dataclasses.astuple(p) for p in res.points]
+
+
+def table_rows(sim, *, drop=("slot",), active_only=False):
+    """The active-set table minus the columns the comparison must ignore:
+    ``slot`` differs between table mode (first-contact order) and
+    materialized mode (index order); ``active_only`` restricts to rows
+    with any dispatches, because materialize_all() allocates a row for
+    every index."""
+    out = {}
+    for idx, row in sim._population.table().items():
+        if active_only and row["rounds"] == 0:
+            continue
+        out[idx] = {k: v for k, v in row.items() if k not in drop}
+    return out
+
+
+class TestTableVsMaterialized:
+    """The acceptance criterion: lazy == eager, exactly, at N=256 on both
+    server backends."""
+
+    @pytest.mark.parametrize("backend", ["pytree", "pallas"])
+    def test_trace_byte_match_n256(self, backend):
+        results = {}
+        for mode in ("table", "materialized"):
+            task, fed = pop_setup(256, population=mode, backend=backend,
+                                  arrival_rate=40.0)
+            sim = FederatedSimulation(task, fed, "asyncfeded", seed=3)
+            results[mode] = (sim, sim.run(max_time=1.5, eval_every=25))
+        (sim_t, res_t), (sim_m, res_m) = results["table"], results[
+            "materialized"]
+        assert res_t.total_updates >= 10
+        assert trace(res_t) == trace(res_m)
+        assert evals(res_t) == evals(res_m)
+        # arrival process identical: every counter, not just the trace
+        for key in ("checkins", "skipped_checkins", "sessions",
+                    "max_in_flight", "dropped"):
+            assert res_t.population[key] == res_m.population[key], key
+        # per-client table identical up to slot numbering (materialized
+        # allocates slots in index order, table in first-contact order)
+        assert (table_rows(sim_t, active_only=True)
+                == table_rows(sim_m, active_only=True))
+        # the lazy engine only ever paid for contacted clients
+        assert (res_t.population["materialized"]
+                == res_t.population["contacted"] < 256)
+        assert res_m.population["materialized"] == 256
+
+    def test_equivalence_with_screen_churn_dropout(self):
+        """Same invariant with every per-client state machine lit up:
+        norm screening (EwmaStore vs plain dict), churn, dropout, bursty
+        arrivals, pallas backend. Tables are compared without the ewma
+        column — materialized mode keeps the screen's plain-dict store."""
+        results = {}
+        for mode in ("table", "materialized"):
+            task, fed = pop_setup(
+                96, population=mode, backend="pallas",
+                behavior="poisson-burst", arrival_rate=35.0,
+                screen="reject", churn_prob=0.05, dropout_prob=0.05)
+            sim = FederatedSimulation(task, fed, "asyncfeded", seed=11)
+            results[mode] = (sim, sim.run(max_time=2.0, eval_every=25))
+        (sim_t, res_t), (sim_m, res_m) = results["table"], results[
+            "materialized"]
+        assert trace(res_t) == trace(res_m)
+        assert (sim_t._population.dropped == sim_m._population.dropped)
+        assert (table_rows(sim_t, drop=("slot", "ewma"), active_only=True)
+                == table_rows(sim_m, drop=("slot", "ewma"),
+                              active_only=True))
+        st, sm = sim_t.server.screen.stats(), sim_m.server.screen.stats()
+        assert st == sm
+        # table mode really used the table-backed store
+        assert isinstance(sim_t.server.screen._baseline, EwmaStore)
+
+
+class TestEngineInvariance:
+    """Identical (seed, drain schedule) ⇒ identical active-set tables and
+    PCG64 batcher states, whichever client engine trains the cohort."""
+
+    def _run(self, engine, seed=5):
+        task, fed = pop_setup(64, engine=engine, arrival_rate=30.0,
+                              churn_prob=0.05, dropout_prob=0.1)
+        sim = FederatedSimulation(task, fed, "asyncfeded", seed=seed)
+        res = sim.run(max_time=2.0, eval_every=25)
+        return sim, res
+
+    def _assert_same(self, a, b):
+        (sim_a, res_a), (sim_b, res_b) = a, b
+        assert trace(res_a) == trace(res_b)
+        # slot numbers INCLUDED: both table-mode runs must contact
+        # clients in the same order
+        assert table_rows(sim_a, drop=()) == table_rows(sim_b, drop=())
+        assert sim_a._population.dropped == sim_b._population.dropped
+        # the population sampler's generator converged too
+        assert (sim_a.behavior.pop_rng.bit_generator.state
+                == sim_b.behavior.pop_rng.bit_generator.state)
+        # every materialized client carries the identical PCG64 stream
+        ca, cb = sim_a._population._clients, sim_b._population._clients
+        assert set(ca) == set(cb) and len(ca) > 0
+        for idx in ca:
+            assert (ca[idx].batcher.rng.bit_generator.state
+                    == cb[idx].batcher.rng.bit_generator.state), idx
+
+    def test_loop_vs_cohort(self):
+        self._assert_same(self._run("loop"), self._run("cohort"))
+
+    def test_cohort_vs_sharded(self, multidevice):
+        self._assert_same(self._run("cohort"),
+                          self._run("cohort_sharded"))
+
+
+class TestDropoutPermanence:
+    """A dropped client never re-enters the pool — pinned by spying on
+    every dispatch the behavior model makes, at a population size where
+    no roster exists to enumerate."""
+
+    def test_dropped_never_redispatched_at_scale(self):
+        n = 100_000
+        task, fed = pop_setup(n, arrival_rate=30.0, dropout_prob=0.3,
+                              stay=0.5)
+        sim = FederatedSimulation(task, fed, "asyncfeded", seed=7)
+        log = []
+        orig = sim.behavior.dispatch
+
+        def spy(client_id, k, now):
+            out = orig(client_id, k, now)
+            log.append((client_id, out is None))
+            return out
+
+        sim.behavior.dispatch = spy
+        res = sim.run(max_time=3.0, eval_every=100)
+        pop = sim._population
+        dead = set()
+        for cid, dropped_now in log:
+            assert cid not in dead, f"client {cid} re-admitted after drop"
+            if dropped_now:
+                dead.add(cid)
+        assert dead == pop.dropped and len(dead) >= 3
+        # dropped clients are out of flight and stay out of the sampler
+        for cid in dead:
+            assert cid in pop.excluded
+            assert not pop.in_flight[pop.index_of[cid]]
+        # population-scale sanity: nothing O(num_clients) happened
+        assert res.population["contacted"] < 1_000
+        assert (res.population["materialized"]
+                == res.population["contacted"])
+        assert sim.clients == []
+
+    def test_sampler_respects_excluded(self):
+        fed = dataclasses.replace(
+            configs.SYNTHETIC_1_1.fed, num_clients=4, population="table",
+            arrival_rate=5.0)
+        beh = ClientBehavior(fed, seed=0, model_bytes=MODEL_BYTES,
+                             population=True, arrival_rate=5.0)
+        assert beh.sample_index(frozenset({0, 1, 3})) == 2
+        assert beh.sample_index(frozenset({0, 1, 2, 3})) is None
+
+
+class TestEwmaStore:
+    """The table-backed screening store: index keys live in the stacked
+    ewma column, everything else overflows to a dict."""
+
+    @pytest.fixture()
+    def pop(self):
+        task, fed = pop_setup(32)
+        return PopulationState(tasks_mod.as_task(task), fed, seed=0)
+
+    def test_never_materialized_index_contract(self, pop):
+        store = pop.screen_store()
+        with pytest.raises(KeyError):
+            store[7]
+        assert store.get(7) is None          # the .get path the screen uses
+        store[7] = 1.5                       # first contact allocates a slot
+        assert store[7] == 1.5
+        assert 7 in pop.index_of
+        assert pop.ewma_set[pop.index_of[7]]
+        del store[7]
+        assert store.get(7) is None
+        assert 7 in pop.index_of             # the slot itself persists
+
+    def test_overflow_keys(self, pop):
+        store = pop.screen_store()
+        store[-1] = 2.0                      # FedBuff flush record id
+        store[None] = 3.0                    # degenerate screen mode
+        store[True] = 9.0                    # bool is NOT index 1
+        assert store[-1] == 2.0 and store[None] == 3.0 and store[True] == 9.0
+        assert pop.contacted == 0
+        assert len(store) == 3 and set(store) == {-1, None, True}
+
+    def test_warmup_prune_in_place(self, pop):
+        """NormScreen's warmup prune deletes through the MutableMapping —
+        a corrupt first-contact baseline must leave the table's ewma
+        column, not survive because the store isn't a plain dict."""
+        screen = NormScreen("reject", k=3.0, alpha=0.2, warmup=4,
+                            store=pop.screen_store())
+        # the corrupt client lands FIRST, before the provisional median
+        # screen exists — it seeds baseline 100.0 unchallenged
+        for cid, norm in ((20, 100.0), (1, 1.0), (2, 1.1), (3, 0.9)):
+            screen.observe(norm, client_id=cid)
+        assert screen._baseline.get(20) is None      # outlier pruned
+        assert screen._baseline.get(1) is not None   # honest kept
+        assert 20 in pop.index_of                    # slot survives...
+        assert not pop.ewma_set[pop.index_of[20]]    # ...baseline doesn't
+        # post-warmup first contact on a never-materialized index
+        verdict, _ = screen.observe(1.0, client_id=77)
+        assert verdict == "accept"
+        assert screen._baseline.get(77) is not None
+        assert 77 not in pop._clients
+
+
+class TestFedBuffFinalize:
+    """End-of-run flush with a first-contact client in the final window:
+    the -1 flush record and the screen's EWMA path must both survive
+    population indices that never materialized before the horizon."""
+
+    def test_finalize_partial_buffer_population(self):
+        task, fed = pop_setup(64, arrival_rate=30.0, screen="reject",
+                              fedbuff_size=50)
+        sim = FederatedSimulation(task, fed, "fedbuff", seed=2)
+        res = sim.run(max_time=1.5, eval_every=25)
+        # buffer strictly smaller than fedbuff_size -> finalize flushed it
+        flush = [r for r in res.history if r.client_id == -1]
+        assert len(flush) == 1
+        assert res.total_updates >= 1
+        # the synthetic flush id stayed out of the population table
+        assert -1 not in sim._population.index_of
+        assert isinstance(sim.server.screen._baseline, EwmaStore)
+
+
+class TestMillionClientScenario:
+    """SYNTHETIC_1M construction is O(contacted), not O(num_clients)."""
+
+    def test_constructs_lazily_and_runs(self):
+        sim = FederatedSimulation(SYNTHETIC_1M, SYNTHETIC_1M.fed,
+                                  "asyncfeded", seed=0)
+        pop = sim._population
+        assert pop.fed.num_clients == 1_000_000
+        assert sim.clients == [] and pop.contacted == 0
+        assert sim.behavior.step_time is None    # no 1M-wide eager array
+        res = sim.run(max_time=0.5, eval_every=50)
+        stats = res.population
+        assert 0 < stats["contacted"] <= stats["checkins"]
+        assert stats["contacted"] < 10_000
+        assert stats["capacity"] < 10_000        # table never ballooned
