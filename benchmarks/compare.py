@@ -43,6 +43,14 @@ BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
 CURRENT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                            "bench")
 
+#: benches whose pinned rows this gate knows how to extract. A run that
+#: PRODUCES one of these JSONs without a committed baseline used to slip
+#: through silently (compare_all iterated the baseline dir only) — the new
+#: bench looked gated but guarded nothing. Producing a gated bench with no
+#: baseline is now a hard failure; genuinely ungated experiments just use
+#: a name outside this tuple.
+GATED_BENCHES = ("kernel_bench", "client_bench", "arrival_bench")
+
 
 def pinned_rows(bench: str, data: dict) -> Dict[str, Tuple[float, str]]:
     """Extract the pinned rows of one bench JSON: name -> (value,
@@ -55,6 +63,18 @@ def pinned_rows(bench: str, data: dict) -> Dict[str, Tuple[float, str]]:
         for key in ("speedup", "batched_speedup"):
             if key in data:
                 rows[f"kernel/{key}"] = (float(data[key]), _HIGHER)
+        # compressed transport (DESIGN.md §13): int8 round-trip error on
+        # seeded data and the VMEM batch-knee gain are deterministic shape
+        # arithmetic — pinned instead of the load-sensitive parity floats
+        if "int8_quant_rel_err" in data:
+            rows["kernel/int8_quant_rel_err"] = (
+                float(data["int8_quant_rel_err"]), _LOWER)
+        if "b_max_gain_int8" in data:
+            rows["kernel/b_max_gain_int8"] = (
+                float(data["b_max_gain_int8"]), _HIGHER)
+        if "cohort_width_gain_int8" in data:
+            rows["kernel/cohort_width_gain_int8"] = (
+                float(data["cohort_width_gain_int8"]), _HIGHER)
     elif bench == "client_bench":
         for r in data.get("rounds", []):
             c = r.get("clients")
@@ -97,15 +117,21 @@ def compare_row(name: str, base: float, cur: float, direction: str,
 
 def compare_all(baseline_dir: str = BASELINE_DIR,
                 current_dir: str = CURRENT_DIR,
-                tolerance: float = 0.25) -> Tuple[List[dict], List[str]]:
+                tolerance: float = 0.25
+                ) -> Tuple[List[dict], List[str], List[str]]:
     """Compare every committed baseline against the run's artifacts.
-    Returns (rows, notes); a baseline whose bench did not run this job is
-    a note, not a failure — the bench jobs each run a subset."""
+    Returns (rows, notes, missing); a baseline whose bench did not run
+    this job is a note, not a failure — the bench jobs each run a subset.
+    ``missing`` lists GATED benches this run PRODUCED that have no
+    committed baseline: those fail the gate (the asymmetry is deliberate —
+    skipping a bench is a job-matrix choice, shipping a gated bench
+    without pinning its baseline is an unguarded perf claim)."""
     rows: List[dict] = []
     notes: List[str] = []
+    missing: List[str] = []
     if not os.path.isdir(baseline_dir):
         notes.append(f"no baseline directory at {baseline_dir}")
-        return rows, notes
+        return rows, notes, missing
     for fname in sorted(os.listdir(baseline_dir)):
         if not fname.endswith(".json"):
             continue
@@ -127,11 +153,20 @@ def compare_all(baseline_dir: str = BASELINE_DIR,
                 continue
             rows.append(compare_row(name, base_val, cur_rows[name][0],
                                     direction, tolerance))
-    return rows, notes
+    if os.path.isdir(current_dir):
+        for bench in GATED_BENCHES:
+            if os.path.exists(os.path.join(current_dir, f"{bench}.json")) \
+                    and not os.path.exists(
+                        os.path.join(baseline_dir, f"{bench}.json")):
+                missing.append(
+                    f"{bench}: produced by this run but has no committed "
+                    f"baseline in {baseline_dir} — regenerate and commit "
+                    f"one (benchmarks/baselines/README.md)")
+    return rows, notes, missing
 
 
 def markdown_table(rows: List[dict], notes: List[str],
-                   tolerance: float) -> str:
+                   tolerance: float, missing: List[str] = ()) -> str:
     lines = ["### Bench delta vs committed baselines", "",
              f"Gate: pinned rows failing on >{tolerance:.0%} regression.",
              ""]
@@ -148,6 +183,9 @@ def markdown_table(rows: List[dict], notes: List[str],
                 f"| {r['current']:.4g} | {r['delta']:+.1%} | {status} |")
     else:
         lines.append("_no pinned rows compared_")
+    if missing:
+        lines += ["", "**Unbaselined gated benches:**"] + [
+            f"- {m}" for m in missing]
     if notes:
         lines += [""] + [f"- {n}" for n in notes]
     return "\n".join(lines) + "\n"
@@ -163,20 +201,22 @@ def main() -> None:
                     help="file to append the markdown delta table to "
                          "(CI: $GITHUB_STEP_SUMMARY)")
     args = ap.parse_args()
-    rows, notes = compare_all(args.baseline_dir, args.current_dir,
-                              args.tolerance)
-    table = markdown_table(rows, notes, args.tolerance)
+    rows, notes, missing = compare_all(args.baseline_dir, args.current_dir,
+                                       args.tolerance)
+    table = markdown_table(rows, notes, args.tolerance, missing)
     print(table)
     if args.summary:
         with open(args.summary, "a") as f:
             f.write(table)
     bad = [r for r in rows if r["regressed"]]
-    if bad:
-        raise SystemExit(
-            "bench regression gate FAILED: "
-            + "; ".join(f"{r['row']} {r['delta']:+.1%} "
-                        f"(baseline {r['baseline']:.4g} -> "
-                        f"current {r['current']:.4g})" for r in bad))
+    problems = ["bench regression gate FAILED: "
+                + "; ".join(f"{r['row']} {r['delta']:+.1%} "
+                            f"(baseline {r['baseline']:.4g} -> "
+                            f"current {r['current']:.4g})" for r in bad)
+                ] if bad else []
+    problems += missing
+    if problems:
+        raise SystemExit("\n".join(problems))
 
 
 if __name__ == "__main__":

@@ -69,6 +69,7 @@ def run(n_leaves: int = 20, leaf: int = 50_000, batch: int = 8) -> dict:
     emit("kernel/fedagg_flat_fused", us_flat,
          f"bytes={out['flat_bytes']:.3e};speedup={out['speedup']:.2f}x")
     out.update(run_batched(batch=batch, n_leaves=n_leaves, leaf=leaf))
+    out.update(run_quant(batch=batch, n_leaves=n_leaves, leaf=leaf))
     save_json("kernel_bench", out)
     return out
 
@@ -112,6 +113,94 @@ def run_batched(batch: int = 8, n_leaves: int = 20, leaf: int = 50_000
     emit(f"kernel/fedagg_seq_fused_x{batch}", us_seq, "")
     emit("kernel/fedagg_batched", us_bat,
          f"B={batch};speedup={out['batched_speedup']:.2f}x")
+    return out
+
+
+def run_quant(batch: int = 8, n_leaves: int = 20, leaf: int = 50_000
+              ) -> dict:
+    """Compressed-transport (DESIGN.md §13) metrics.
+
+    Two kinds of rows:
+
+    * deterministic structural metrics — int8 round-trip relative error on
+      seeded data, the VMEM row-schedule batch knees per wire dtype
+      (``batched_b_max``), wire bytes per parameter, and the cohort-width
+      gain a 4 MiB model gets from int8 deltas under a fixed 224 MiB
+      budget (the same crossing-interval construction the tests pin).
+      These are what the compare.py gate pins: they do not move with
+      machine load.
+    * wall-time of the quant-fused norms+apply path vs dequantize-then-f32
+      — interpret-mode CPU numbers, directional only (same caveat as every
+      other row in this file).
+    """
+    from repro.configs.shapes import cohort_footprint_bytes, delta_wire_bytes
+    from repro.core import compression
+
+    tree = _mock_params(n_leaves, leaf, seed=11)
+    xt = fedagg_ops.pad_flat_vector(pt.tree_flatten_to_vector(tree))
+    n = xt.shape[0]
+    key = jax.random.PRNGKey(13)
+    d = 0.001 * jax.random.normal(key, (n,))
+    cd = compression.quantize_vec(d, "int8", n)
+    deq = compression.dequantize(cd)
+    rel_err = float(jnp.linalg.norm(d - deq) / jnp.linalg.norm(d))
+
+    # width ladder under a fixed budget: 4 MiB params, 16 clients, no
+    # staged batches/activations — per-client cost is 3P + delta row, so
+    # a 224 MiB budget sits exactly in the crossing interval where the
+    # int8 delta row (P/4 + scales) doubles the placeable pow2 width
+    P = 4 * 2 ** 20
+    BUDGET = 224 * 2 ** 20
+
+    def _width(db: int) -> int:
+        w = 16
+        while w > 2 and cohort_footprint_bytes(
+                P, 0, 0, w, 1, delta_bytes=db) > BUDGET:
+            w //= 2
+        return w
+
+    w_off = _width(delta_wire_bytes(P, "off"))
+    w_int8 = _width(delta_wire_bytes(P, "int8"))
+
+    xs = xt + 0.01 * jax.random.normal(jax.random.fold_in(key, 1), (n,))
+
+    def fused_q(x, stale, q, scales):
+        return fedagg_ops.flat_aggregate_q(x, stale, q, scales,
+                                           lam=1.0, eps=1.0)[0]
+
+    @jax.jit
+    def dequant_then_f32(x, stale, q, scales):
+        dd = compression.dequantize(
+            compression.CompressedDelta("int8", q, scales, n))
+        cur, _ = fedagg.fedagg_fused(x, stale, dd, jnp.float32(0.5))
+        return cur
+
+    us_q = time_call(fused_q, xt, xs, cd.q, cd.scales, repeat=5)
+    us_deq = time_call(dequant_then_f32, xt, xs, cd.q, cd.scales, repeat=5)
+
+    b_f32 = fedagg.batched_b_max(4)
+    b_int8 = fedagg.batched_b_max(1)
+    out = {
+        "int8_quant_rel_err": rel_err,
+        "b_max_f32": b_f32,
+        "b_max_bf16": fedagg.batched_b_max(2),
+        "b_max_int8": b_int8,
+        "b_max_gain_int8": b_int8 / b_f32,
+        "wire_bytes_per_param_int8":
+            compression.wire_bytes_per_param("int8"),
+        "cohort_width_off": w_off,
+        "cohort_width_int8": w_int8,
+        "cohort_width_gain_int8": w_int8 / max(w_off, 1),
+        "quant_fused_us": us_q,
+        "dequant_then_f32_us": us_deq,
+    }
+    emit("kernel/fedagg_quant_fused", us_q,
+         f"rel_err={rel_err:.2e};vs_dequant={us_deq / max(us_q, 1e-9):.2f}x")
+    emit("kernel/batched_b_max", 0.0,
+         f"f32={b_f32};bf16={out['b_max_bf16']};int8={b_int8};"
+         f"gain_int8={out['b_max_gain_int8']:.2f}x")
+    emit("kernel/cohort_width_gain_int8", 0.0,
+         f"off={w_off};int8={w_int8};P=4MiB;budget=224MiB")
     return out
 
 

@@ -144,12 +144,70 @@ def run_matrix(task_name: str = "synthetic-1-1", *,
     return out
 
 
+# ------------------------------------------------- compressed transport --
+
+#: convergence-parity acceptance for compressed deltas (DESIGN.md §13,
+#: ISSUE 8): int8 error-feedback transport must land within this absolute
+#: final-accuracy gap of the uncompressed run on the smoke scenario.
+COMPRESSION_GAP = 0.01
+
+
+def run_compression(task_name: str = "synthetic-1-1", *,
+                    modes=("off", "int8", "bf16"),
+                    backends=("pytree", "pallas"),
+                    seed: int = 3, max_time: float = 2.0) -> dict:
+    """Convergence parity of compressed delta transport: one seeded
+    AsyncFedED run per (delta_compression, backend) cell, identical
+    arrival streams by construction. Asserts the int8 error-feedback
+    path stays within ``COMPRESSION_GAP`` of the uncompressed run per
+    backend — the ISSUE 8 acceptance bound — and fails loudly otherwise
+    (CI runs this under the robustness-smoke job)."""
+    task = configs.PAPER_TASKS[task_name]
+    rows = {}
+    for mode in modes:
+        for backend in backends:
+            fed = dataclasses.replace(task.fed, delta_compression=mode,
+                                      backend=backend)
+            sim = FederatedSimulation(task, fed, "asyncfeded", seed=seed)
+            res = sim.run(max_time=max_time)
+            s = res.summary()
+            key = f"{mode}/{backend}"
+            rows[key] = {"final_acc": s["final_acc"],
+                         "max_acc": s["max_acc"],
+                         "updates": s["updates"]}
+            emit(f"robustness-compression/{key}", 0.0,
+                 f"final_acc={s['final_acc']:.4f}")
+    gaps = {}
+    for backend in backends:
+        base = rows[f"off/{backend}"]["final_acc"]
+        for mode in modes:
+            if mode == "off":
+                continue
+            gap = abs(rows[f"{mode}/{backend}"]["final_acc"] - base)
+            gaps[f"{mode}/{backend}"] = gap
+            emit(f"robustness-compression/gap/{mode}/{backend}", 0.0,
+                 f"abs_gap={gap:.4f};bound={COMPRESSION_GAP}")
+    out = {"rows": rows, "gaps": gaps, "gap_bound": COMPRESSION_GAP,
+           "config": {"task": task_name, "seed": seed,
+                      "max_time": max_time}}
+    save_json("robustness_compression", out)
+    bad = {k: g for k, g in gaps.items() if g > COMPRESSION_GAP}
+    if bad:
+        raise SystemExit(
+            "compressed-transport convergence parity FAILED: "
+            + "; ".join(f"{k} final-acc gap {g:.4f} > {COMPRESSION_GAP}"
+                        for k, g in sorted(bad.items())))
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="headline rows only (CI subset)")
     ap.add_argument("--suspension", action="store_true",
                     help="run the Fig. 3 suspension sweep instead")
+    ap.add_argument("--compression", action="store_true",
+                    help="compressed-transport convergence parity grid")
     ap.add_argument("--behaviors", default=None)
     ap.add_argument("--attacks", default=None)
     ap.add_argument("--screens", default=None)
@@ -160,6 +218,10 @@ def main() -> None:
     args = ap.parse_args()
     if args.suspension:
         run()
+        return
+    if args.compression:
+        print("name,us_per_call,derived")
+        run_compression(max_time=args.max_time, seed=args.seed)
         return
     kw = {}
     for name in ("behaviors", "attacks", "screens", "backends", "engines"):

@@ -209,6 +209,12 @@ SCREEN_POLICIES: Tuple[str, ...] = ("off", "clip", "reject")
 #: client eagerly materialized (the small-N equivalence reference).
 POPULATION_MODES: Tuple[str, ...] = ("off", "table", "materialized")
 
+#: Valid values of ``FedConfig.delta_compression`` (DESIGN.md §13) —
+#: mirrors ``repro.core.compression.MODES`` for the same fail-fast reason.
+#: "off" ships full f32 deltas; "int8" ships per-block-scaled int8 with
+#: client-side error-feedback residuals; "bf16" ships a bf16 recast.
+DELTA_COMPRESSION_MODES: Tuple[str, ...] = ("off", "int8", "bf16")
+
 
 @dataclasses.dataclass(frozen=True)
 class FedConfig:
@@ -314,6 +320,14 @@ class FedConfig:
     # probability a drained client immediately starts another local round
     # (a multi-round session) instead of returning to the population pool.
     session_stay_prob: float = 0.0
+    # compressed delta transport (DESIGN.md §13). "off" ships full f32
+    # deltas; "int8" quantizes each client delta to per-block-scaled int8
+    # (one f32 scale per 1024 elements) with an error-feedback residual
+    # held client-side, and the pallas backend dequantizes inside the
+    # fedagg grid sweeps; "bf16" recasts the delta to bf16 (exact f32
+    # accumulation through the existing kernels). Async servers only —
+    # sync rounds aggregate in-process and never serialize deltas.
+    delta_compression: str = "off"
     # device-memory budget for one cohort fan-out dispatch, in MiB
     # (DESIGN.md §10). 0 = unlimited. When the shapes-based footprint
     # estimate exceeds it, the planner (repro.core.budget) clamps the
@@ -366,6 +380,11 @@ class FedConfig:
         if self.screen_warmup < 1:
             raise ValueError(
                 f"screen_warmup must be >= 1, got {self.screen_warmup!r}")
+        if self.delta_compression not in DELTA_COMPRESSION_MODES:
+            raise ValueError(
+                f"unknown delta_compression {self.delta_compression!r}: "
+                f"expected one of {DELTA_COMPRESSION_MODES} "
+                f"(see DESIGN.md §13)")
         if self.population not in POPULATION_MODES:
             raise ValueError(
                 f"unknown population mode {self.population!r}: expected "

@@ -21,18 +21,49 @@ ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
 #: one gradient-sized temporary inside the backward pass.
 PARAM_STATE_COPIES = 4
 
+#: Elements per int8 scale block of the compressed delta transport —
+#: mirrors ``repro.kernels.fedagg.fedagg.QBLOCK`` (pinned by
+#: tests/test_compression.py) so this pure-arithmetic layer needs no
+#: kernel import.
+DELTA_SCALE_BLOCK = 1024
+
+
+def delta_wire_bytes(param_bytes: int, mode: str) -> int:
+    """Transport bytes of ONE client delta under ``mode``
+    (``FedConfig.delta_compression``).
+
+    ``param_bytes`` is the f32 parameter footprint, so elements =
+    param_bytes / 4. int8 carries 1 byte per element plus one f32 scale
+    per ``DELTA_SCALE_BLOCK`` elements; bf16 carries 2 bytes per element;
+    "off" ships the full f32 vector unchanged.
+    """
+    elems = int(param_bytes) // 4
+    if mode == "int8":
+        return elems + 4 * (elems // DELTA_SCALE_BLOCK)
+    if mode == "bf16":
+        return 2 * elems
+    return int(param_bytes)
+
 
 def cohort_footprint_bytes(param_bytes: int, batch_bytes: int,
                            act_bytes: int, clients: int,
-                           k_steps: int) -> int:
+                           k_steps: int, delta_bytes: int = None) -> int:
     """Estimated device bytes of ONE stacked-cohort dispatch.
 
-    The budget law (DESIGN.md §10): every stacked client row carries
-    ``PARAM_STATE_COPIES`` parameter copies, its K staged mini-batches,
-    and one client's worth of forward/backward activations (the scan
-    serializes steps, so activations don't multiply by K)::
+    The budget law (DESIGN.md §10, §13): every stacked client row carries
+    ``PARAM_STATE_COPIES - 1`` full parameter copies (params snapshot,
+    momentum, the backward temporary), its delta output row at its WIRE
+    size (deltas leave the dispatch in transport form, so compression
+    shrinks exactly this row), its K staged mini-batches, and one
+    client's worth of forward/backward activations (the scan serializes
+    steps, so activations don't multiply by K)::
 
-        footprint(C, K) = C * (4 * P + K * B + A)
+        footprint(C, K) = C * (3 * P + D + K * B + A)
+
+    ``delta_bytes`` defaults to ``param_bytes`` (an uncompressed f32
+    delta), which keeps the historical ``C * (4 * P + K * B + A)`` law —
+    and every pre-compression call site — byte-identical. Pass
+    ``delta_wire_bytes(param_bytes, mode)`` to charge a compressed row.
 
     ``param_bytes``/``batch_bytes``/``act_bytes`` come from the task
     substrate (``LocalTask.batch_bytes`` / ``activation_bytes``); the
@@ -40,6 +71,9 @@ def cohort_footprint_bytes(param_bytes: int, batch_bytes: int,
     (scan microbatches), then falls back to the per-client loop until the
     estimate fits ``FedConfig.memory_budget_mb``.
     """
-    per_client = (PARAM_STATE_COPIES * int(param_bytes)
+    if delta_bytes is None:
+        delta_bytes = int(param_bytes)
+    per_client = ((PARAM_STATE_COPIES - 1) * int(param_bytes)
+                  + int(delta_bytes)
                   + int(k_steps) * int(batch_bytes) + int(act_bytes))
     return int(clients) * per_client

@@ -32,7 +32,7 @@ import dataclasses
 from typing import Optional
 
 from repro.configs.base import FedConfig
-from repro.configs.shapes import cohort_footprint_bytes
+from repro.configs.shapes import cohort_footprint_bytes, delta_wire_bytes
 from repro.core import tasks
 
 
@@ -101,11 +101,16 @@ def plan_cohort(task, fed: FedConfig, *, clients: int, k: int,
     pods = max(1, int(pods))
     bb = task.batch_bytes(fed)
     ab = task.activation_bytes(fed)
+    # compressed transport (DESIGN.md §13): the delta row is charged at
+    # its wire size — deltas leave the dispatch in transport form, so a
+    # 4x-smaller delta row buys wider cohorts under the same budget
+    db = delta_wire_bytes(param_bytes, fed.delta_compression)
 
     def fp(width: int, k_chunk: int) -> int:
         # per-device footprint: each pod holds width/pods client rows
         per_pod = max(1, -(-int(width) // pods))     # ceil division
-        return cohort_footprint_bytes(param_bytes, bb, ab, per_pod, k_chunk)
+        return cohort_footprint_bytes(param_bytes, bb, ab, per_pod, k_chunk,
+                                      delta_bytes=db)
 
     width = _bucket(max(clients, 1))
     k_chunk = max(int(k), 1)

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FedConfig
-from repro.core import tasks
+from repro.core import compression, tasks
 from repro.core.server import ClientUpdate
 from repro.utils import pytree as pt
 
@@ -80,6 +80,12 @@ class Client:
         self.num_samples = self.task.num_samples(dataset)
         self.round_idx = 0
         self._mu: Optional[PyTree] = None
+        # compressed transport (DESIGN.md §13): error-feedback residual —
+        # the quantization error of the last emitted delta, folded into
+        # the next one. Lives client-side like momentum; released on
+        # session end (release_residual) like DisplacementGMIS state.
+        self._residual: Optional[jax.Array] = None
+        self._flatspec: Optional[pt.FlatSpec] = None
 
     def _lr(self) -> float:
         return self.fed.local_lr * (self.fed.local_lr_decay ** self.round_idx)
@@ -113,3 +119,30 @@ class Client:
         upd = ClientUpdate(self.client_id, snapshot_iter, k, delta,
                            self.num_samples)
         return upd, float(loss)
+
+    # --- compressed transport (DESIGN.md §13) ---
+    def compress_update(self, upd: ClientUpdate) -> ClientUpdate:
+        """Quantize an outgoing update per ``fed.delta_compression``,
+        folding in (and refreshing) the error-feedback residual.
+
+        Called by the simulator at emission time, AFTER adversarial
+        corruption — the attacker perturbs what the client computed; the
+        wire carries what the attacker emitted. No-op when compression is
+        off or the delta is already compressed (burst re-dispatch paths
+        must not double-quantize)."""
+        mode = self.fed.delta_compression
+        if mode == "off" or compression.is_compressed(upd.delta):
+            return upd
+        if self._flatspec is None:
+            self._flatspec = pt.FlatSpec(upd.delta, block=compression.BLOCK)
+        vec = self._flatspec.flatten(upd.delta)
+        if self._residual is not None:
+            vec = vec + self._residual
+        cd = compression.quantize_vec(vec, mode, self._flatspec.n)
+        self._residual = vec - compression.dequantize(cd)
+        return ClientUpdate(upd.client_id, upd.snapshot_iter, upd.k_used,
+                            cd, upd.num_samples)
+
+    def release_residual(self) -> None:
+        """Drop the error-feedback residual (client session ended)."""
+        self._residual = None

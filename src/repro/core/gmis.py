@@ -43,6 +43,15 @@ class RingGMIS:
         """Returns (params, actual_iteration) — clamped to oldest retained."""
         if iteration in self._store:
             return self._store[iteration], iteration
+        if not self._store:
+            # A bare next() here used to escape as StopIteration — which
+            # inside a generator-driven caller silently terminates the
+            # generator instead of surfacing the real bug (a server that
+            # never seeded the ring with its initial params).
+            raise RuntimeError(
+                "RingGMIS.get on an empty store: no global-model version "
+                "has been appended yet — seed the ring with the initial "
+                "params (append(t, params)) before serving lookups")
         oldest = next(iter(self._store))
         return self._store[oldest], oldest
 

@@ -156,13 +156,26 @@ class NormScreen:
             return self._accept(norm, client_id)
         return self._flag(norm, thr)
 
-    def decide_batch(self, norms, client_ids=None) -> np.ndarray:
+    def decide_batch(self, norms, client_ids=None, *,
+                     shared_baseline: bool = False) -> np.ndarray:
         """Screen a burst of kernel-emitted norms in arrival order; returns
         the per-update scale factors (1 accept, (0,1) clip, 0 reject) that
         the sequential-equivalence schedule folds into its recursion.
-        ``client_ids`` aligns with ``norms`` (None degrades every arrival
-        to one shared baseline)."""
+        ``client_ids`` aligns with ``norms``.
+
+        Omitting ``client_ids`` used to silently collapse every arrival
+        onto the single shared baseline key ``None`` — per-client EWMAs
+        (the whole point of the screen, DESIGN.md §11) degraded to one
+        global baseline with no warning. A caller that genuinely wants
+        that degraded mode must now say so with ``shared_baseline=True``;
+        otherwise missing ids are an error."""
         if client_ids is None:
+            if not shared_baseline:
+                raise ValueError(
+                    "decide_batch needs client_ids aligned with norms — "
+                    "omitting them collapses every arrival onto one shared "
+                    "baseline key and defeats the per-client EWMAs; pass "
+                    "shared_baseline=True to opt into that degraded mode")
             client_ids = [None] * len(norms)
         return np.asarray(
             [self.observe(float(n), cid)[1]

@@ -24,7 +24,7 @@ from repro.core.aggregation import (asyncfeded_aggregate,
                                     asyncfeded_aggregate_per_leaf,
                                     asyncfeded_aggregate_with_dist)
 from repro.core.gmis import DisplacementGMIS, RingGMIS
-from repro.core import screening
+from repro.core import compression, screening
 from repro.kernels.fedagg import ops
 from repro.utils import pytree as pt
 
@@ -79,22 +79,41 @@ class AsyncServer:
         # norm screening (DESIGN.md §11): None when fed.screen == "off",
         # so defense-off runs carry zero extra state
         self.screen = screening.make_screen(fed)
+        # compressed transport (DESIGN.md §13): lazily built spec for
+        # decompressing CompressedDelta payloads back to pytree form on
+        # paths that aggregate leafwise
+        self._despec: Optional[pt.FlatSpec] = None
+
+    def _delta_tree(self, delta) -> PyTree:
+        """A delta in pytree form, whatever form it arrived in."""
+        if not compression.is_compressed(delta):
+            return delta
+        if self._despec is None:
+            self._despec = pt.FlatSpec(self.params, block=compression.BLOCK)
+        return self._despec.unflatten(compression.dequantize(delta))
+
+    def _decompress(self, upd: ClientUpdate) -> ClientUpdate:
+        if compression.is_compressed(upd.delta):
+            return dataclasses.replace(upd, delta=self._delta_tree(upd.delta))
+        return upd
 
     def _screen_delta(self, upd: ClientUpdate):
         """Norm-screen one arriving delta. Returns ``(upd', verdict,
         scale, raw_norm)``: ``upd'`` carries the clipped delta — or is
         None when the update is rejected outright; ``raw_norm`` is None
         when screening is off, so the off path builds records exactly as
-        before screening existed."""
+        before screening existed. Compressed deltas are screened on their
+        DEQUANTIZED norm — the values aggregation will apply — and clip
+        verdicts scale them in transport form (exact on int8 scales)."""
         if self.screen is None:
             return upd, "accept", 1.0, None
-        raw = float(pt.tree_norm(upd.delta))
+        raw = compression.delta_norm(upd.delta)
         verdict, scale = self.screen.observe(raw, upd.client_id)
         if verdict == "reject":
             return None, verdict, 0.0, raw
         if verdict == "clip":
             upd = dataclasses.replace(
-                upd, delta=pt.tree_scale(upd.delta, scale))
+                upd, delta=compression.scale_delta(upd.delta, scale))
         return upd, verdict, scale, raw
 
     def screen_stats(self) -> Optional[dict]:
@@ -228,7 +247,33 @@ class AsyncFedEDServer(AsyncServer):
 
     def _aggregate_flat(self, upd: ClientUpdate):
         fed = self.fed
-        d = self._flat.spec.flatten(upd.delta)
+        cd = upd.delta if compression.is_compressed(upd.delta) else None
+        if cd is not None and cd.mode == "int8":
+            # quant-fused path: q/scales go straight into the kernels,
+            # dequantized one VMEM tile at a time (DESIGN.md §13)
+            if self.gmis_mode == "displacement":
+                new_vec, gamma, eta, dist, dnorm = (
+                    ops.flat_aggregate_displacement_q(
+                        self._flat.vec,
+                        self.gmis.displacement(upd.client_id), cd.q,
+                        cd.scales, self._zeros, lam=fed.lam, eps=fed.eps,
+                        cap=fed.staleness_cap, interpret=self._interpret))
+                self.gmis.release(upd.client_id)
+            else:
+                stale, _ = self.gmis.get(upd.snapshot_iter)
+                new_vec, gamma, eta, dist, dnorm = ops.flat_aggregate_q(
+                    self._flat.vec, stale, cd.q, cd.scales, lam=fed.lam,
+                    eps=fed.eps, cap=fed.staleness_cap,
+                    interpret=self._interpret)
+            self._flat = self._flat.replace(new_vec)
+            # ring-GMIS on_aggregate is a no-op, so the f32 delta is only
+            # materialized when displacement accumulators need it
+            d = (compression.dequantize(cd)
+                 if self.gmis_mode == "displacement" else cd)
+            return gamma, eta, dist, dnorm, d
+        # bf16 payloads ride the f32 kernels unchanged (tiles upcast on
+        # load, f32 accumulation), so only the operand swaps
+        d = cd.q if cd is not None else self._flat.spec.flatten(upd.delta)
         if self.gmis_mode == "displacement":
             new_vec, gamma, eta, dist, dnorm = ops.flat_aggregate_displacement(
                 self._flat.vec, self.gmis.displacement(upd.client_id), d,
@@ -264,6 +309,10 @@ class AsyncFedEDServer(AsyncServer):
         if self.backend == "pallas":
             gamma, eta, dist, dnorm, delta = self._aggregate_flat(upd)
         else:
+            # decompress HERE, not inside _aggregate_pytree: the delta
+            # also feeds gmis.on_aggregate below, which folds it into
+            # every outstanding displacement accumulator leafwise
+            upd = self._decompress(upd)
             gamma, eta, dist, dnorm, _ = self._aggregate_pytree(upd)
             delta = upd.delta
         # true staleness: tau = t - snapshot at APPLY time, before this
@@ -291,9 +340,12 @@ class AsyncFedEDServer(AsyncServer):
         two grid sweeps, sequential-equivalent to B ``on_update`` calls
         (see ``aggregation.sequential_batch_schedule``). Only the ring-GMIS
         flat backend has the stacked stale models this needs; everything
-        else falls back to the sequential default."""
+        else — including a mixed-compression burst — falls back to the
+        sequential default."""
+        modes = {u.delta.mode if compression.is_compressed(u.delta)
+                 else "off" for u in upds}
         if (self.backend != "pallas" or self.gmis_mode != "ring"
-                or len(upds) == 1):
+                or len(upds) == 1 or len(modes) > 1):
             replies = [self.on_update(u) for u in upds]
             if len(replies) > 1:
                 # Every drained client resumes from the window's FINAL
@@ -309,19 +361,35 @@ class AsyncFedEDServer(AsyncServer):
             return replies
         fed = self.fed
         spec = self._flat.spec
-        deltas = jnp.stack([spec.flatten(u.delta) for u in upds])
+        mode = modes.pop()
         stales = jnp.stack([self.gmis.get(u.snapshot_iter)[0] for u in upds])
         # screening reuses the batched Gram sweep: the kernel-emitted raw
         # delta norms feed NormScreen in arrival order, and the returned
         # scale factors fold into the sequential-equivalence schedule
-        # (etas come back as effective multipliers on the raw deltas)
-        new_vec, etas, gammas, dists, dnorms, scales = (
-            ops.flat_aggregate_batched(
-                self._flat.vec, stales, deltas, lam=fed.lam, eps=fed.eps,
-                cap=fed.staleness_cap, interpret=self._interpret,
-                screen=(None if self.screen is None else
-                        lambda dns: self.screen.decide_batch(
-                            dns, [u.client_id for u in upds]))))
+        # (etas come back as effective multipliers on the raw deltas).
+        # Under compression those norms are the DEQUANTIZED ones — the
+        # kernels compute every statistic on the transported values.
+        screen_fn = (None if self.screen is None else
+                     lambda dns: self.screen.decide_batch(
+                         dns, [u.client_id for u in upds]))
+        if mode == "int8":
+            qs = jnp.stack([u.delta.q for u in upds])
+            qscales = jnp.stack([u.delta.scales for u in upds])
+            new_vec, etas, gammas, dists, dnorms, scales = (
+                ops.flat_aggregate_batched_q(
+                    self._flat.vec, stales, qs, qscales, lam=fed.lam,
+                    eps=fed.eps, cap=fed.staleness_cap,
+                    interpret=self._interpret, screen=screen_fn))
+        else:
+            # "off" flattens pytrees; "bf16" stacks the bf16 payloads
+            # straight through the f32 kernels (tiles upcast on load)
+            deltas = jnp.stack([u.delta.q if mode == "bf16"
+                                else spec.flatten(u.delta) for u in upds])
+            new_vec, etas, gammas, dists, dnorms, scales = (
+                ops.flat_aggregate_batched(
+                    self._flat.vec, stales, deltas, lam=fed.lam,
+                    eps=fed.eps, cap=fed.staleness_cap,
+                    interpret=self._interpret, screen=screen_fn))
         self._flat = self._flat.replace(new_vec)
         k_nexts = []
         for i, upd in enumerate(upds):
@@ -356,7 +424,12 @@ class AsyncFedEDServer(AsyncServer):
 
     def batch_limit(self) -> Optional[int]:
         if self.backend == "pallas" and self.gmis_mode == "ring":
-            return ops.fedagg.batched_b_max()
+            # compressed deltas cost fewer VMEM bytes per resident tile, so
+            # the free-batch knee moves out: 15 (f32) -> 20 (bf16) -> 24
+            # (int8) concurrent arrivals at full tile size
+            delta_bytes = {"off": 4, "bf16": 2, "int8": 1}[
+                self.fed.delta_compression]
+            return ops.fedagg.batched_b_max(delta_bytes)
         return None
 
     def on_disconnect(self, client_id: int) -> None:
@@ -411,7 +484,7 @@ class FedAsyncServer(AsyncServer):
                 float("nan"), 0.0, upd.k_used, self.fed.k_initial,
                 float("nan"), raw_norm, "reject"))
             return ServerReply(self.params, self.t, self.fed.k_initial)
-        upd = upd2
+        upd = self._decompress(upd2)     # mixing aggregates leafwise
         stale, actual = self.gmis.get(upd.snapshot_iter)
         x_local = pt.tree_add(stale, upd.delta)
         # the ring may have aged the requested snapshot out and clamped to
@@ -449,9 +522,11 @@ class FedBuffServer(AsyncServer):
 
     def _flush(self, client_id: int, k_used: int) -> None:
         scale = self.fed.lam / len(self.buffer)
-        mean = self.buffer[0][0]
+        # deltas are buffered in transport form (that's the memory win of
+        # compression for FedBuff) and decompressed only at flush time
+        mean = self._delta_tree(self.buffer[0][0])
         for d, _ in self.buffer[1:]:
-            mean = pt.tree_add(mean, d)
+            mean = pt.tree_add(mean, self._delta_tree(d))
         # staleness of the flush: its oldest buffered snapshot, measured
         # against the pre-increment iteration like every other server
         lag = self.t - min(snap for _, snap in self.buffer)

@@ -37,6 +37,7 @@ duration is the max over clients — the straggler effect the paper targets.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -111,6 +112,13 @@ class SimResult:
             "updates": self.total_updates,
             "drains": self.total_drains,
         }
+        # mean observed staleness over FINITE gammas only: rejected
+        # arrivals record gamma = NaN (no aggregation happened), and one
+        # NaN would otherwise poison the mean forever — the same skip rule
+        # AutoWindow.observe_gamma applies to its EWMA
+        gammas = [h.gamma for h in self.history if math.isfinite(h.gamma)]
+        if gammas:
+            out["mean_gamma"] = float(sum(gammas) / len(gammas))
         if self.plan is not None:
             out["plan"] = self.plan
         if self.screen is not None:
@@ -270,13 +278,19 @@ class FederatedSimulation:
         happened; they just never come back). Byzantine clients' deltas
         are corrupted here, at emission time — after local training,
         before the event queue — so every client engine and both server
-        backends see the identical attacked stream."""
+        backends see the identical attacked stream. Compression happens
+        after corruption for the same reason: the attacker perturbs what
+        the client computed, the wire carries what the attacker emitted
+        (DESIGN.md §13)."""
         for (c, reply), upd in zip(jobs, self._run_locals(jobs)):
             if self.adversary is not None:
                 upd = self.adversary.corrupt(upd)
+            upd = c.compress_update(upd)
             delay = self.behavior.dispatch(c.client_id, reply.k_next, now)
             if delay is not None:
                 loop.queue.push(now + delay, c.client_id, upd)
+            else:
+                c.release_residual()   # permanent dropout: session over
         return len(jobs)
 
     # ---------------------------------------------------------------- run --
@@ -352,9 +366,11 @@ class FederatedSimulation:
         for (c, reply), upd in zip(jobs, self._run_locals(jobs)):
             if self.adversary is not None:
                 upd = self.adversary.corrupt(upd)
+            upd = c.compress_update(upd)
             delay = self.behavior.dispatch(c.client_id, reply.k_next, now)
             if delay is None:
                 pop.mark_dropped(c.client_id)
+                c.release_residual()
                 self.server.on_disconnect(c.client_id)
             else:
                 pop.mark_dispatch(c.client_id, reply.iteration)
@@ -421,6 +437,9 @@ class FederatedSimulation:
                         jobs.append((pop.client(ev.client_id), reply))
                     else:
                         pop.mark_returned(ev.client_id)
+                        # session over: error-feedback residual released
+                        # like the server-side GMIS registration below
+                        pop.client(ev.client_id).release_residual()
                         self.server.on_disconnect(ev.client_id)
             for ev in checkins:
                 pop.checkins += 1

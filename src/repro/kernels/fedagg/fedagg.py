@@ -25,6 +25,14 @@ from jax.experimental import pallas as pl
 LANES = 128
 BLOCK_ROWS = 512                       # 512*128*4B = 256 KiB per operand tile
 
+# compressed-delta transport (DESIGN.md §13): one f32 scale per QBLOCK
+# int8 elements. QBLOCK_ROWS divides every rows-per-step the row schedule
+# can pick (the halving ladder floors at 8), so a VMEM tile always holds a
+# whole number of scale blocks and dequantization stays one broadcast
+# multiply per tile.
+QBLOCK_ROWS = 8
+QBLOCK = QBLOCK_ROWS * LANES           # 1024 elements per int8 scale
+
 
 def _f32(x: jax.Array) -> jax.Array:
     """Upcast to f32 accumulation dtype; compile-time no-op for f32 tiles
@@ -37,22 +45,35 @@ def _f32(x: jax.Array) -> jax.Array:
 _VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 
 
-def batched_b_max() -> int:
+def batched_b_max(delta_bytes: int = 4) -> int:
     """Largest batch B for which the multi-delta kernels keep the full
     BLOCK_ROWS tile per grid step — the knee of the B-dependent VMEM row
     schedule below. Beyond it ``_batched_rows`` starts halving rows, so a
     bigger burst buys fewer steps per delta but more steps overall; the
-    auto-window controller targets this as its free-batch ceiling."""
-    return (_VMEM_BUDGET_BYTES // (BLOCK_ROWS * LANES * 4) - 1) // 2
+    auto-window controller targets this as its free-batch ceiling.
+
+    ``delta_bytes`` is the per-element width of the resident delta tiles
+    (4 = f32, 2 = bf16, 1 = int8 via the quantization-fused kernels): a
+    grid step holds one f32 x_t tile, B f32 stale tiles, and B delta tiles
+    at that width, so compressed deltas push the knee out — 15 (f32) ->
+    20 (bf16) -> 24 (int8) concurrent arrivals at full tile size.
+    """
+    per_elem = _VMEM_BUDGET_BYTES // (BLOCK_ROWS * LANES)
+    return int((per_elem - 4) // (4 + delta_bytes))
 
 
-def _batched_rows(b: int, n: int, interpret: bool) -> int:
+def _batched_rows(b: int, n: int, interpret: bool,
+                  delta_bytes: int = 4) -> int:
     """Rows per grid step for the multi-delta kernels.
 
     Compiled (TPU): halved from BLOCK_ROWS — staying a divisor, so
-    BLOCK-padded inputs still tile evenly — until the (2B+1) resident f32
-    operand tiles fit the VMEM budget; up to B~15 the full BLOCK_ROWS tile
-    fits and the batched sweep runs 1/B the steps of the one-at-a-time loop.
+    BLOCK-padded inputs still tile evenly — until the resident operand
+    tiles (one f32 x_t tile + B f32 stale tiles + B delta tiles at
+    ``delta_bytes`` per element; int8 scale rows are noise) fit the VMEM
+    budget; up to B = ``batched_b_max(delta_bytes)`` the full BLOCK_ROWS
+    tile fits and the batched sweep runs 1/B the steps of the
+    one-at-a-time loop. The floor stays QBLOCK_ROWS so quantized tiles
+    always hold whole scale blocks.
     Interpreted (CPU): the grid models no real memory and the emulator pays
     roughly (total operand bytes) per grid step, so run the whole sweep as
     ONE step. The kernel math is tile-count invariant (tests sweep several
@@ -60,8 +81,10 @@ def _batched_rows(b: int, n: int, interpret: bool) -> int:
     """
     if interpret:
         return n // LANES
+    bb = max(b, 1)
+    per_elem = (bb + 1) * 4 + bb * delta_bytes
     rows = BLOCK_ROWS
-    while rows > 8 and (2 * max(b, 1) + 1) * rows * LANES * 4 > _VMEM_BUDGET_BYTES:
+    while rows > QBLOCK_ROWS and rows * LANES * per_elem > _VMEM_BUDGET_BYTES:
         rows //= 2
     return rows
 
@@ -165,7 +188,7 @@ def fedagg_norms_batched(x_t: jax.Array, x_stales: jax.Array,
     """
     b, n = deltas.shape
     assert x_t.shape == (n,) and x_stales.shape == (b, n)
-    rows = _batched_rows(b, n, interpret)
+    rows = _batched_rows(b, n, interpret, deltas.dtype.itemsize)
     block = rows * LANES
     assert n % (BLOCK_ROWS * LANES) == 0, (n, BLOCK_ROWS * LANES)
     g = n // block
@@ -216,7 +239,7 @@ def fedagg_apply_batched(x_t: jax.Array, deltas: jax.Array, etas: jax.Array,
     """
     b, n = deltas.shape
     assert x_t.shape == (n,) and etas.shape == (b,)
-    rows = _batched_rows(b, n, interpret)
+    rows = _batched_rows(b, n, interpret, deltas.dtype.itemsize)
     block = rows * LANES
     assert n % (BLOCK_ROWS * LANES) == 0, (n, BLOCK_ROWS * LANES)
     g = n // block
@@ -283,3 +306,199 @@ def fedagg_fused(x_t: jax.Array, x_stale: jax.Array, delta: jax.Array,
     )(eta.reshape(1, 1).astype(jnp.float32), shaped(x_t), shaped(x_stale),
       shaped(delta))
     return out.reshape(n), jnp.sum(partial, axis=0)
+
+
+# ------------------------------------------------- quantization-fused path --
+# Compressed delta transport (DESIGN.md §13): deltas arrive as per-block-
+# scaled int8 (one f32 scale per QBLOCK elements, repro.core.compression)
+# and are dequantized INSIDE the grid step — one upcast + one broadcast
+# multiply per resident tile — so the f32 delta vector is never
+# materialized in HBM. bf16 deltas need none of this: the f32 kernels
+# above upcast tiles on load, so bf16 rides them unchanged.
+
+def _dequant_tile(q, s):
+    """Dequantize one VMEM tile. ``q`` int8 (rows, LANES) or (B, rows,
+    LANES); ``s`` the matching f32 scales, one per QBLOCK_ROWS rows.
+    Returns the f32 tile(s)."""
+    rows = q.shape[-2]
+    spb = rows // QBLOCK_ROWS              # scale blocks per tile
+    if q.ndim == 2:
+        v = q.astype(jnp.float32).reshape(spb, QBLOCK)
+        return (v * s.reshape(spb, 1)).reshape(rows, LANES)
+    b = q.shape[0]
+    v = q.astype(jnp.float32).reshape(b, spb, QBLOCK)
+    return (v * s.reshape(b, spb, 1)).reshape(b, rows, LANES)
+
+
+def _norms_q_kernel(xt_ref, xs_ref, q_ref, s_ref, out_ref):
+    xt = _f32(xt_ref[...])
+    xs = _f32(xs_ref[...])
+    d = _dequant_tile(q_ref[...], s_ref[...])
+    diff = xt - xs
+    out_ref[0, 0] = jnp.sum(diff * diff)
+    out_ref[0, 1] = jnp.sum(d * d)
+
+
+def fedagg_norms_q(x_t: jax.Array, x_stale: jax.Array, q: jax.Array,
+                   scales: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Quant-fused phase 1: like :func:`fedagg_norms` but the delta arrives
+    as int8 ``q`` (n,) + f32 ``scales`` (n // QBLOCK,). The emitted
+    ||delta||^2 is the DEQUANTIZED norm — exactly what the AXPY applies, so
+    screening/gamma computed from it see the transported values."""
+    n = x_t.shape[0]
+    block = BLOCK_ROWS * LANES
+    assert n % block == 0, (n, block)
+    assert q.shape == (n,) and scales.shape == (n // QBLOCK,), (
+        q.shape, scales.shape, n)
+    g = n // block
+    spb = BLOCK_ROWS // QBLOCK_ROWS
+    shaped = lambda a: a.reshape(g * BLOCK_ROWS, LANES)
+    partial = pl.pallas_call(
+        _norms_q_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, spb), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, 2), jnp.float32),
+        interpret=interpret,
+    )(shaped(x_t), shaped(x_stale), shaped(q), scales.reshape(g, spb))
+    return jnp.sum(partial, axis=0)
+
+
+def _axpy_q_kernel(eta_ref, xt_ref, q_ref, s_ref, out_ref):
+    eta = eta_ref[0, 0]
+    d = _dequant_tile(q_ref[...], s_ref[...])
+    out_ref[...] = (xt_ref[...].astype(jnp.float32) + eta * d
+                    ).astype(out_ref.dtype)
+
+
+def fedagg_axpy_q(x_t: jax.Array, q: jax.Array, scales: jax.Array,
+                  eta: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Quant-fused Eq.(5): x_t + eta * dequant(q, scales), one sweep."""
+    n = x_t.shape[0]
+    block = BLOCK_ROWS * LANES
+    assert n % block == 0, (n, block)
+    assert q.shape == (n,) and scales.shape == (n // QBLOCK,)
+    g = n // block
+    spb = BLOCK_ROWS // QBLOCK_ROWS
+    shaped = lambda a: a.reshape(g * BLOCK_ROWS, LANES)
+    out = pl.pallas_call(
+        _axpy_q_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),          # eta broadcast
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, spb), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g * BLOCK_ROWS, LANES), x_t.dtype),
+        interpret=interpret,
+    )(eta.reshape(1, 1).astype(jnp.float32), shaped(x_t), shaped(q),
+      scales.reshape(g, spb))
+    return out.reshape(n)
+
+
+def _norms_batched_q_kernel(xt_ref, xs_ref, q_ref, s_ref, dist_ref, dn_ref,
+                            c_ref, g_ref):
+    b = q_ref.shape[0]
+    xt = _f32(xt_ref[...])                          # (rows, LANES)
+    xs = _f32(xs_ref[...])                          # (B, rows, LANES)
+    d = _dequant_tile(q_ref[...], s_ref[...]).reshape(b, -1)
+    drift = (xt[None] - xs).reshape(b, -1)
+    c = jnp.dot(drift, d.T, preferred_element_type=jnp.float32)
+    g = jnp.dot(d, d.T, preferred_element_type=jnp.float32)
+    dist_ref[0, :] = jnp.sum(drift * drift, axis=1)
+    dn_ref[0, :] = jnp.sum(d * d, axis=1)
+    c_ref[0] = c
+    g_ref[0] = g
+
+
+def fedagg_norms_batched_q(x_t: jax.Array, x_stales: jax.Array,
+                           qs: jax.Array, scales: jax.Array, *,
+                           interpret: bool = True):
+    """Batched phase 1 over B quantized arrivals: like
+    :func:`fedagg_norms_batched` with ``qs`` (B, n) int8 + ``scales``
+    (B, n // QBLOCK) f32 resident instead of f32 deltas — the delta tiles
+    cost 1 byte/element, so the free-batch knee moves from 15 to 24
+    (``batched_b_max(1)``). All four outputs are computed on the
+    dequantized values."""
+    b, n = qs.shape
+    assert x_t.shape == (n,) and x_stales.shape == (b, n)
+    assert scales.shape == (b, n // QBLOCK), (scales.shape, b, n // QBLOCK)
+    rows = _batched_rows(b, n, interpret, 1)
+    block = rows * LANES
+    assert n % (BLOCK_ROWS * LANES) == 0, (n, BLOCK_ROWS * LANES)
+    g = n // block
+    spb = rows // QBLOCK_ROWS
+    shaped1 = lambda a: a.reshape(g * rows, LANES)
+    shapedb = lambda a: a.reshape(b, g * rows, LANES)
+    dist, dn, c, gram = pl.pallas_call(
+        _norms_batched_q_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((b, rows, LANES), lambda i: (0, i, 0)),
+            pl.BlockSpec((b, rows, LANES), lambda i: (0, i, 0)),
+            pl.BlockSpec((b, 1, spb), lambda i: (0, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, b), lambda i: (i, 0)),
+            pl.BlockSpec((1, b), lambda i: (i, 0)),
+            pl.BlockSpec((1, b, b), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, b, b), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, b), jnp.float32),
+            jax.ShapeDtypeStruct((g, b), jnp.float32),
+            jax.ShapeDtypeStruct((g, b, b), jnp.float32),
+            jax.ShapeDtypeStruct((g, b, b), jnp.float32),
+        ],
+        interpret=interpret,
+    )(shaped1(x_t), shapedb(x_stales), shapedb(qs),
+      scales.reshape(b, g, spb))
+    return (jnp.sum(dist, axis=0), jnp.sum(dn, axis=0),
+            jnp.sum(c, axis=0), jnp.sum(gram, axis=0))
+
+
+def _apply_batched_q_kernel(etas_ref, xt_ref, q_ref, s_ref, out_ref):
+    etas = etas_ref[...]                            # (1, B) f32
+    xt = _f32(xt_ref[...])                          # (rows, LANES)
+    d = _dequant_tile(q_ref[...], s_ref[...])       # (B, rows, LANES)
+    acc = jnp.dot(etas, d.reshape(d.shape[0], -1),
+                  preferred_element_type=jnp.float32)
+    out_ref[...] = (xt + acc.reshape(xt.shape)).astype(out_ref.dtype)
+
+
+def fedagg_apply_batched_q(x_t: jax.Array, qs: jax.Array, scales: jax.Array,
+                           etas: jax.Array, *,
+                           interpret: bool = True) -> jax.Array:
+    """Batched quant-fused Eq.(5): x_t + sum_b etas[b] * dequant(qs[b])."""
+    b, n = qs.shape
+    assert x_t.shape == (n,) and etas.shape == (b,)
+    assert scales.shape == (b, n // QBLOCK)
+    rows = _batched_rows(b, n, interpret, 1)
+    block = rows * LANES
+    assert n % (BLOCK_ROWS * LANES) == 0, (n, BLOCK_ROWS * LANES)
+    g = n // block
+    spb = rows // QBLOCK_ROWS
+    out = pl.pallas_call(
+        _apply_batched_q_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, b), lambda i: (0, 0)),          # etas broadcast
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((b, rows, LANES), lambda i: (0, i, 0)),
+            pl.BlockSpec((b, 1, spb), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g * rows, LANES), x_t.dtype),
+        interpret=interpret,
+    )(etas.reshape(1, b).astype(jnp.float32),
+      x_t.reshape(g * rows, LANES), qs.reshape(b, g * rows, LANES),
+      scales.reshape(b, g, spb))
+    return out.reshape(n)

@@ -115,6 +115,65 @@ def flat_aggregate_batched(x_t: jax.Array, x_stales: jax.Array,
     return new, etas, gammas, dists, dnorms, scales
 
 
+# --------------------------------------------------- quant-fused flat API --
+# Compressed-transport twins of the flat entry points (DESIGN.md §13): the
+# delta arrives as per-block-scaled int8 (q (n,), scales (n // QBLOCK,))
+# and is dequantized inside the grid sweeps, never materialized as f32 in
+# HBM. bf16 deltas don't need these — the f32 kernels upcast tiles on
+# load, so bf16 payloads ride the uncompressed entry points unchanged.
+
+@functools.partial(jax.jit, static_argnames=("lam", "eps", "cap", "interpret"))
+def flat_aggregate_q(x_t: jax.Array, x_stale: jax.Array, q: jax.Array,
+                     scales: jax.Array, *, lam: float, eps: float,
+                     cap: float = 0.0, interpret: bool = True):
+    """Quant-fused Eq.(5-7) step. The emitted dnorm is the dequantized
+    delta norm — exactly what the AXPY applies."""
+    sq = fedagg.fedagg_norms_q(x_t, x_stale, q, scales, interpret=interpret)
+    gamma, eta, dist, dnorm = gamma_eta_from_sq(sq[0], sq[1], lam, eps, cap)
+    new = fedagg.fedagg_axpy_q(x_t, q, scales, eta, interpret=interpret)
+    return new, gamma, eta, dist, dnorm
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "eps", "cap", "interpret"))
+def flat_aggregate_displacement_q(x_t: jax.Array, disp: jax.Array,
+                                  q: jax.Array, scales: jax.Array,
+                                  zeros: jax.Array, *, lam: float, eps: float,
+                                  cap: float = 0.0, interpret: bool = True):
+    """Displacement-GMIS variant of :func:`flat_aggregate_q`."""
+    sq = fedagg.fedagg_norms_q(disp, zeros, q, scales, interpret=interpret)
+    gamma, eta, dist, dnorm = gamma_eta_from_sq(sq[0], sq[1], lam, eps, cap)
+    new = fedagg.fedagg_axpy_q(x_t, q, scales, eta, interpret=interpret)
+    return new, gamma, eta, dist, dnorm
+
+
+_norms_batched_q = jax.jit(fedagg.fedagg_norms_batched_q,
+                           static_argnames=("interpret",))
+_apply_batched_q = jax.jit(fedagg.fedagg_apply_batched_q,
+                           static_argnames=("interpret",))
+
+
+def flat_aggregate_batched_q(x_t: jax.Array, x_stales: jax.Array,
+                             qs: jax.Array, qscales: jax.Array, *,
+                             lam: float, eps: float, cap: float = 0.0,
+                             interpret: bool = True, screen=None):
+    """Quant-fused twin of :func:`flat_aggregate_batched`: B int8 arrivals
+    (qs (B, n) + qscales (B, n // QBLOCK)) drained in two grid sweeps.
+    The screening decider sees the kernel-emitted DEQUANTIZED norms, and
+    clip scales fold into the eta schedule exactly (int8 clip-by-scales is
+    exact). Same return signature as the uncompressed path."""
+    d0, dn_sq, cross, gram = _norms_batched_q(x_t, x_stales, qs, qscales,
+                                              interpret=interpret)
+    scales = None
+    if screen is not None:
+        dns = np.sqrt(np.maximum(np.asarray(dn_sq, np.float64), 0.0))
+        scales = screen(dns.astype(np.float32))
+    etas, gammas, dists, dnorms = sequential_batch_schedule(
+        d0, dn_sq, cross, gram, lam=lam, eps=eps, cap=cap, scales=scales)
+    new = _apply_batched_q(x_t, qs, qscales, jnp.asarray(etas),
+                           interpret=interpret)
+    return new, etas, gammas, dists, dnorms, scales
+
+
 # -------------------------------------------------------------- pytree API --
 
 @functools.partial(jax.jit, static_argnames=("lam", "eps", "cap", "interpret"))

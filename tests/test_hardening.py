@@ -1,0 +1,226 @@
+"""Aggregation-pipeline hardening regressions (ISSUE 8 satellites):
+NaN-gamma leakage from rejected arrivals, RingGMIS empty-store crash,
+decide_batch shared-baseline opt-in, and screening x batched-drain
+equivalence."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import FedConfig
+from repro.core import screening
+from repro.core.events import AutoWindow
+from repro.core.gmis import RingGMIS
+from repro.core.server import ClientUpdate, make_server
+from repro.core.simulator import FederatedSimulation
+from repro.utils import pytree as pt
+
+
+# ------------------------------------------------------------ S1: NaN gamma --
+class TestNaNGammaLeakage:
+    def test_autowindow_ewma_skips_nan(self):
+        """A rejected arrival records gamma = NaN; one NaN folded into the
+        window controller's EWMA would poison the control law forever."""
+        w = AutoWindow(gamma_threshold=2.0)
+        w.observe_gamma([1.0, float("nan"), 3.0])
+        assert math.isfinite(w._gamma)
+        # EWMA over the two FINITE observations only
+        assert w._gamma == pytest.approx(1.0 + 0.2 * (3.0 - 1.0))
+
+    def test_autowindow_all_nan_keeps_no_baseline(self):
+        w = AutoWindow(gamma_threshold=2.0)
+        w.observe_gamma([float("nan")] * 3)
+        assert w._gamma is None
+
+    def test_summary_mean_gamma_finite_under_reject(self):
+        """End-to-end: a reject-mode run whose history contains NaN-gamma
+        reject records must still report a finite mean_gamma (a naive
+        np.mean over history would be NaN)."""
+        task = configs.PAPER_TASKS["synthetic-1-1"]
+        fed = dataclasses.replace(
+            task.fed, screen="reject", screen_warmup=5,
+            attack="sign-flip", attack_frac=0.2,
+            attack_params=(("strength", 50.0),))
+        sim = FederatedSimulation(task, fed, "asyncfeded", seed=3)
+        res = sim.run(max_time=2.0)
+        rejects = [h for h in res.history if h.screen == "reject"]
+        assert rejects, "scenario must actually reject something"
+        assert all(math.isnan(h.gamma) for h in rejects)
+        s = res.summary()
+        assert "mean_gamma" in s and math.isfinite(s["mean_gamma"])
+        # the naive mean is what the bug produced
+        assert math.isnan(float(np.mean([h.gamma for h in res.history])))
+
+    def test_summary_omits_mean_gamma_when_no_finite_gamma(self):
+        # FedAsync records NaN gammas by design (no Eq. 6 distance):
+        # summary must omit the key rather than emit NaN
+        task = configs.PAPER_TASKS["synthetic-1-1"]
+        sim = FederatedSimulation(task, task.fed, "fedasync+constant",
+                                  seed=3)
+        res = sim.run(max_time=1.0)
+        assert "mean_gamma" not in res.summary()
+
+
+# ---------------------------------------------------------- S2: empty ring --
+class TestRingGMISEmpty:
+    def test_get_on_empty_store_raises_descriptive(self):
+        """A bare next() on the empty store used to escape as
+        StopIteration — which silently terminates any generator-driven
+        caller instead of surfacing the bug."""
+        g = RingGMIS(depth=4)
+        with pytest.raises(RuntimeError, match="empty store"):
+            g.get(1)
+        # and specifically NOT StopIteration
+        try:
+            g.get(1)
+        except RuntimeError:
+            pass
+        except StopIteration:                      # pragma: no cover
+            pytest.fail("StopIteration escaped RingGMIS.get")
+
+    def test_get_after_seed_clamps_as_before(self):
+        g = RingGMIS(depth=2)
+        g.append(1, "p1")
+        g.append(2, "p2")
+        g.append(3, "p3")                          # evicts iteration 1
+        assert g.get(1) == ("p2", 2)               # clamped to oldest
+        assert g.get(3) == ("p3", 3)
+
+
+# --------------------------------------------- S3: decide_batch opt-in --
+class TestDecideBatchOptIn:
+    def _screen(self):
+        s = screening.NormScreen("clip", k=3.0, alpha=0.2, warmup=2)
+        for i in range(4):                         # past warmup
+            s.observe(1.0, i)
+        return s
+
+    def test_missing_ids_raise(self):
+        s = self._screen()
+        with pytest.raises(ValueError, match="client_ids"):
+            s.decide_batch(np.ones(3, np.float32))
+
+    def test_shared_baseline_explicit_opt_in(self):
+        s = self._screen()
+        scales = s.decide_batch(np.ones(3, np.float32),
+                                shared_baseline=True)
+        assert scales.shape == (3,)
+
+    def test_real_ids_still_work(self):
+        s = self._screen()
+        scales = s.decide_batch(np.ones(3, np.float32), [0, 1, 2])
+        np.testing.assert_array_equal(scales, np.ones(3, np.float32))
+
+
+# --------------------------- S4: screening x batched-drain equivalence --
+def _params(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (63, 5)),
+            "b": jax.random.normal(jax.random.fold_in(k, 1), (17,))}
+
+
+def _delta(params, seed, scale=0.01):
+    k = jax.random.PRNGKey(seed)
+    return jax.tree.map(
+        lambda l: scale * jax.random.normal(
+            jax.random.fold_in(k, hash(l.shape) % 97), l.shape), params)
+
+
+class TestScreeningBatchedEquivalence:
+    """A burst drained through on_update_batch with clip/reject verdicts
+    must produce the same history records and final params as the same
+    arrivals applied one at a time — this is the path the compressed
+    norms feed, so it is pinned before fusing."""
+
+    @pytest.mark.parametrize("policy", ["clip", "reject"])
+    def test_burst_matches_sequential(self, policy):
+        params = _params()
+        fed = FedConfig(num_clients=8, screen=policy, screen_k=3.0,
+                        screen_warmup=4)
+        srv_seq = make_server("asyncfeded", params, fed, backend="pallas")
+        srv_bat = make_server("asyncfeded", params, fed, backend="pallas")
+
+        # warmup: identical honest arrivals one at a time on both servers
+        for i in range(4):
+            d = _delta(params, i)
+            for srv in (srv_seq, srv_bat):
+                srv.on_connect(i)
+                srv.on_update(ClientUpdate(i, srv.t, 1, d))
+        assert srv_seq.screen.ewma is not None
+
+        # the burst: two honest deltas + one 50x-amplified one
+        burst = []
+        for j, amp in enumerate((1.0, 50.0, 1.0)):
+            d = pt.tree_scale(_delta(params, 10 + j), amp)
+            cid = 4 + j
+            for srv in (srv_seq, srv_bat):
+                srv.on_connect(cid)
+            burst.append(ClientUpdate(cid, srv_seq.t, 1, d))
+
+        n_hist = len(srv_seq.history)
+        for u in burst:
+            srv_seq.on_update(u)
+        srv_bat.on_update_batch(list(burst))
+
+        rec_seq = srv_seq.history[n_hist:]
+        rec_bat = srv_bat.history[n_hist:]
+        assert len(rec_seq) == len(rec_bat) == 3
+        verdicts = [r.screen for r in rec_seq]
+        assert ("clip" in verdicts) if policy == "clip" else (
+            "reject" in verdicts), verdicts
+        for h1, h2 in zip(rec_seq, rec_bat):
+            assert h1.client_id == h2.client_id
+            assert h1.screen == h2.screen
+            assert h1.lag == h2.lag
+            assert h1.k_next == h2.k_next
+            if math.isnan(h1.gamma):
+                assert math.isnan(h2.gamma)
+            else:
+                assert h1.gamma == pytest.approx(h2.gamma, rel=1e-4,
+                                                 abs=1e-6)
+            assert h1.eta == pytest.approx(h2.eta, rel=1e-4, abs=1e-8)
+            assert h1.delta_norm == pytest.approx(h2.delta_norm, rel=1e-4)
+        assert srv_seq.t == srv_bat.t
+        np.testing.assert_allclose(
+            np.asarray(srv_seq._flat.vec), np.asarray(srv_bat._flat.vec),
+            rtol=1e-4, atol=1e-6)
+
+    def test_burst_matches_sequential_int8(self):
+        """Same equivalence with compressed transport: the batched path's
+        kernel-emitted dequantized norms must screen identically to the
+        sequential path's delta_norm."""
+        from repro.core import compression
+        params = _params()
+        fed = FedConfig(num_clients=8, screen="reject", screen_k=3.0,
+                        screen_warmup=4, delta_compression="int8")
+        spec = pt.FlatSpec(params, block=compression.BLOCK)
+        srv_seq = make_server("asyncfeded", params, fed, backend="pallas")
+        srv_bat = make_server("asyncfeded", params, fed, backend="pallas")
+        for i in range(4):
+            cd = compression.quantize_vec(
+                spec.flatten(_delta(params, i)), "int8", spec.n)
+            for srv in (srv_seq, srv_bat):
+                srv.on_connect(i)
+                srv.on_update(ClientUpdate(i, srv.t, 1, cd))
+        burst = []
+        for j, amp in enumerate((1.0, 50.0, 1.0)):
+            d = pt.tree_scale(_delta(params, 10 + j), amp)
+            cd = compression.quantize_vec(spec.flatten(d), "int8", spec.n)
+            cid = 4 + j
+            for srv in (srv_seq, srv_bat):
+                srv.on_connect(cid)
+            burst.append(ClientUpdate(cid, srv_seq.t, 1, cd))
+        n_hist = len(srv_seq.history)
+        for u in burst:
+            srv_seq.on_update(u)
+        srv_bat.on_update_batch(list(burst))
+        rec_seq, rec_bat = srv_seq.history[n_hist:], srv_bat.history[n_hist:]
+        assert [r.screen for r in rec_seq] == [r.screen for r in rec_bat]
+        assert "reject" in [r.screen for r in rec_seq]
+        np.testing.assert_allclose(
+            np.asarray(srv_seq._flat.vec), np.asarray(srv_bat._flat.vec),
+            rtol=1e-4, atol=1e-6)
