@@ -75,6 +75,15 @@ def pinned_rows(bench: str, data: dict) -> Dict[str, Tuple[float, str]]:
         if "cohort_width_gain_int8" in data:
             rows["kernel/cohort_width_gain_int8"] = (
                 float(data["cohort_width_gain_int8"]), _HIGHER)
+        # model-sharded flat state (DESIGN.md §14): both rows are pure
+        # shape arithmetic — the per-device footprint gain and the
+        # planned cohort-width gain at model_shards=8
+        if "flat_state_gain_sharded" in data:
+            rows["kernel/flat_state_gain_sharded"] = (
+                float(data["flat_state_gain_sharded"]), _HIGHER)
+        if "cohort_width_gain_sharded" in data:
+            rows["kernel/cohort_width_gain_sharded"] = (
+                float(data["cohort_width_gain_sharded"]), _HIGHER)
     elif bench == "client_bench":
         for r in data.get("rounds", []):
             c = r.get("clients")

@@ -70,6 +70,7 @@ def run(n_leaves: int = 20, leaf: int = 50_000, batch: int = 8) -> dict:
          f"bytes={out['flat_bytes']:.3e};speedup={out['speedup']:.2f}x")
     out.update(run_batched(batch=batch, n_leaves=n_leaves, leaf=leaf))
     out.update(run_quant(batch=batch, n_leaves=n_leaves, leaf=leaf))
+    out.update(run_sharded())
     save_json("kernel_bench", out)
     return out
 
@@ -201,6 +202,49 @@ def run_quant(batch: int = 8, n_leaves: int = 20, leaf: int = 50_000
          f"gain_int8={out['b_max_gain_int8']:.2f}x")
     emit("kernel/cohort_width_gain_int8", 0.0,
          f"off={w_off};int8={w_int8};P=4MiB;budget=224MiB")
+    return out
+
+
+def run_sharded(shards: int = 8) -> dict:
+    """Model-sharded flat state (DESIGN.md §14) structural metrics.
+
+    Pure shape arithmetic — the gains sharding exists to buy, computable
+    identically on a 1-device bench runner:
+
+    * per-device flat-state footprint gain: the (2 + gmis_depth)-copy
+      flat global state divided over the model axis (64 MiB params,
+      depth-8 GMIS ring);
+    * planned cohort-width gain: under a fixed budget, dividing each
+      client's staged param state by the shard count lets the planner
+      place a wider cohort (8 MiB params, 256 MiB budget, the same
+      construction tests/test_flat_sharded.py pins).
+    """
+    from repro.configs.shapes import flat_state_bytes
+    from repro.core.budget import plan_cohort
+    from repro.core.tasks import arch_task
+
+    P, DEPTH = 64 * 2 ** 20, 8
+    full = flat_state_bytes(P, DEPTH)
+    per_shard = flat_state_bytes(P, DEPTH, model_shards=shards)
+
+    task = arch_task("h2o-danube-1.8b", seq_len=16, global_batch=2,
+                     num_layers=1, d_model=64)
+    kw = dict(clients=32, k=4, param_bytes=8 * 2 ** 20,
+              budget_bytes=256 * 2 ** 20, pods=1)
+    w1 = plan_cohort(task, task.fed, **kw).width
+    ws = plan_cohort(task, task.fed, model_shards=shards, **kw).width
+    out = {
+        "model_shards": shards,
+        "flat_state_gain_sharded": full / per_shard,
+        "cohort_width_unsharded": w1,
+        "cohort_width_sharded": ws,
+        "cohort_width_gain_sharded": ws / max(w1, 1),
+    }
+    emit("kernel/flat_state_gain_sharded", 0.0,
+         f"S={shards};P=64MiB;depth={DEPTH};"
+         f"gain={out['flat_state_gain_sharded']:.2f}x")
+    emit("kernel/cohort_width_gain_sharded", 0.0,
+         f"S={shards};w1={w1};wS={ws};P=8MiB;budget=256MiB")
     return out
 
 

@@ -5,8 +5,11 @@ accuracy reached within a time budget, and time to 90% of max accuracy,
 vs suspension probability P.
 
 ``run_matrix()`` — the adversarial scenario matrix (DESIGN.md §11):
-client-behavior models x attack models x norm-screen policies x server
-backends x client engines, every cell one seeded simulation. The three
+client-behavior models x attack models x screen policies (norm clip /
+reject, per-client cosine) x server backends x client engines, every
+cell one seeded simulation. The attack axis includes ``flip-onset`` — a
+norm-preserving strength-1 sign-flip that engages mid-run — the cell
+where norm screening is provably blind and only the cosine screen bites. The three
 headline rows (clean / attacked-unscreened / attacked-norm-reject on the
 paper behavior) also land in the JSON under ``"recovery"`` with the
 recovered fraction of clean max accuracy per backend — the number the
@@ -58,14 +61,33 @@ SMOKE = dict(behaviors=("paper",), attacks=("none", "sign-flip"),
              engines=("loop",))
 
 
+#: matrix pseudo-attack -> (real attack, attack_params). "flip-onset" is
+#: the norm-blind cell: a strength-1 sign-flip engaging after 3 honest
+#: emissions (mid-run compromise) preserves every norm, so only the
+#: cosine screen's self-consistency statistic can see it. Onset matches
+#: the cosine cells' screen_warmup so each compromised client's baseline
+#: is fully established (and enforcement active) when the flip lands;
+#: the cell needs a horizon of ~4 emissions per client to show rejects
+#: (max_time >= ~4 on the synthetic task — the 2.0 default underfeeds
+#: it; the deterministic screening tests pin the mechanism regardless).
+ATTACK_SCENARIOS = {
+    "flip-onset": ("sign-flip", (("strength", 1.0), ("onset", 3))),
+}
+
+
 def _cell_fed(fed, *, behavior, attack, screen, backend, engine,
               attack_frac, suspension_prob):
+    attack, attack_params = ATTACK_SCENARIOS.get(attack, (attack, ()))
     kw = dict(client_behavior=behavior, attack=attack, screen=screen,
               backend=backend, client_engine=engine,
               suspension_prob=suspension_prob,
+              attack_params=attack_params,
               attack_frac=attack_frac if attack != "none" else 0.0)
     if screen != "off":
-        kw["screen_warmup"] = 5
+        # cosine warmup counts PER-CLIENT accepted arrivals (it builds
+        # one direction baseline per client), not global arrivals like
+        # the norm EWMA — it must fit the per-client emission budget
+        kw["screen_warmup"] = 3 if screen == "cosine" else 5
     if engine != "loop":
         # cohort fan-outs only form when drains batch; the autotuned
         # window also routes screening through the batched Gram sweep
@@ -75,8 +97,8 @@ def _cell_fed(fed, *, behavior, attack, screen, backend, engine,
 
 def run_matrix(task_name: str = "synthetic-1-1", *,
                behaviors=("paper", "flash-crowd", "straggler-tail"),
-               attacks=("none", "sign-flip", "scale"),
-               screens=("off", "reject"),
+               attacks=("none", "sign-flip", "scale", "flip-onset"),
+               screens=("off", "reject", "cosine"),
                backends=("pytree", "pallas"),
                engines=("loop",),
                attack_frac: float = 0.2, seed: int = 3,

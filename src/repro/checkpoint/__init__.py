@@ -1,4 +1,6 @@
-from repro.checkpoint.checkpoint import (latest_step, restore_pytree,
-                                         save_pytree)
+from repro.checkpoint.checkpoint import (latest_flat_step, latest_step,
+                                         restore_flat, restore_pytree,
+                                         save_flat, save_pytree)
 
-__all__ = ["save_pytree", "restore_pytree", "latest_step"]
+__all__ = ["save_pytree", "restore_pytree", "latest_step",
+           "save_flat", "restore_flat", "latest_flat_step"]

@@ -2,19 +2,32 @@
 
 Leaves are saved flat with path-derived keys; restore validates against a
 template tree (shapes + dtypes) so silent drift is impossible.
+
+Flat-state checkpoints (DESIGN.md §14): the pallas backend's source of
+truth is not the pytree but the PADDED flat global vector (and under a
+2-D mesh, its shard layout). Saving only the unflattened params drops
+the layout — a restore into a differently-sharded server would silently
+re-pad to a different length and the GMIS flat ring would no longer line
+up. ``save_flat``/``restore_flat`` round-trip the vector with its
+layout metadata ``(n, block, n_padded, model_shards)``; restore keeps
+only the ``n`` true elements and re-pads to the RESTORING layout, so a
+checkpoint written under one ``model_shards`` restores exactly under
+any other (padding is zeros by construction).
 """
 from __future__ import annotations
 
 import json
 import os
 import re
-from typing import Any, Optional
+from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
 
 PyTree = Any
 _STEP_RE = re.compile(r"step_(\d+)\.npz$")
+_FLAT_RE = re.compile(r"flat_(\d+)\.npz$")
+_FLAT_KEY = "flat_vec"
 
 
 def _flat_with_names(tree: PyTree):
@@ -64,4 +77,74 @@ def latest_step(directory: str) -> Optional[int]:
         return None
     steps = [int(m.group(1)) for f in os.listdir(directory)
              if (m := _STEP_RE.search(f))]
+    return max(steps) if steps else None
+
+
+# --------------------------------------------- flat global state (§14) --
+
+def save_flat(vec, n: int, directory: str, step: int, *,
+              block: int = 1, model_shards: int = 1) -> str:
+    """Save the padded flat global vector with its shard-layout metadata.
+
+    ``vec`` is the server's padded flat state (any array-like; device
+    arrays are fetched), ``n`` the count of TRUE elements — everything
+    past ``n`` is layout padding and must be zero. ``block`` and
+    ``model_shards`` record the layout the vector was padded FOR, so a
+    restore can both validate provenance and re-pad for its own layout.
+    """
+    vec = np.asarray(jax.device_get(vec))
+    n = int(n)
+    if vec.ndim != 1 or not (0 < n <= vec.shape[0]):
+        raise ValueError(f"flat vec must be 1-D with 0 < n <= len: "
+                         f"shape {vec.shape}, n={n}")
+    if vec[n:].any():
+        raise ValueError("flat checkpoint padding past n is non-zero — "
+                         "vec is not a padded flat state")
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"flat_{step}.npz")
+    np.savez(path, **{_FLAT_KEY: vec})
+    meta = {"n": n, "block": int(block), "n_padded": int(vec.shape[0]),
+            "model_shards": int(model_shards), "dtype": str(vec.dtype)}
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def restore_flat(directory: str, step: Optional[int] = None, *,
+                 n: Optional[int] = None,
+                 n_padded: Optional[int] = None) -> Tuple[np.ndarray, dict]:
+    """Restore ``(vec, meta)`` from a flat-state checkpoint.
+
+    ``n`` (when given) validates the true-element count against the
+    restoring model's flat spec — a mismatch means the checkpoint belongs
+    to a different model and restore refuses. ``n_padded`` re-pads the
+    true elements to the RESTORING layout's padded length (e.g. a
+    different ``model_shards``); default keeps the saved padding.
+    """
+    if step is None:
+        step = latest_flat_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no flat checkpoints in {directory}")
+    path = os.path.join(directory, f"flat_{step}.npz")
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    vec = np.load(path)[_FLAT_KEY]
+    if n is not None and int(n) != int(meta["n"]):
+        raise ValueError(f"flat checkpoint holds n={meta['n']} true "
+                         f"elements, restoring model expects n={n}")
+    true = vec[:int(meta["n"])]
+    if n_padded is not None:
+        n_padded = int(n_padded)
+        if n_padded < true.shape[0]:
+            raise ValueError(f"n_padded={n_padded} < n={true.shape[0]}")
+        vec = np.zeros(n_padded, dtype=vec.dtype)
+        vec[:true.shape[0]] = true
+    return vec, meta
+
+
+def latest_flat_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := _FLAT_RE.search(f))]
     return max(steps) if steps else None

@@ -197,9 +197,12 @@ CLIENT_BEHAVIORS: Tuple[str, ...] = ("paper", "trace", "poisson-burst",
 ATTACKS: Tuple[str, ...] = ("none", "sign-flip", "gaussian-noise", "scale",
                             "zero")
 
-#: Valid values of ``FedConfig.screen`` (DESIGN.md §11) — what the server
-#: does with an arriving delta whose norm exceeds k×EWMA.
-SCREEN_POLICIES: Tuple[str, ...] = ("off", "clip", "reject")
+#: Valid values of ``FedConfig.screen`` (DESIGN.md §11, §14) — what the
+#: server does with an arriving delta. "clip"/"reject" act on the norm
+#: (k×EWMA threshold); "cosine" rejects on direction (per-client cosine
+#: EWMA against a server reference direction), which catches
+#: strength-1 sign-flips that preserve the norm exactly.
+SCREEN_POLICIES: Tuple[str, ...] = ("off", "clip", "reject", "cosine")
 
 #: Valid values of ``FedConfig.population`` (DESIGN.md §12). "off" keeps
 #: the roster semantics (every client materialized and seeded at t=0);
@@ -334,6 +337,15 @@ class FedConfig:
     # vmap width, microbatches the K-scan, and finally falls back
     # cohort -> loop; the chosen plan lands in SimResult.summary().
     memory_budget_mb: float = 0.0
+    # model-axis shard count for the flat server state (DESIGN.md §14).
+    # 1 = replicated (default). >1 shards the padded flat global vector,
+    # every GMIS snapshot, and the fedagg grid sweeps over the `model`
+    # axis of the (pod, model) mesh, with one cross-shard psum of the
+    # squared-norm partials per Eq. 6 distance. Pallas backend only (the
+    # pytree reference path has no flat state to shard); must be a power
+    # of two so the padded vector splits into whole kernel blocks, and
+    # needs >= model_shards devices at runtime.
+    model_shards: int = 1
 
     def __post_init__(self):
         # Fail fast at config-construction time: an unknown engine name
@@ -385,6 +397,16 @@ class FedConfig:
                 f"unknown delta_compression {self.delta_compression!r}: "
                 f"expected one of {DELTA_COMPRESSION_MODES} "
                 f"(see DESIGN.md §13)")
+        if self.model_shards < 1 or (self.model_shards
+                                     & (self.model_shards - 1)):
+            raise ValueError(
+                f"model_shards must be a power of two >= 1, got "
+                f"{self.model_shards!r} (see DESIGN.md §14)")
+        if self.model_shards > 1 and self.backend != "pallas":
+            raise ValueError(
+                f"model_shards={self.model_shards} requires "
+                f"backend='pallas' — the pytree reference path has no "
+                f"flat state to shard (see DESIGN.md §14)")
         if self.population not in POPULATION_MODES:
             raise ValueError(
                 f"unknown population mode {self.population!r}: expected "

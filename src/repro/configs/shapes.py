@@ -47,18 +47,27 @@ def delta_wire_bytes(param_bytes: int, mode: str) -> int:
 
 def cohort_footprint_bytes(param_bytes: int, batch_bytes: int,
                            act_bytes: int, clients: int,
-                           k_steps: int, delta_bytes: int = None) -> int:
+                           k_steps: int, delta_bytes: int = None,
+                           model_shards: int = 1) -> int:
     """Estimated device bytes of ONE stacked-cohort dispatch.
 
-    The budget law (DESIGN.md §10, §13): every stacked client row carries
-    ``PARAM_STATE_COPIES - 1`` full parameter copies (params snapshot,
-    momentum, the backward temporary), its delta output row at its WIRE
-    size (deltas leave the dispatch in transport form, so compression
-    shrinks exactly this row), its K staged mini-batches, and one
-    client's worth of forward/backward activations (the scan serializes
-    steps, so activations don't multiply by K)::
+    The budget law (DESIGN.md §10, §13, §14): every stacked client row
+    carries ``PARAM_STATE_COPIES - 1`` full parameter copies (params
+    snapshot, momentum, the backward temporary), its delta output row at
+    its WIRE size (deltas leave the dispatch in transport form, so
+    compression shrinks exactly this row), its K staged mini-batches, and
+    one client's worth of forward/backward activations (the scan
+    serializes steps, so activations don't multiply by K)::
 
-        footprint(C, K) = C * (3 * P + D + K * B + A)
+        footprint(C, K) = C * ((3 * P + D) / S + K * B + A)
+
+    ``S = model_shards`` is the model-axis mesh size (DESIGN.md §14):
+    on a 2-D (pod, model) mesh every parameter-shaped row — snapshot,
+    momentum, backward temporary, delta — splits over the model axis, so
+    only the parameter-state term gains the shard divisor; staged batches
+    and activations are data, not parameters, and stay whole per device.
+    ``model_shards=1`` (default) keeps the replicated law — and every
+    pre-sharding call site — byte-identical.
 
     ``delta_bytes`` defaults to ``param_bytes`` (an uncompressed f32
     delta), which keeps the historical ``C * (4 * P + K * B + A)`` law —
@@ -73,7 +82,31 @@ def cohort_footprint_bytes(param_bytes: int, batch_bytes: int,
     """
     if delta_bytes is None:
         delta_bytes = int(param_bytes)
-    per_client = ((PARAM_STATE_COPIES - 1) * int(param_bytes)
-                  + int(delta_bytes)
+    shards = max(1, int(model_shards))
+    param_state = ((PARAM_STATE_COPIES - 1) * int(param_bytes)
+                   + int(delta_bytes))
+    per_client = (-(-param_state // shards)        # ceil: shards round up
                   + int(k_steps) * int(batch_bytes) + int(act_bytes))
     return int(clients) * per_client
+
+
+def flat_state_bytes(param_bytes: int, gmis_depth: int,
+                     model_shards: int = 1) -> int:
+    """Per-DEVICE peak bytes of the flat server state (DESIGN.md §14).
+
+    The flat-state server holds the live padded flat vector, one zeros
+    scratch vector (the displacement kernels' x_stale slot), and up to
+    ``gmis_depth`` ring-GMIS snapshots — all parameter-shaped, all
+    committed to the `model` mesh axis under sharding, so each device
+    retains ``1/model_shards`` of every copy::
+
+        per_device = (2 + gmis_depth) * ceil(P / S)
+
+    This is the law the ~1/shards acceptance criterion asserts: the gain
+    ``flat_state_bytes(P, d, 1) / flat_state_bytes(P, d, S)`` is exactly
+    ``S`` whenever ``S`` divides the padded size (the server pads to
+    ``kernel BLOCK * S``, so it always does).
+    """
+    shards = max(1, int(model_shards))
+    per_copy = -(-int(param_bytes) // shards)
+    return (2 + max(0, int(gmis_depth))) * per_copy

@@ -23,6 +23,18 @@ Registry (names mirrored by ``configs.base.ATTACKS``):
 
 Attacks draw from their own PCG64 stream (derived from the run seed), so
 enabling a deterministic attack never perturbs the timing or data RNGs.
+Every attack additionally honors an ``onset`` knob in ``attack_params``:
+a corrupted client's first ``onset`` emissions stay honest before the
+attack engages (mid-run compromise), the scenario the cosine screen
+targets.
+
+Every attack also has a WIRE-FORM twin: under the sharded engine's
+compressed pod collectives (DESIGN.md §14) the emitted delta is already a
+:class:`~repro.core.compression.CompressedDelta`, so corruption acts on
+transport form. sign-flip/scale/zero are exact there (int8 scaling
+touches only the f32 scales); gaussian-noise dequantizes, perturbs, and
+re-quantizes — the extra quantization error is part of what the attacker
+emits on the wire.
 """
 from __future__ import annotations
 
@@ -30,9 +42,11 @@ import dataclasses
 from typing import Any, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ATTACKS, FedConfig
+from repro.core import compression
 from repro.utils import pytree as pt
 
 PyTree = Any
@@ -43,11 +57,22 @@ _SEED_SALT = 777_767
 
 def _sign_flip(delta: PyTree, rng: np.random.Generator, *,
                strength: float = 10.0) -> PyTree:
+    if compression.is_compressed(delta):
+        return compression.scale_delta(delta, -float(strength))
     return pt.tree_scale(delta, -float(strength))
 
 
 def _gaussian_noise(delta: PyTree, rng: np.random.Generator, *,
                     noise_scale: float = 10.0) -> PyTree:
+    if compression.is_compressed(delta):
+        vec = np.asarray(compression.dequantize(delta), np.float32)
+        n = max(int(delta.n), 1)      # true elements; padding is zeros
+        rms = float(np.sqrt(float(np.sum(vec * vec)) / n))
+        sigma = float(noise_scale) * max(rms, 1e-8)
+        noisy_vec = vec + rng.normal(0.0, sigma, vec.shape
+                                     ).astype(np.float32)
+        return compression.quantize_vec(jnp.asarray(noisy_vec),
+                                        delta.mode, delta.n)
     n = max(pt.tree_size(delta), 1)
     rms = float(np.sqrt(float(pt.tree_sq_norm(delta)) / n))
     sigma = float(noise_scale) * max(rms, 1e-8)
@@ -61,10 +86,16 @@ def _gaussian_noise(delta: PyTree, rng: np.random.Generator, *,
 
 def _scale(delta: PyTree, rng: np.random.Generator, *,
            boost: float = 10.0) -> PyTree:
+    if compression.is_compressed(delta):
+        return compression.scale_delta(delta, float(boost))
     return pt.tree_scale(delta, float(boost))
 
 
 def _zero(delta: PyTree, rng: np.random.Generator) -> PyTree:
+    if compression.is_compressed(delta):
+        # scale-by-0 zeroes the dequantized values exactly (int8: zero
+        # scales; bf16: zero payload) while keeping wire shape/dtype
+        return compression.scale_delta(delta, 0.0)
     return pt.tree_zeros_like(delta)
 
 
@@ -90,6 +121,13 @@ class Adversary:
         self.attack = fed.attack
         self.fn = ATTACK_FNS[fed.attack]
         self.params = dict(fed.attack_params)
+        # mid-run compromise (DESIGN.md §14): a corrupted client's first
+        # ``onset`` emissions stay honest, then every later one is
+        # attacked — an established client turning byzantine, the
+        # scenario the cosine screen's self-consistency statistic is
+        # built for. onset=0 (default) corrupts from genesis.
+        self.onset = int(self.params.pop("onset", 0))
+        self._emitted: dict = {}
         self.rng = np.random.default_rng(seed + _SEED_SALT)
         n_adv = int(round(fed.attack_frac * fed.num_clients))
         ids = self.rng.choice(fed.num_clients, size=n_adv, replace=False)
@@ -100,6 +138,10 @@ class Adversary:
         """Corrupt one emitted ClientUpdate (returns a new record; honest
         clients' updates pass through untouched)."""
         if upd.client_id not in self.corrupt_ids:
+            return upd
+        seen = self._emitted.get(upd.client_id, 0)
+        self._emitted[upd.client_id] = seen + 1
+        if seen < self.onset:
             return upd
         self.applied += 1
         return dataclasses.replace(

@@ -76,7 +76,8 @@ def _pod_count(fed: FedConfig, clients: int) -> int:
 def plan_cohort(task, fed: FedConfig, *, clients: int, k: int,
                 param_bytes: int, prox_mu: float = 0.0, ragged: bool = False,
                 budget_bytes: Optional[int] = None,
-                pods: Optional[int] = None) -> CohortPlan:
+                pods: Optional[int] = None,
+                model_shards: Optional[int] = None) -> CohortPlan:
     """Plan one fan-out of ``clients`` clients x ``k`` local steps.
 
     ``ragged`` means per-client K values differ: the executor then pads
@@ -92,6 +93,13 @@ def plan_cohort(task, fed: FedConfig, *, clients: int, k: int,
     width-halving ladder must stop at the pod count — shard_map cannot
     place a stack narrower than one row per pod. ``pods`` overrides the
     mesh-derived count (tests plan for fake meshes without devices).
+
+    Under ``fed.model_shards > 1`` (DESIGN.md §14) every parameter-shaped
+    row additionally splits over the model mesh axis, so the footprint law
+    charges the param-state term at ``1/model_shards`` per device — the
+    shard divisor is what lets planned cohort width GROW with model-axis
+    size under a fixed per-device budget. ``model_shards`` overrides
+    ``fed.model_shards`` (tests plan for fake meshes without devices).
     """
     task = tasks.as_task(task)
     if budget_bytes is None:
@@ -99,6 +107,9 @@ def plan_cohort(task, fed: FedConfig, *, clients: int, k: int,
     if pods is None:
         pods = _pod_count(fed, clients)
     pods = max(1, int(pods))
+    if model_shards is None:
+        model_shards = getattr(fed, "model_shards", 1)
+    model_shards = max(1, int(model_shards))
     bb = task.batch_bytes(fed)
     ab = task.activation_bytes(fed)
     # compressed transport (DESIGN.md §13): the delta row is charged at
@@ -110,7 +121,8 @@ def plan_cohort(task, fed: FedConfig, *, clients: int, k: int,
         # per-device footprint: each pod holds width/pods client rows
         per_pod = max(1, -(-int(width) // pods))     # ceil division
         return cohort_footprint_bytes(param_bytes, bb, ab, per_pod, k_chunk,
-                                      delta_bytes=db)
+                                      delta_bytes=db,
+                                      model_shards=model_shards)
 
     width = _bucket(max(clients, 1))
     k_chunk = max(int(k), 1)

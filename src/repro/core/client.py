@@ -143,6 +143,25 @@ class Client:
         return ClientUpdate(upd.client_id, upd.snapshot_iter, upd.k_used,
                             cd, upd.num_samples)
 
+    def stage_residual(self, spec: pt.FlatSpec) -> jax.Array:
+        """Cohort-engine hook (DESIGN.md §14): the error-feedback row the
+        sharded engine folds into this client's delta before quantizing
+        ON DEVICE. ``spec`` is the fan-out's shared flat layout, adopted
+        as this client's flatspec so a later loop-engine
+        :meth:`compress_update` keeps the identical padded length."""
+        if self._flatspec is None:
+            self._flatspec = spec
+        if self._residual is None:
+            return spec.zeros()
+        return self._residual
+
+    def commit_residual(self, residual) -> None:
+        """Scatter one refreshed error-feedback row back after the cohort
+        engine compressed this client's delta itself
+        (:meth:`compress_update` no-ops on the already wire-form
+        update)."""
+        self._residual = residual
+
     def release_residual(self) -> None:
         """Drop the error-feedback residual (client session ended)."""
         self._residual = None

@@ -46,6 +46,21 @@ unchanged — the scan is merely cut, not reordered). All batcher draws
 still happen up front in client order, so a plan can never fork a
 client's RNG stream.
 
+**Compressed pod collectives** (DESIGN.md §14): under
+``cohort_sharded`` with ``FedConfig.delta_compression`` set, the deltas
+never cross the pod boundary as f32. A second shard_map'd step flattens
+each pod's own stacked delta rows, folds in the clients' staged
+error-feedback residual rows, and quantizes to transport form on device
+— so the gather that ends the dispatch moves int8/bf16 wire blocks (the
+same per-QBLOCK absmax layout as ``core.compression``) for the delta
+payload, with the f32 residual rows scattered back to their clients as
+per-pod error-feedback accounting. ``run_cohort`` then emits
+:class:`~repro.core.compression.CompressedDelta` updates directly and
+``Client.compress_update`` no-ops on them. One ordering consequence: an
+adversary corrupts these updates in WIRE form (the attack fns have exact
+wire-form twins for sign-flip/scale/zero), whereas the loop engine
+corrupts the f32 pytree before quantization.
+
 Semantics match the per-client loop exactly: the same batcher index
 stream (``next_stacked`` is RNG-state-identical to k ``next`` calls), the
 same momentum carry, the same per-round lr decay, the same FedProx
@@ -64,6 +79,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import CLIENT_ENGINES
+from repro.core import compression
 from repro.core import tasks as tasks_mod
 from repro.core.client import local_sgd_step
 from repro.core.server import ClientUpdate
@@ -234,6 +250,66 @@ def _core_call(task, engine: str, fed, p_stacked, mu_stacked, xs, ys,
                           beta=fed.local_momentum, prox_mu=prox_mu)
 
 
+@functools.lru_cache(maxsize=None)
+def _wire_core(n_pods: int, mode: str):
+    """Jitted shard_map'd per-pod delta compressor (DESIGN.md §14).
+
+    Each pod flattens its OWN stacked delta rows (leafwise ravel+concat —
+    the exact ``FlatSpec`` staging order), adds the staged error-feedback
+    residual rows, and quantizes row-wise with the same per-QBLOCK absmax
+    math as ``compression._quantize_int8``. The delta payload leaves the
+    device in wire form; the refreshed residual rows return as NEUTRAL
+    host arrays — client state must not stay committed to this dispatch's
+    pod mesh, or the commitment would propagate through the next
+    ``compress_update`` into server params and clash with a
+    differently-sized mesh on a later fan-out.
+    """
+    mesh = mesh_lib.make_cohort_mesh(n_pods)
+    spec = sh.COHORT_PREFIX_SPEC
+
+    def body(deltas, res):
+        rows = jnp.concatenate(
+            [l.reshape(l.shape[0], -1).astype(jnp.float32)
+             for l in jax.tree.leaves(deltas)], axis=1)
+        if rows.shape[1] != res.shape[1]:
+            rows = jnp.pad(rows, ((0, 0), (0, res.shape[1] - rows.shape[1])))
+        vec = rows + res
+        if mode == "int8":
+            blocks = vec.reshape(vec.shape[0], -1, compression.QBLOCK)
+            absmax = jnp.max(jnp.abs(blocks), axis=2)
+            scales = absmax / 127.0
+            inv = jnp.where(scales > 0,
+                            1.0 / jnp.where(scales > 0, scales, 1.0), 0.0)
+            q = jnp.clip(jnp.round(blocks * inv[:, :, None]),
+                         -127, 127).astype(jnp.int8)
+            deq = (q.astype(jnp.float32) * scales[:, :, None]
+                   ).reshape(vec.shape)
+            return q.reshape(vec.shape[0], -1), scales, vec - deq
+        q = vec.astype(jnp.bfloat16)
+        return q, vec - q.astype(jnp.float32)
+
+    n_out = 3 if mode == "int8" else 2
+    fn = shard_map(body, mesh=mesh, in_specs=(spec, spec),
+                   out_specs=(spec,) * n_out)
+    return jax.jit(fn)
+
+
+def _wire_finish(deltas, res_stacked, mode: str, c_pad: int):
+    """Run the per-pod compressor and gather the wire blocks to the host.
+
+    Returns ``(q, scales, new_res)`` as host arrays in transport dtypes
+    (``scales`` is None for bf16); the delta payload crosses in int8/bf16
+    while the f32 residual stack is per-client error-feedback STATE, not
+    part of the aggregated wire traffic.
+    """
+    n_pods = mesh_lib.pod_count(max_pods=c_pad)
+    out = _wire_core(n_pods, mode)(deltas, res_stacked)
+    if mode == "int8":
+        return jax.device_get(out)
+    q, new_res = jax.device_get(out)
+    return q, None, new_res
+
+
 # stack per-client trees on the host: jnp.stack would dispatch
 # expand_dims+concat per client per leaf (hundreds of ops per round);
 # momentum rows come back as np views from the previous device_get,
@@ -245,12 +321,15 @@ _np_stack = functools.partial(jax.tree.map,
 
 def _run_chunk(task, fed, engine: str, p_src, mus, lrs_list, x_rows,
                y_rows, ks: Sequence[int], prox_mu: float, template,
-               k_chunk: Optional[int]):
+               k_chunk: Optional[int], wire=None):
     """Execute one client chunk: pad/stack, then run the core — in one
     call, or in ``k_chunk``-step scan segments when the memory plan says
-    the full K-scan doesn't fit. Returns host-side (deltas, new_mu,
-    losses) stacked over the chunk's real clients (padding discarded by
-    the caller via row index)."""
+    the full K-scan doesn't fit. Returns (deltas, new_mu, losses,
+    wire_out) stacked over the chunk's real clients (padding discarded by
+    the caller via row index). ``wire`` is ``(mode, residual_rows)`` for
+    the compressed pod collective: the chunk then returns ``wire_out =
+    (q, scales, new_res)`` in place of f32 ``deltas`` (which come back
+    None)."""
     c_real = len(mus)
     c_pad = bucket_size(c_real)
     uniform = len(set(ks)) == 1
@@ -275,6 +354,13 @@ def _run_chunk(task, fed, engine: str, p_src, mus, lrs_list, x_rows,
         ys_rows.append(ys_rows[0])
         mus.append(zeros_mu)
 
+    res_stacked = wire_mode = None
+    if wire is not None:
+        wire_mode, res_rows = wire
+        rows = [np.asarray(r, np.float32) for r in res_rows]
+        rows += [np.zeros_like(rows[0])] * (c_pad - c_real)
+        res_stacked = np.stack(rows)
+
     xs = _np_stack(*xs_rows)
     ys = _np_stack(*ys_rows)
     mu_stacked = _np_stack(*mus)
@@ -285,9 +371,13 @@ def _run_chunk(task, fed, engine: str, p_src, mus, lrs_list, x_rows,
             lambda p: jnp.broadcast_to(p, (c_pad,) + p.shape), p_src)
 
     if k_chunk is None or k_chunk >= k_pad:
-        res = _core_call(task, engine, fed, p_stacked, mu_stacked, xs, ys,
-                         lrs, mask, prox_mu, c_pad)
-        return jax.device_get(res)
+        deltas, new_mu, losses = _core_call(task, engine, fed, p_stacked,
+                                            mu_stacked, xs, ys, lrs, mask,
+                                            prox_mu, c_pad)
+        if wire_mode is None:
+            return (*jax.device_get((deltas, new_mu, losses)), None)
+        wire_out = _wire_finish(deltas, res_stacked, wire_mode, c_pad)
+        return None, *jax.device_get((new_mu, losses)), wire_out
 
     # --- K-scan microbatches: thread the (params, momentum) carry through
     # segments on device; total delta is the sum of segment deltas and the
@@ -316,8 +406,13 @@ def _run_chunk(task, fed, engine: str, p_src, mus, lrs_list, x_rows,
     total_act = (np.full((c_pad,), float(k_pad))
                  if uniform else np.maximum(mask.sum(axis=1), 1.0))
     losses = (loss_sum / total_act).astype(np.float32)
+    if wire_mode is not None:
+        # segment deltas were accumulated on device, so the compressed
+        # gather still sees ONE full-K delta per client row
+        wire_out = _wire_finish(delta_acc, res_stacked, wire_mode, c_pad)
+        return None, jax.device_get(mu_cur), losses, wire_out
     deltas, new_mu = jax.device_get((delta_acc, mu_cur))
-    return deltas, new_mu, losses
+    return deltas, new_mu, losses, None
 
 
 def run_cohort(task, clients: Sequence,
@@ -390,25 +485,44 @@ def run_cohort(task, clients: Sequence,
         if prox_mu == 0.0 and int(plan.k_chunk) < max(ks):
             k_chunk = int(plan.k_chunk)
 
-    deltas_rows, mu_rows, loss_rows = [], [], []
+    # compressed pod collectives (DESIGN.md §14): the sharded engine
+    # quantizes delta rows per pod, so the gather moves wire blocks
+    res_spec = None
+    res_rows: List = []
+    if engine == "cohort_sharded" and fed.delta_compression != "off":
+        res_spec = pt.FlatSpec(template, block=compression.BLOCK)
+        res_rows = [c.stage_residual(res_spec) for c in clients]
+
+    deltas_rows, mu_rows, loss_rows, res_commits = [], [], [], []
     for lo in range(0, c_real, width):
         hi = min(lo + width, c_real)
         if per_client:
             p_src = list(params[lo:hi])
         else:
             p_src = params
-        deltas, new_mu, losses = _run_chunk(
+        wire_arg = (None if res_spec is None
+                    else (fed.delta_compression, res_rows[lo:hi]))
+        deltas, new_mu, losses, wire_out = _run_chunk(
             task, fed, engine, p_src, mus[lo:hi], lrs_list[lo:hi],
             x_rows[lo:hi], y_rows[lo:hi], ks[lo:hi], prox_mu, template,
-            k_chunk)
+            k_chunk, wire_arg)
         for i in range(hi - lo):
-            deltas_rows.append(jax.tree.map(lambda l: l[i], deltas))
+            if wire_out is not None:
+                q, scales, new_res = wire_out
+                deltas_rows.append(compression.CompressedDelta(
+                    fed.delta_compression, q[i],
+                    None if scales is None else scales[i], res_spec.n))
+                res_commits.append(new_res[i])
+            else:
+                deltas_rows.append(jax.tree.map(lambda l: l[i], deltas))
             mu_rows.append(jax.tree.map(lambda l: l[i], new_mu))
             loss_rows.append(float(losses[i]))
 
     out: List[Tuple[ClientUpdate, float]] = []
     for i, (c, k, it) in enumerate(zip(clients, ks, snapshot_iters)):
         c.commit_cohort(mu_rows[i])
+        if res_spec is not None:
+            c.commit_residual(res_commits[i])
         upd = ClientUpdate(c.client_id, it, k, deltas_rows[i],
                            c.num_samples)
         out.append((upd, loss_rows[i]))

@@ -15,6 +15,15 @@ Two modes:
   ||d_i|| is exactly ||x_t - x_{t-tau}||, bitwise-equal math with no model
   copies. This is what makes the protocol deployable for 70B-parameter
   models where 64 GMIS copies would be ~18 TB.
+
+Model sharding (DESIGN.md §14): under ``FedConfig.model_shards > 1`` the
+flat server stores MODEL-SHARDED vectors here — a jax array committed to
+the `model` mesh axis is a one-leaf pytree like any other, ``append``
+just holds the reference, and ``tree_zeros_like`` preserves the input's
+sharding — so both stores are shard-layout-transparent by construction
+and each device retains only its ``1/shards`` slice of every snapshot.
+That per-device ring is exactly where the ~1/shards peak-flat-state-bytes
+scaling (configs.shapes.flat_state_bytes) comes from.
 """
 from __future__ import annotations
 

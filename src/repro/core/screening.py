@@ -44,6 +44,20 @@ Robustness details that matter:
   fed it, a sustained attack would ratchet the threshold upward until the
   attack passes.
 
+Norm screening has a provable blind spot: a strength-1 sign-flip emits
+``-Delta``, whose norm EQUALS the honest norm — no norm statistic, per
+client or global, can separate it from the honest update it mirrors.
+:class:`CosineScreen` (policy ``"cosine"``) closes that hole with a
+direction statistic: each client keeps a unit-EWMA of its OWN accepted
+update directions, and an arrival whose cosine against that baseline
+falls below ``cos_min`` is rejected (the mid-run-compromise threat
+model — see the class docstring for why the client's own history is the
+only usable reference). Direction screens declare ``needs_vector = True``
+and receive
+the flat delta vector alongside the norm; burst drains fall back to
+sequential aggregation for them, since the batched Gram sweep emits only
+norms.
+
 Screening is decided in arrival order (the baselines are stateful), which
 is why the batched drain path hands this object the kernel-emitted norms
 of a burst plus the matching client ids and receives per-update scale
@@ -67,6 +81,9 @@ class NormScreen:
     """k x EWMA delta-norm screen with per-client baselines. ``observe``
     consumes one arriving ||Delta|| (in arrival order) and returns
     ``(verdict, scale)``."""
+
+    #: norm screens consume only the scalar ||Delta|| the kernels emit
+    needs_vector = False
 
     def __init__(self, policy: str, *, k: float = 3.0, alpha: float = 0.2,
                  warmup: int = 8,
@@ -190,18 +207,133 @@ class NormScreen:
         return out
 
 
+class CosineScreen:
+    """Per-client-EWMA cosine screen (policy ``"cosine"``).
+
+    A strength-1 sign-flip emits the honest update mirrored through the
+    origin: its norm EQUALS the honest norm, so no norm statistic — per
+    client or global — can see it. Its direction can. The only reliable
+    direction reference on this system's tasks is the client's OWN
+    history: measured on the paper's synthetic tasks (both IID and
+    non-IID heterogeneity), cross-client delta cosines sit at ~-0.03 +/-
+    0.06 — there is no cross-client descent consensus to compare against,
+    and leave-one-out / global-reference variants were tried and flag
+    honest clients as often as flippers — while SAME-client consecutive
+    deltas align at ~+0.73. So each client keeps a unit EWMA of its own
+    accepted update directions, and an arrival whose cosine against that
+    baseline falls below ``cos_min`` is rejected. A flip lands at ~-0.7
+    against a ~+0.7 honest baseline: the margin is enormous in both
+    directions, which is what makes the screen deployable.
+
+    Threat model: MID-RUN COMPROMISE — an established client turning
+    byzantine (``attack_params={"onset": n}``), the realistic way
+    devices go bad in a federation. A from-genesis flipper that never
+    emits an honest delta establishes a self-consistent (mirrored)
+    history and is invisible to any self-referential statistic; it is
+    equally invisible to norm screens, and catching it would require
+    trusted reference data the server does not have (FLTrust-style).
+
+    Only ACCEPTED arrivals update a client's direction EWMA — after the
+    flip onset every rejected arrival leaves the honest baseline frozen,
+    so a compromised client stays locked out rather than slowly
+    normalizing its mirrored direction into its own reference. The first
+    ``warmup`` accepted arrivals per client build the baseline without
+    enforcement.
+
+    Rejection is the only flag verdict: "clipping" a direction has no
+    norm-screen analogue (scaling a mirrored vector keeps it mirrored).
+    Zero-norm arrivals carry no direction and pass through — magnitude
+    anomalies are :class:`NormScreen`'s jurisdiction, which is why the
+    robustness matrix runs the two screens as alternatives, not a stack.
+    Memory: one flat f32 direction per active client — the price of a
+    direction statistic; the norm screen stays the O(1)-per-client
+    default.
+    """
+
+    #: direction screens need the flat delta vector, not just its norm;
+    #: the server's burst drain goes sequential for them (the batched
+    #: Gram sweep emits only norms)
+    needs_vector = True
+
+    def __init__(self, *, alpha: float = 0.2, warmup: int = 8,
+                 cos_min: float = -0.2):
+        if not (0.0 < alpha <= 1.0) or warmup < 1 \
+                or not (-1.0 <= cos_min <= 1.0):
+            raise ValueError(f"bad cosine-screen knobs alpha={alpha} "
+                             f"warmup={warmup} cos_min={cos_min}")
+        self.policy = "cosine"
+        self.alpha = float(alpha)
+        self.warmup = int(warmup)
+        self.cos_min = float(cos_min)
+        self._dir: dict = {}     # client -> unit EWMA of accepted dirs
+        self._nobs: dict = {}    # client -> accepted-arrival count
+        self.counts = {"accept": 0, "clip": 0, "reject": 0}
+
+    @staticmethod
+    def _cosine(a: np.ndarray, b: np.ndarray) -> Optional[float]:
+        """Cosine aligned on the shorter padded length (both paddings are
+        zeros, so truncation is exact); None when either side has no
+        direction."""
+        m = min(a.shape[0], b.shape[0])
+        a, b = a[:m], b[:m]
+        na, nb = float(np.linalg.norm(a)), float(np.linalg.norm(b))
+        if na <= 0.0 or nb <= 0.0:
+            return None
+        return float(np.dot(a, b) / (na * nb))
+
+    def observe(self, norm: float, client_id: Hashable = None, *,
+                vec: Optional[np.ndarray] = None) -> Tuple[str, float]:
+        if vec is None:
+            raise ValueError("CosineScreen.observe needs the flat delta "
+                             "vector (vec=); the caller must honor "
+                             "needs_vector")
+        vec = np.asarray(vec, np.float32).ravel()
+        base = self._dir.get(client_id)
+        cos = None if base is None else self._cosine(vec, base)
+        if (cos is not None and self._nobs.get(client_id, 0) >= self.warmup
+                and cos < self.cos_min):
+            self.counts["reject"] += 1
+            return "reject", 0.0
+        self.counts["accept"] += 1
+        n = float(np.linalg.norm(vec))
+        if n > 0.0:
+            u = vec / n
+            if base is None:
+                new = u
+            else:
+                m = min(u.shape[0], base.shape[0])
+                new = (1.0 - self.alpha) * base[:m] + self.alpha * u[:m]
+                nn = float(np.linalg.norm(new))
+                if nn > 0.0:
+                    new = new / nn
+            self._dir[client_id] = new
+            self._nobs[client_id] = self._nobs.get(client_id, 0) + 1
+        return "accept", 1.0
+
+    def stats(self) -> dict:
+        out = dict(self.counts)
+        out["policy"] = self.policy
+        out["threshold"] = self.cos_min
+        out["clients"] = len(self._dir)
+        return out
+
+
 def make_screen(fed: FedConfig, *,
-                store: Optional[MutableMapping] = None
-                ) -> Optional[NormScreen]:
+                store: Optional[MutableMapping] = None):
     """Build the screen a server should run under ``fed`` — None when
     screening is off (the default), so defense-off runs carry zero extra
     state and replay existing traces byte-identically. ``store`` injects
-    an external per-client baseline map (population mode)."""
+    an external per-client baseline map (population mode; norm screens
+    only — the cosine screen's baselines are scalars keyed per client and
+    stay dict-backed)."""
     if fed.screen == "off":
         return None
     if fed.screen not in SCREEN_POLICIES:
         raise ValueError(f"unknown screen policy {fed.screen!r}: expected "
                          f"one of {SCREEN_POLICIES}")
+    if fed.screen == "cosine":
+        return CosineScreen(alpha=fed.screen_alpha,
+                            warmup=fed.screen_warmup)
     return NormScreen(fed.screen, k=fed.screen_k, alpha=fed.screen_alpha,
                       warmup=fed.screen_warmup, store=store)
 

@@ -12,6 +12,7 @@ same classes with pod-sharded parameter pytrees.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -29,6 +30,13 @@ from repro.kernels.fedagg import ops
 from repro.utils import pytree as pt
 
 PyTree = Any
+
+#: flat-kernel entry points mirrored by the model-sharded twins
+#: (`kernels.fedagg.sharded`): the server binds one set per instance so
+#: `_aggregate_flat`/`on_update_batch` never branch on the shard count.
+_AGG_OPS = ("flat_aggregate", "flat_aggregate_displacement",
+            "flat_aggregate_q", "flat_aggregate_displacement_q",
+            "flat_aggregate_batched", "flat_aggregate_batched_q")
 
 
 @dataclasses.dataclass
@@ -97,6 +105,15 @@ class AsyncServer:
             return dataclasses.replace(upd, delta=self._delta_tree(upd.delta))
         return upd
 
+    def _delta_vec(self, delta) -> np.ndarray:
+        """The flat delta vector as host f32 numpy (dequantized when it
+        arrived in wire form) — what direction-based screens consume."""
+        if compression.is_compressed(delta):
+            return np.asarray(compression.dequantize(delta), np.float32)
+        if self._despec is None:
+            self._despec = pt.FlatSpec(self.params, block=compression.BLOCK)
+        return np.asarray(self._despec.flatten(delta), np.float32)
+
     def _screen_delta(self, upd: ClientUpdate):
         """Norm-screen one arriving delta. Returns ``(upd', verdict,
         scale, raw_norm)``: ``upd'`` carries the clipped delta — or is
@@ -104,11 +121,17 @@ class AsyncServer:
         when screening is off, so the off path builds records exactly as
         before screening existed. Compressed deltas are screened on their
         DEQUANTIZED norm — the values aggregation will apply — and clip
-        verdicts scale them in transport form (exact on int8 scales)."""
+        verdicts scale them in transport form (exact on int8 scales).
+        Direction screens (``needs_vector``, e.g. the cosine screen) also
+        receive the flat delta vector itself."""
         if self.screen is None:
             return upd, "accept", 1.0, None
         raw = compression.delta_norm(upd.delta)
-        verdict, scale = self.screen.observe(raw, upd.client_id)
+        if getattr(self.screen, "needs_vector", False):
+            verdict, scale = self.screen.observe(
+                raw, upd.client_id, vec=self._delta_vec(upd.delta))
+        else:
+            verdict, scale = self.screen.observe(raw, upd.client_id)
         if verdict == "reject":
             return None, verdict, 0.0, raw
         if verdict == "clip":
@@ -180,6 +203,21 @@ class AsyncFedEDServer(AsyncServer):
             raise ValueError("per-leaf staleness needs the pytree backend")
         self.backend = backend
         self._interpret = interpret
+        # model-axis sharding (DESIGN.md §14): >1 places the flat global
+        # vector (and, via the GMIS pass-through, every snapshot) over
+        # the `model` mesh axis and routes aggregation through the
+        # sharded kernel twins — one cross-shard psum per Eq. 6 norm.
+        self._shards = fed.model_shards if backend == "pallas" else 1
+        if self._shards > 1:
+            from repro.kernels.fedagg import sharded as _sharded
+            self._sharded = _sharded
+            self._agg = {
+                name: functools.partial(getattr(_sharded, name),
+                                        shards=self._shards)
+                for name in _AGG_OPS}
+        else:
+            self._sharded = None
+            self._agg = {name: getattr(ops, name) for name in _AGG_OPS}
         self._flat: Optional[pt.FlatParams] = None
         self._zeros = None
         super().__init__(params, fed)    # routes through the params setter
@@ -199,14 +237,31 @@ class AsyncFedEDServer(AsyncServer):
     @property
     def params(self) -> PyTree:
         if self.backend == "pallas":
+            if self._shards > 1 and self._flat._tree_cache is None:
+                # the pytree view leaves the server (client downloads,
+                # eval): built straight from the sharded vec its leaves
+                # would stay committed to the fedagg mesh and clash with
+                # whatever mesh a cohort fan-out stacks them onto — so
+                # unflatten from a neutral host copy instead
+                self._flat._tree_cache = self._flat.spec.unflatten(
+                    jnp.asarray(jax.device_get(self._flat.vec)))
             return self._flat.tree       # lazily unflattened, cached
         return self._params
 
     @params.setter
     def params(self, value: PyTree) -> None:
         if self.backend == "pallas":
-            self._flat = pt.FlatParams.from_tree(value, block=ops._BLOCK)
+            # pad to BLOCK * shards so every model shard is a whole
+            # number of kernel blocks — non-dividing true sizes are
+            # absorbed by the (value-transparent) zero padding
+            self._flat = pt.FlatParams.from_tree(
+                value, block=ops._BLOCK * self._shards)
             self._zeros = self._flat.spec.zeros()
+            if self._shards > 1:
+                self._flat = self._flat.replace(
+                    self._sharded.place_flat(self._flat.vec, self._shards))
+                self._zeros = self._sharded.place_flat(self._zeros,
+                                                       self._shards)
         else:
             self._params = value
 
@@ -215,6 +270,39 @@ class AsyncFedEDServer(AsyncServer):
         raw array is a one-leaf pytree, so Ring/Displacement code is
         unchanged), full pytrees otherwise."""
         return self._flat.vec if self.backend == "pallas" else self.params
+
+    def save_checkpoint(self, directory: str,
+                        step: Optional[int] = None) -> str:
+        """Persist the global model. The pallas backend saves the PADDED
+        flat vector with its shard-layout metadata (checkpoint.save_flat)
+        — round-tripping through the pytree view would drop the layout —
+        while the pytree backend saves the params pytree."""
+        from repro import checkpoint
+        step = self.t if step is None else step
+        if self.backend == "pallas":
+            return checkpoint.save_flat(
+                self._flat.vec, self._flat.spec.n, directory, step,
+                block=self._flat.spec.block, model_shards=self._shards)
+        return checkpoint.save_pytree(self.params, directory, step)
+
+    def restore_checkpoint(self, directory: str,
+                           step: Optional[int] = None) -> None:
+        """Restore the global model saved by :meth:`save_checkpoint`.
+        Flat checkpoints validate the true-element count and re-pad to
+        THIS server's layout, so a vector saved under one
+        ``model_shards`` restores exactly under another."""
+        from repro import checkpoint
+        if self.backend == "pallas":
+            vec, _ = checkpoint.restore_flat(
+                directory, step, n=self._flat.spec.n,
+                n_padded=self._flat.spec.n_padded)
+            vec = jnp.asarray(vec)
+            if self._shards > 1:
+                vec = self._sharded.place_flat(vec, self._shards)
+            self._flat = self._flat.replace(vec)
+        else:
+            self.params = checkpoint.restore_pytree(self.params,
+                                                    directory, step)
 
     def _register(self, client_id: int) -> None:
         if self.gmis_mode == "displacement":
@@ -245,44 +333,65 @@ class AsyncFedEDServer(AsyncServer):
         self.params = res.params
         return res.gamma, res.eta, res.dist, res.delta_norm, res.params
 
+    def _wire_padded(self, cd):
+        """A compressed payload's (q, scales) padded to the server's flat
+        length. Clients pad to the kernel BLOCK; a sharded server pads to
+        BLOCK * shards, which can be longer — appended zero q blocks
+        carry zero scales and dequantize to exactly 0, so the extra
+        padding stays value-transparent."""
+        n_pad = self._flat.spec.n_padded
+        if cd.q.shape[0] == n_pad:
+            return cd.q, cd.scales
+        q = jnp.pad(cd.q, (0, n_pad - cd.q.shape[0]))
+        scales = cd.scales
+        if scales is not None:
+            scales = jnp.pad(
+                scales, (0, n_pad // ops.fedagg.QBLOCK - scales.shape[0]))
+        return q, scales
+
     def _aggregate_flat(self, upd: ClientUpdate):
         fed = self.fed
         cd = upd.delta if compression.is_compressed(upd.delta) else None
         if cd is not None and cd.mode == "int8":
             # quant-fused path: q/scales go straight into the kernels,
             # dequantized one VMEM tile at a time (DESIGN.md §13)
+            q, qscales = self._wire_padded(cd)
             if self.gmis_mode == "displacement":
                 new_vec, gamma, eta, dist, dnorm = (
-                    ops.flat_aggregate_displacement_q(
+                    self._agg["flat_aggregate_displacement_q"](
                         self._flat.vec,
-                        self.gmis.displacement(upd.client_id), cd.q,
-                        cd.scales, self._zeros, lam=fed.lam, eps=fed.eps,
+                        self.gmis.displacement(upd.client_id), q,
+                        qscales, self._zeros, lam=fed.lam, eps=fed.eps,
                         cap=fed.staleness_cap, interpret=self._interpret))
                 self.gmis.release(upd.client_id)
             else:
                 stale, _ = self.gmis.get(upd.snapshot_iter)
-                new_vec, gamma, eta, dist, dnorm = ops.flat_aggregate_q(
-                    self._flat.vec, stale, cd.q, cd.scales, lam=fed.lam,
-                    eps=fed.eps, cap=fed.staleness_cap,
-                    interpret=self._interpret)
+                new_vec, gamma, eta, dist, dnorm = (
+                    self._agg["flat_aggregate_q"](
+                        self._flat.vec, stale, q, qscales, lam=fed.lam,
+                        eps=fed.eps, cap=fed.staleness_cap,
+                        interpret=self._interpret))
             self._flat = self._flat.replace(new_vec)
             # ring-GMIS on_aggregate is a no-op, so the f32 delta is only
             # materialized when displacement accumulators need it
-            d = (compression.dequantize(cd)
+            d = (compression.dequantize(
+                    dataclasses.replace(cd, q=q, scales=qscales))
                  if self.gmis_mode == "displacement" else cd)
             return gamma, eta, dist, dnorm, d
         # bf16 payloads ride the f32 kernels unchanged (tiles upcast on
         # load, f32 accumulation), so only the operand swaps
-        d = cd.q if cd is not None else self._flat.spec.flatten(upd.delta)
+        d = (self._wire_padded(cd)[0] if cd is not None
+             else self._flat.spec.flatten(upd.delta))
         if self.gmis_mode == "displacement":
-            new_vec, gamma, eta, dist, dnorm = ops.flat_aggregate_displacement(
-                self._flat.vec, self.gmis.displacement(upd.client_id), d,
-                self._zeros, lam=fed.lam, eps=fed.eps,
-                cap=fed.staleness_cap, interpret=self._interpret)
+            new_vec, gamma, eta, dist, dnorm = (
+                self._agg["flat_aggregate_displacement"](
+                    self._flat.vec, self.gmis.displacement(upd.client_id),
+                    d, self._zeros, lam=fed.lam, eps=fed.eps,
+                    cap=fed.staleness_cap, interpret=self._interpret))
             self.gmis.release(upd.client_id)
         else:
             stale, _ = self.gmis.get(upd.snapshot_iter)
-            new_vec, gamma, eta, dist, dnorm = ops.flat_aggregate(
+            new_vec, gamma, eta, dist, dnorm = self._agg["flat_aggregate"](
                 self._flat.vec, stale, d, lam=fed.lam, eps=fed.eps,
                 cap=fed.staleness_cap, interpret=self._interpret)
         self._flat = self._flat.replace(new_vec)
@@ -345,7 +454,11 @@ class AsyncFedEDServer(AsyncServer):
         modes = {u.delta.mode if compression.is_compressed(u.delta)
                  else "off" for u in upds}
         if (self.backend != "pallas" or self.gmis_mode != "ring"
-                or len(upds) == 1 or len(modes) > 1):
+                or len(upds) == 1 or len(modes) > 1
+                or getattr(self.screen, "needs_vector", False)):
+            # direction screens (cosine) consume the delta VECTOR, which
+            # the batched Gram sweep never materializes per-update — they
+            # drain sequentially through on_update's vector-aware path
             replies = [self.on_update(u) for u in upds]
             if len(replies) > 1:
                 # Every drained client resumes from the window's FINAL
@@ -373,20 +486,22 @@ class AsyncFedEDServer(AsyncServer):
                      lambda dns: self.screen.decide_batch(
                          dns, [u.client_id for u in upds]))
         if mode == "int8":
-            qs = jnp.stack([u.delta.q for u in upds])
-            qscales = jnp.stack([u.delta.scales for u in upds])
+            wires = [self._wire_padded(u.delta) for u in upds]
+            qs = jnp.stack([q for q, _ in wires])
+            qscales = jnp.stack([s for _, s in wires])
             new_vec, etas, gammas, dists, dnorms, scales = (
-                ops.flat_aggregate_batched_q(
+                self._agg["flat_aggregate_batched_q"](
                     self._flat.vec, stales, qs, qscales, lam=fed.lam,
                     eps=fed.eps, cap=fed.staleness_cap,
                     interpret=self._interpret, screen=screen_fn))
         else:
             # "off" flattens pytrees; "bf16" stacks the bf16 payloads
             # straight through the f32 kernels (tiles upcast on load)
-            deltas = jnp.stack([u.delta.q if mode == "bf16"
+            deltas = jnp.stack([self._wire_padded(u.delta)[0]
+                                if mode == "bf16"
                                 else spec.flatten(u.delta) for u in upds])
             new_vec, etas, gammas, dists, dnorms, scales = (
-                ops.flat_aggregate_batched(
+                self._agg["flat_aggregate_batched"](
                     self._flat.vec, stales, deltas, lam=fed.lam,
                     eps=fed.eps, cap=fed.staleness_cap,
                     interpret=self._interpret, screen=screen_fn))

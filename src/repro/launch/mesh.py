@@ -54,6 +54,37 @@ def make_cohort_mesh(n_pods: int):
                          devices=jax.devices()[:n_pods])
 
 
+def model_shard_count(max_shards: Optional[int] = None) -> int:
+    """Usable ``model``-axis size on THIS process: largest power of two
+    <= the device count (and <= ``max_shards`` when given). Power of two
+    so the padded flat vector — whose length is a multiple of
+    ``kernel BLOCK * shards`` by construction (the server pads with
+    ``block = _BLOCK * shards``) — splits into whole kernel blocks per
+    shard. Mirrors :func:`pod_count` for the model axis."""
+    n = len(jax.devices())
+    if max_shards is not None:
+        n = min(n, max_shards)
+    return max(1, 1 << (n.bit_length() - 1))
+
+
+def make_fedagg_mesh(n_shards: int, n_pods: int = 1):
+    """2-D ``(pod, model)`` mesh (DESIGN.md §14) over the first
+    ``n_pods * n_shards`` devices. The ``model`` axis shards the padded
+    flat global vector and all GMIS snapshots; the ``pod`` axis is the
+    federated client axis. The server's aggregation step only uses
+    ``model`` (one ``psum`` of squared-norm partials per Eq. 6 distance);
+    cohort training only uses ``pod`` — the two never contract jointly,
+    which is why a degenerate pod axis (``n_pods=1``) is the common
+    aggregation-side shape."""
+    n = n_pods * n_shards
+    if n > len(jax.devices()):
+        raise ValueError(
+            f"mesh ({n_pods} pods x {n_shards} model shards) needs {n} "
+            f"devices, have {len(jax.devices())}")
+    return jax.make_mesh((n_pods, n_shards), ("pod", "model"),
+                         devices=jax.devices()[:n])
+
+
 # Hardware constants for the roofline model (TPU v5e)
 PEAK_FLOPS_BF16 = 197e12          # per chip, bf16
 HBM_BW = 819e9                    # bytes/s per chip

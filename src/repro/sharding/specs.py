@@ -192,3 +192,38 @@ def cohort_spec_tree(stacked: PyTree) -> PyTree:
     the sharded core produces in tests/test_cohort_sharded.py."""
     return jax.tree.map(lambda leaf: cohort_stacked_spec(np.ndim(leaf)),
                         stacked)
+
+
+# ---------------------------------------------------------------------------
+# Model-sharded flat state: the padded flat vector over `model` (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+#: The padded flat global vector ``(n_padded,)`` — and every flat GMIS
+#: snapshot, displacement accumulator, and delta — partitions its single
+#: axis over `model`. The server pads with ``block = kernel BLOCK *
+#: shards``, so each shard is a whole number of kernel blocks and the
+#: fedagg grid runs unchanged per shard.
+FLAT_VEC_SPEC = PartitionSpec("model")
+
+#: Stacked flat vectors ``(B, n_padded)`` (the batched Gram sweep's stale
+#: snapshots / delta rows): batch axis replicated, vector axis over
+#: `model`. Every pod sees all B rows of its own vector shard — the Gram
+#: sweep's ``(B, B)`` cross terms are per-shard partials psum'd once.
+FLAT_STACKED_SPEC = PartitionSpec(None, "model")
+
+#: int8 wire-format scale vectors ``(n_padded // QBLOCK,)`` shard with
+#: their q blocks: QBLOCK (1024) divides the kernel BLOCK, which divides
+#: the per-shard length, so a contiguous `model` split of the scales
+#: lands each scale on the same shard as the q elements it dequantizes.
+FLAT_SCALES_SPEC = PartitionSpec("model")
+
+#: Stacked scale rows ``(B, n_padded // QBLOCK)`` for the batched `_q`
+#: sweep — same alignment argument, batch axis replicated.
+FLAT_STACKED_SCALES_SPEC = PartitionSpec(None, "model")
+
+
+def flat_sharding(mesh: Mesh, stacked: bool = False) -> NamedSharding:
+    """NamedSharding placing a (stacked) padded flat vector on a
+    ``(pod, model)`` mesh (`launch.mesh.make_fedagg_mesh`)."""
+    return NamedSharding(mesh,
+                         FLAT_STACKED_SPEC if stacked else FLAT_VEC_SPEC)

@@ -184,7 +184,172 @@ class TestNormScreen:
         assert make_screen(FED) is None
         on = dataclasses.replace(FED, screen="reject")
         assert make_screen(on).policy == "reject"
-        assert set(SCREEN_POLICIES) == {"off", "clip", "reject"}
+        assert set(SCREEN_POLICIES) == {"off", "clip", "reject", "cosine"}
+
+
+class TestCosineScreen:
+    """Direction screening (DESIGN.md §14): the per-client unit-EWMA
+    cosine screen catches strength-1 sign-flips that norm screening is
+    provably blind to, under the mid-run-compromise (onset) threat
+    model."""
+
+    @staticmethod
+    def _stream(n=12, flip_at=6, dim=256, seed=0):
+        """Honest arrivals share a persistent direction ``d`` plus small
+        isotropic noise (cos vs d ~ 0.93); from ``flip_at`` on, the
+        emission is mirrored — SAME norm, opposite direction."""
+        rng = np.random.default_rng(seed)
+        d = rng.normal(size=dim).astype(np.float32)
+        d /= np.linalg.norm(d)
+        out = []
+        for i in range(n):
+            g = rng.normal(size=dim).astype(np.float32)
+            v = d + 0.4 * g / np.linalg.norm(g)
+            out.append(-v if i >= flip_at else v)
+        return out
+
+    def test_constructor_validates_knobs(self):
+        from repro.core.screening import CosineScreen
+        for kw in ({"alpha": 0.0}, {"alpha": 1.5}, {"warmup": 0},
+                   {"cos_min": -2.0}, {"cos_min": 1.5}):
+            with pytest.raises(ValueError):
+                CosineScreen(**kw)
+        s = CosineScreen(alpha=0.2, warmup=3, cos_min=-0.2)
+        assert s.policy == "cosine" and s.needs_vector
+
+    def test_observe_requires_the_vector(self):
+        from repro.core.screening import CosineScreen
+        with pytest.raises(ValueError, match="vec"):
+            CosineScreen().observe(1.0, 0)
+
+    def test_norm_blind_cosine_visible(self):
+        """The decisive scenario: every mirrored arrival sails through
+        the norm screen (identical norms) and every one is rejected by
+        the cosine screen."""
+        from repro.core.screening import CosineScreen
+        norm_s = NormScreen("reject", k=3.0, warmup=3)
+        cos_s = CosineScreen(warmup=3)
+        for i, v in enumerate(self._stream()):
+            n = float(np.linalg.norm(v))
+            vn, _ = norm_s.observe(n, 0)
+            vc, _ = cos_s.observe(n, 0, vec=v)
+            if i >= 6:
+                assert vn == "accept"     # norm statistic cannot see it
+                assert vc == "reject"
+        assert cos_s.counts["reject"] == 6
+        assert norm_s.counts["reject"] == 0
+
+    def test_rejections_freeze_the_baseline(self):
+        """Accepted-only EWMA updates: a compromised client's mirrored
+        stream never normalizes into its own reference, so the lockout
+        is permanent rather than decaying."""
+        from repro.core.screening import CosineScreen
+        s = CosineScreen(warmup=2, alpha=0.5)
+        stream = self._stream(n=20, flip_at=4)
+        for v in stream[:4]:
+            assert s.observe(1.0, 0, vec=v)[0] == "accept"
+        base = s._dir[0].copy()
+        for v in stream[4:]:
+            assert s.observe(1.0, 0, vec=v)[0] == "reject"
+        np.testing.assert_array_equal(s._dir[0], base)
+
+    def test_zero_norm_passes_and_baselines_are_per_client(self):
+        from repro.core.screening import CosineScreen
+        s = CosineScreen(warmup=1)
+        v = np.ones(8, np.float32)
+        s.observe(1.0, "a", vec=v)
+        s.observe(1.0, "a", vec=v)
+        # zero vector has no direction: NormScreen's jurisdiction
+        assert s.observe(0.0, "a", vec=np.zeros(8))[0] == "accept"
+        # client b has no history: its mirrored vector is first contact
+        assert s.observe(1.0, "b", vec=-v)[0] == "accept"
+        # client a past warmup: the mirror is caught
+        assert s.observe(1.0, "a", vec=-v)[0] == "reject"
+        assert s.stats()["clients"] == 2
+
+    def test_cosine_aligns_on_shorter_padded_length(self):
+        """Pallas flat vectors arrive padded to the block multiple; the
+        padding is zeros so truncating to the shorter length is exact."""
+        from repro.core.screening import CosineScreen
+        s = CosineScreen(warmup=1)
+        v = np.ones(8, np.float32)
+        padded = np.zeros(16, np.float32)
+        padded[:8] = 1.0
+        s.observe(1.0, 0, vec=v)
+        s.observe(1.0, 0, vec=v)
+        assert s.observe(1.0, 0, vec=padded)[0] == "accept"
+        assert s.observe(1.0, 0, vec=-padded)[0] == "reject"
+
+    def test_make_screen_dispatches_cosine(self):
+        fed = dataclasses.replace(FED, screen="cosine", screen_alpha=0.3,
+                                  screen_warmup=4)
+        s = make_screen(fed)
+        assert s.policy == "cosine"
+        assert s.alpha == pytest.approx(0.3) and s.warmup == 4
+
+
+class TestOnset:
+    """``attack_params={"onset": n}``: a corrupted client's first ``n``
+    emissions stay honest — mid-run compromise, the scenario the cosine
+    screen exists for."""
+
+    def test_first_onset_emissions_stay_honest(self):
+        fed = dataclasses.replace(
+            FED, attack="sign-flip", attack_frac=0.2,
+            attack_params=(("strength", 1.0), ("onset", 2)))
+        adv = make_adversary(fed, seed=3)
+        cid = next(iter(adv.corrupt_ids))
+        for _ in range(2):
+            u = upd(cid)
+            assert adv.corrupt(u) is u
+        assert adv.applied == 0
+        u = upd(cid)
+        out = adv.corrupt(u)
+        assert adv.applied == 1
+        leaves_allclose(out.delta, pt.tree_scale(u.delta, -1.0), rtol=1e-6)
+        # the counter is per client: another corrupt client starts honest
+        others = [c for c in adv.corrupt_ids if c != cid]
+        if others:
+            v = upd(others[0])
+            assert adv.corrupt(v) is v
+
+    def test_closed_loop_onset_flip_is_caught_by_cosine_only(self):
+        """End-to-end: 30% of clients flip after 4 honest emissions.
+        The cosine screen rejects (and only rejects corrupt clients);
+        the norm screen — same scenario, same seed — rejects nothing,
+        because a strength-1 flip preserves norms."""
+        t = configs.SYNTHETIC_1_1
+        base = dict(attack="sign-flip", attack_frac=0.3,
+                    attack_params=(("strength", 1.0), ("onset", 4)),
+                    screen_warmup=3)
+        fed_cos = dataclasses.replace(t.fed, screen="cosine", **base)
+        sim = FederatedSimulation(t, fed_cos, "asyncfeded", seed=7)
+        corrupt = sim.adversary.corrupt_ids
+        rejects_by = {}
+        orig = sim.server.screen.observe
+
+        def spy(norm, client_id=None, *, vec=None):
+            v, s = orig(norm, client_id, vec=vec)
+            if v == "reject":
+                rejects_by[client_id] = rejects_by.get(client_id, 0) + 1
+            return v, s
+
+        sim.server.screen.observe = spy
+        r = sim.run(max_time=4.0)
+        sc = r.summary()["screen"]
+        assert sc["reject"] > 0
+        assert set(rejects_by) <= corrupt, \
+            f"honest client rejected: {rejects_by} vs {sorted(corrupt)}"
+        # norm screen is blind to the identical scenario
+        fed_norm = dataclasses.replace(t.fed, screen="reject", **base)
+        rn = FederatedSimulation(t, fed_norm, "asyncfeded",
+                                 seed=7).run(max_time=4.0)
+        assert rn.summary()["screen"]["reject"] == 0
+        # and an honest run under the cosine screen rejects nothing
+        fed_h = dataclasses.replace(t.fed, screen="cosine", screen_warmup=3)
+        rh = FederatedSimulation(t, fed_h, "asyncfeded",
+                                 seed=7).run(max_time=4.0)
+        assert rh.summary()["screen"]["reject"] == 0
 
 
 class ScreenedServerMixin:

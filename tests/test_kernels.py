@@ -191,6 +191,180 @@ class TestFedAggBatched:
             np.testing.assert_allclose(l1, l2, rtol=1e-4, atol=1e-6)
 
 
+class TestFedAggSharded:
+    """Model-sharded twins (kernels/fedagg/sharded.py) vs the replicated
+    ops, at shard counts that do NOT divide the true size (the remainder
+    lives in zero padding) and non-pow2 padded block counts, including
+    the int8 ``_q`` entry points and bf16 payloads (which ride the
+    uncompressed kernels — f32 tiles upcast on load). shards=1 is a
+    valid 1-device mesh and runs everywhere; shards>1 takes the
+    ``multidevice`` fixture (tier1-multidevice CI, or the re-exec in
+    test_flat_sharded.py)."""
+
+    def _padded(self, n_true, shards, seed=0):
+        """(x_t, x_stale, delta) padded to BLOCK*shards — the server's
+        layout for a true size the shard count does not divide."""
+        from repro.kernels.fedagg import ops
+        k = jax.random.PRNGKey(seed)
+        block = BLOCK * shards
+        n_pad = -(-n_true // block) * block
+        xt = np.zeros(n_pad, np.float32)
+        xt[:n_true] = np.asarray(
+            jax.random.normal(k, (n_true,), jnp.float32))
+        xs, d = xt.copy(), np.zeros(n_pad, np.float32)
+        xs[:n_true] += 0.03
+        d[:n_true] = np.asarray(jax.random.normal(
+            jax.random.PRNGKey(seed + 1), (n_true,), jnp.float32)) * 0.02
+        assert n_pad % BLOCK == 0 and ops is not None
+        return jnp.asarray(xt), jnp.asarray(xs), jnp.asarray(d)
+
+    def _assert_single(self, got, want):
+        gv, *gs = got
+        wv, *ws = want
+        np.testing.assert_allclose(np.asarray(jax.device_get(gv)),
+                                   np.asarray(jax.device_get(wv)),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose([float(x) for x in gs],
+                                   [float(x) for x in ws],
+                                   rtol=1e-4, atol=1e-6)
+
+    def test_shards1_mesh_is_identity_layout(self):
+        """A 1-shard mesh is valid on any device count and must match the
+        replicated entry point — the cheap always-on guard."""
+        from repro.kernels.fedagg import ops, sharded
+        xt, xs, d = self._padded(BLOCK + 129, 1)
+        got = sharded.flat_aggregate(xt, xs, d, lam=2.0, eps=1.0, shards=1)
+        want = ops.flat_aggregate(xt, xs, d, lam=2.0, eps=1.0)
+        self._assert_single(got, want)
+
+    @pytest.mark.parametrize("shards", [2, 8])
+    @pytest.mark.parametrize("n_true", [BLOCK + 517, 3 * BLOCK - 1])
+    def test_flat_aggregate_nondividing(self, multidevice, shards, n_true):
+        """True sizes with a non-dividing remainder: the padded tail is
+        value-transparent on every shard, incl. a shard that is almost
+        entirely padding (n_true = BLOCK+517 at shards=8)."""
+        from repro.kernels.fedagg import ops, sharded
+        xt, xs, d = self._padded(n_true, shards, seed=shards)
+        got = sharded.flat_aggregate(xt, xs, d, lam=2.0, eps=1.0,
+                                     shards=shards)
+        want = ops.flat_aggregate(xt, xs, d, lam=2.0, eps=1.0)
+        self._assert_single(got, want)
+
+    def test_nonpow2_blocks_per_shard(self, multidevice):
+        """Padded length = 6 kernel blocks over 2 shards: 3 (non-pow2)
+        blocks per shard — the grid sweep must not assume pow2 tiling."""
+        from repro.kernels.fedagg import ops, sharded
+        xt, xs, d = self._padded(6 * BLOCK - 777, 2, seed=5)
+        assert xt.shape[0] == 6 * BLOCK
+        got = sharded.flat_aggregate(xt, xs, d, lam=1.5, eps=0.5,
+                                     shards=2)
+        want = ops.flat_aggregate(xt, xs, d, lam=1.5, eps=0.5)
+        self._assert_single(got, want)
+
+    def test_displacement_nondividing(self, multidevice):
+        from repro.kernels.fedagg import ops, sharded
+        xt, disp, d = self._padded(2 * BLOCK + 33, 2, seed=9)
+        z = jnp.zeros_like(xt)
+        got = sharded.flat_aggregate_displacement(
+            xt, disp, d, z, lam=2.0, eps=1.0, shards=2)
+        want = ops.flat_aggregate_displacement(xt, disp, d, z,
+                                               lam=2.0, eps=1.0)
+        self._assert_single(got, want)
+
+    @pytest.mark.parametrize("shards", [2, 4])
+    def test_q_int8_nondividing(self, multidevice, shards):
+        """int8 `_q` twins: scales stay adjacent to the q blocks they
+        dequantize under the contiguous model split."""
+        from repro.core import compression
+        from repro.kernels.fedagg import ops, sharded
+        xt, xs, d = self._padded(2 * BLOCK * shards - 917, shards, seed=3)
+        cd = compression.quantize_vec(d, "int8", int(d.shape[0]))
+        got = sharded.flat_aggregate_q(xt, xs, cd.q, cd.scales,
+                                       lam=2.0, eps=1.0, shards=shards)
+        want = ops.flat_aggregate_q(xt, xs, cd.q, cd.scales,
+                                    lam=2.0, eps=1.0)
+        self._assert_single(got, want)
+
+    def test_displacement_q_int8(self, multidevice):
+        from repro.core import compression
+        from repro.kernels.fedagg import ops, sharded
+        xt, disp, d = self._padded(2 * BLOCK + 1001, 2, seed=13)
+        z = jnp.zeros_like(xt)
+        cd = compression.quantize_vec(d, "int8", int(d.shape[0]))
+        got = sharded.flat_aggregate_displacement_q(
+            xt, disp, cd.q, cd.scales, z, lam=1.0, eps=1.0, shards=2)
+        want = ops.flat_aggregate_displacement_q(
+            xt, disp, cd.q, cd.scales, z, lam=1.0, eps=1.0)
+        self._assert_single(got, want)
+
+    def test_batched_nondividing(self, multidevice):
+        """Batched Gram sweep at a non-dividing remainder: one psum of
+        the (B,)/(B,B) partials reproduces the replicated schedule."""
+        from repro.kernels.fedagg import ops, sharded
+        b, shards = 3, 2
+        xt, _, _ = self._padded(2 * BLOCK + 71, shards, seed=17)
+        n = xt.shape[0]
+        xs = xt[None] + 0.01 * jax.random.normal(
+            jax.random.PRNGKey(18), (b, n), jnp.float32)
+        d = jax.random.normal(jax.random.PRNGKey(19), (b, n),
+                              jnp.float32) * 0.02
+        new, etas, gammas, dists, dnorms, _ = sharded.flat_aggregate_batched(
+            xt, xs, d, lam=2.0, eps=1.0, shards=shards)
+        rnew, retas, rgammas, rdists, rdnorms, _ = ops.flat_aggregate_batched(
+            xt, xs, d, lam=2.0, eps=1.0)
+        np.testing.assert_allclose(etas, retas, rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(gammas, rgammas, rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(jax.device_get(new)),
+                                   np.asarray(jax.device_get(rnew)),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_batched_bf16_payload(self, multidevice):
+        """bf16 wire payloads ride the UNCOMPRESSED batched kernels (f32
+        upcast on tile load) — sharded must agree with replicated on the
+        exact same bf16 stacks."""
+        from repro.kernels.fedagg import ops, sharded
+        b, shards = 2, 2
+        xt, _, _ = self._padded(2 * BLOCK + 5, shards, seed=23)
+        n = xt.shape[0]
+        xs = (xt[None] + 0.01 * jax.random.normal(
+            jax.random.PRNGKey(24), (b, n))).astype(jnp.bfloat16)
+        d = (jax.random.normal(jax.random.PRNGKey(25), (b, n))
+             * 0.02).astype(jnp.bfloat16)
+        new, etas, gammas, *_ = sharded.flat_aggregate_batched(
+            xt, xs, d, lam=2.0, eps=1.0, shards=shards)
+        rnew, retas, rgammas, *_ = ops.flat_aggregate_batched(
+            xt, xs, d, lam=2.0, eps=1.0)
+        np.testing.assert_allclose(etas, retas, rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(gammas, rgammas, rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(jax.device_get(new)),
+                                   np.asarray(jax.device_get(rnew)),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_batched_q_int8(self, multidevice):
+        from repro.core import compression
+        from repro.kernels.fedagg import ops, sharded
+        b, shards = 3, 2
+        xt, _, _ = self._padded(2 * BLOCK + 600, shards, seed=29)
+        n = xt.shape[0]
+        xs = xt[None] + 0.01 * jax.random.normal(
+            jax.random.PRNGKey(30), (b, n), jnp.float32)
+        rows = [compression.quantize_vec(
+            jax.random.normal(jax.random.PRNGKey(31 + i), (n,),
+                              jnp.float32) * 0.02, "int8", n)
+            for i in range(b)]
+        qs = jnp.stack([r.q for r in rows])
+        scales = jnp.stack([r.scales for r in rows])
+        new, etas, gammas, *_ = sharded.flat_aggregate_batched_q(
+            xt, xs, qs, scales, lam=2.0, eps=1.0, shards=shards)
+        rnew, retas, rgammas, *_ = ops.flat_aggregate_batched_q(
+            xt, xs, qs, scales, lam=2.0, eps=1.0)
+        np.testing.assert_allclose(etas, retas, rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(gammas, rgammas, rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(jax.device_get(new)),
+                                   np.asarray(jax.device_get(rnew)),
+                                   rtol=1e-4, atol=1e-5)
+
+
 class TestSSD:
     @pytest.mark.parametrize("shape", [(2, 128, 8, 16, 64),
                                        (1, 256, 16, 32, 128),
